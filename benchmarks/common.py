@@ -1,0 +1,82 @@
+"""Shared benchmark helpers: table generation (weak/strong locality), timing,
+CSV emission. Mirrors the paper's §5.1 setup, scaled for a CPU container:
+keys 64-bit, R tables × N keys each, uniform random query keys."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as CK
+from repro.core.remix import build_remix
+from repro.core.runs import make_run
+
+
+def make_tables(
+    r: int,
+    n_per_table: int = 65536,
+    locality: str = "weak",
+    chunk: int = 64,
+    seed: int = 0,
+    vw: int = 2,
+):
+    """R tables as in §5.1: each key assigned to a random table (weak) or in
+    64-key consecutive chunks (strong). Returns list[Run] (keys disjoint)."""
+    rng = np.random.default_rng(seed)
+    total = r * n_per_table
+    keys = np.arange(1, total + 1, dtype=np.uint64) * 64  # spaced key domain
+    if locality == "weak":
+        owner = rng.integers(0, r, total)
+    else:
+        n_chunks = (total + chunk - 1) // chunk
+        chunk_owner = rng.integers(0, r, n_chunks)
+        owner = np.repeat(chunk_owner, chunk)[:total]
+    runs = []
+    for i in range(r):
+        kk = keys[owner == i]
+        runs.append(make_run(kk, seq=i, vw=vw))
+    return runs, keys
+
+
+def time_batched(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call of a jitted batched op (seconds)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def qkeys(rng, keyspace_max: int, q: int):
+    return jnp.asarray(
+        CK.pack_u64(rng.integers(1, keyspace_max, q).astype(np.uint64))
+    )
+
+
+class CSV:
+    def __init__(self):
+        self.rows = []
+
+    def emit(self, name: str, us_per_call: float, derived: str = ""):
+        line = f"{name},{us_per_call:.3f},{derived}"
+        self.rows.append(line)
+        print(line, flush=True)
+
+
+def zipf_keys(rng, n_keys: int, q: int, theta: float = 0.99) -> np.ndarray:
+    """YCSB-style zipfian item sampler over [0, n_keys)."""
+    # rejection-free approximate zipfian via inverse-CDF on a harmonic grid
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    w = 1.0 / ranks ** theta
+    cdf = np.cumsum(w)
+    cdf /= cdf[-1]
+    u = rng.random(q)
+    return np.searchsorted(cdf, u).astype(np.int64)

@@ -1,0 +1,73 @@
+"""Fig 11 (weak locality) + Fig 12 (strong locality): Seek, Seek+Next50 and
+Get throughput vs number of tables, REMIX vs merging iterator vs bloom.
+
+Reported as µs/op at batch Q (single CPU device; the relative trends vs R
+are the paper's claims — REMIX's advantage grows with table count)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import CSV, make_tables, qkeys, time_batched
+from repro.core import merge_iter as M
+from repro.core import query as Q
+from repro.core.bloom import bloom_maybe_contains, build_bloom
+from repro.core.remix import build_remix
+
+RS = (1, 2, 4, 8, 16)
+QBATCH = 2048
+N_PER_TABLE = 16384
+
+
+def run(csv: CSV, locality: str = "weak", rs=RS, d: int = 32):
+    rng = np.random.default_rng(42)
+    fig = "fig11" if locality == "weak" else "fig12"
+    for r in rs:
+        runs, keys = make_tables(r, N_PER_TABLE, locality=locality)
+        remix, runset = build_remix(runs, d=d)
+        qk = qkeys(rng, int(keys[-1]), QBATCH)
+
+        t = time_batched(lambda q: Q.seek(remix, runset, q, ingroup="binary"), qk)
+        csv.emit(f"{fig}a_seek_remix_full,R={r}", t / QBATCH * 1e6, f"{QBATCH/t:.0f} ops/s")
+        t = time_batched(lambda q: Q.seek(remix, runset, q, ingroup="vector"), qk)
+        csv.emit(f"{fig}a_seek_remix_vector,R={r}", t / QBATCH * 1e6, f"{QBATCH/t:.0f} ops/s")
+        t_m = time_batched(lambda q: M.seek_cursors(runset, q), qk)
+        csv.emit(f"{fig}a_seek_merging,R={r}", t_m / QBATCH * 1e6, f"{QBATCH/t_m:.0f} ops/s")
+
+        qk2 = qk[:256]
+        t = time_batched(lambda q: Q.scan(remix, runset, q, width=64), qk2)
+        csv.emit(f"{fig}b_next50_remix,R={r}", t / 256 * 1e6, "")
+        t_m = time_batched(lambda q: M.merge_scan(runset, q, width=64), qk2)
+        csv.emit(f"{fig}b_next50_merging,R={r}", t_m / 256 * 1e6, "")
+
+        # point queries: REMIX get (no bloom) vs bloom-prefiltered per-run get
+        hit_q = jnp.asarray(
+            np.stack(
+                [np.zeros(QBATCH, np.uint32),
+                 (rng.choice(keys, QBATCH) & 0xFFFFFFFF).astype(np.uint32)],
+                axis=1,
+            )
+        )
+        t = time_batched(lambda q: Q.get(remix, runset, q), hit_q)
+        csv.emit(f"{fig}c_get_remix,R={r}", t / QBATCH * 1e6, "")
+        bloom = build_bloom([np.asarray(run.keys) for run in runs])
+
+        def bloom_get(q):
+            maybe = bloom_maybe_contains(bloom, q)
+            found, vals = M.merge_get(runset, q)
+            return found & jnp.any(maybe, 1), vals
+
+        t = time_batched(bloom_get, hit_q)
+        csv.emit(f"{fig}c_get_sstable_bloom,R={r}", t / QBATCH * 1e6, "")
+        t = time_batched(lambda q: M.merge_get(runset, q), hit_q)
+        csv.emit(f"{fig}c_get_sstable_nobloom,R={r}", t / QBATCH * 1e6, "")
+
+    # derived claims (weak locality): speedup at R=8 and R=16
+    csv.emit(f"{fig}_analytic_cmp_merge,R=8",
+             M.seek_comparison_cost(8, N_PER_TABLE),
+             "comparisons/seek merging iterator")
+    import math
+    csv.emit(f"{fig}_analytic_cmp_remix,R=8",
+             math.log2(8 * N_PER_TABLE / d) + math.log2(d),
+             "comparisons/seek REMIX (anchor bsearch + in-group)")

@@ -1,0 +1,30 @@
+"""Fig 13: REMIX range-query performance vs group size D (8 tables)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CSV, make_tables, qkeys, time_batched
+from repro.core import query as Q
+from repro.core.remix import build_remix
+
+QBATCH = 2048
+
+
+def run(csv: CSV):
+    rng = np.random.default_rng(7)
+    runs, keys = make_tables(8, 16384, locality="weak")
+    for d in (16, 32, 64):
+        remix, runset = build_remix(runs, d=d)
+        qk = qkeys(rng, int(keys[-1]), QBATCH)
+        for mode, label in (("binary", "full"), ("vector", "partial_vec")):
+            t = time_batched(
+                lambda q: Q.seek(remix, runset, q, ingroup=mode), qk
+            )
+            csv.emit(f"fig13_seek_{label},D={d}", t / QBATCH * 1e6, "")
+        t = time_batched(lambda q: Q.scan(remix, runset, q, width=64), qk[:256])
+        csv.emit(f"fig13_next50,D={d}", t / 256 * 1e6, "")
+        csv.emit(
+            f"fig13_index_bytes_per_key,D={d}",
+            remix.storage_bytes() / max(1, int(remix.n_entries)),
+            "bytes/key",
+        )

@@ -1,0 +1,92 @@
+"""Fig 14–16: store-level benchmarks, scaled for the CPU container.
+
+fig14: range query (seek+scan) throughput for RemixDB vs leveled vs tiered
+       with different value sizes and access patterns.
+fig15: range-scan throughput vs scan length (zipfian).
+fig16: random-write throughput + write amplification.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import CSV, zipf_keys
+from repro.db.baseline import BaselineConfig, LeveledStore, TieredStore
+from repro.db.compaction import CompactionConfig
+from repro.db.store import RemixDB, RemixDBConfig
+
+N_KEYS = 120_000
+MEM = 8192
+CAP = 8192
+
+
+def _build_stores(tmpdir: str, vw: int):
+    db = RemixDB(
+        RemixDBConfig(
+            vw=vw, memtable_entries=MEM, wal_dir=tmpdir,
+            compaction=CompactionConfig(table_cap=CAP, t_max=10),
+        )
+    )
+    bcfg = BaselineConfig(vw=vw, memtable_entries=MEM, table_cap=CAP)
+    return {"remixdb": db, "leveled": LeveledStore(bcfg), "tiered": TieredStore(bcfg)}
+
+
+def _load(stores, keys, vw, csv=None, label=""):
+    vals = np.zeros((len(keys), vw), np.uint32)
+    vals[:, 0] = (keys & 0xFFFFFFFF).astype(np.uint32)
+    for name, s in stores.items():
+        t0 = time.perf_counter()
+        for c in range(0, len(keys), MEM):
+            s.put_batch(keys[c : c + MEM], vals[c : c + MEM])
+        s.flush()
+        dt = time.perf_counter() - t0
+        if csv is not None:
+            csv.emit(f"fig16_write_{label}_{name}", dt / len(keys) * 1e6,
+                     f"WA={s.write_amplification():.2f}" if name != "remixdb"
+                     else f"WA={s.table_bytes_written / max(1, s.user_bytes):.2f}")
+    return stores
+
+
+def _seek_throughput(stores, probes, scan_n, csv, tag):
+    probes = np.asarray(probes, np.uint64)
+    for name, s in stores.items():
+        s.scan_batch(probes, scan_n)  # warmup at measurement shape
+        t0 = time.perf_counter()
+        s.scan_batch(probes, scan_n)
+        dt = time.perf_counter() - t0
+        csv.emit(f"{tag}_{name}", dt / len(probes) * 1e6, f"scan{scan_n}")
+
+
+def run(csv: CSV):
+    import tempfile
+
+    rng = np.random.default_rng(11)
+    # ---- fig14: value sizes × access patterns (seek-only ≈ scan 1) ----
+    for vw, vname in ((2, "40B"), (8, "120B"), (25, "400B")):
+        keys = rng.permutation(N_KEYS).astype(np.uint64) * 8
+        stores = _build_stores(tempfile.mkdtemp(), vw)
+        _load(stores, keys, vw)
+        skeys = np.sort(keys)
+        probes_seq = skeys[1000:1512]
+        probes_uni = rng.choice(skeys, 512)
+        probes_zipf = skeys[zipf_keys(rng, len(skeys), 512)]
+        _seek_throughput(stores, probes_seq, 1, csv, f"fig14_seek_{vname}_seq")
+        _seek_throughput(stores, probes_zipf, 1, csv, f"fig14_seek_{vname}_zipf")
+        _seek_throughput(stores, probes_uni, 1, csv, f"fig14_seek_{vname}_uni")
+        if vw == 8:
+            # ---- fig15: scan lengths on the 120B store ----
+            for scan_n in (10, 50, 200):
+                _seek_throughput(
+                    stores, probes_zipf[:256], scan_n, csv, f"fig15_scan{scan_n}"
+                )
+    # ---- fig16: random write + WA (fresh stores, dedicated run) ----
+    keys = rng.permutation(N_KEYS).astype(np.uint64) * 8
+    stores = _build_stores(tempfile.mkdtemp(), 8)
+    _load(stores, keys, 8, csv=csv, label="120B")
+    db = stores["remixdb"]
+    csv.emit(
+        "fig16_remixdb_wa_tables_plus_wal",
+        db.write_amplification(),
+        f"partitions={len(db.partitions)}",
+    )

@@ -1,0 +1,108 @@
+"""Fig 17: YCSB A–F on RemixDB vs the leveled/tiered baselines (scaled).
+
+CPU-harness caveat: store-level µs/op here includes host dispatch overhead
+(RemixDB pays one jitted call per touched partition and full WAL
+durability; the baselines keep a single runset and no WAL), so absolute
+ratios are not comparable to the paper's SSD numbers — the compute-level
+validation of the paper's claims is fig11/fig12.
+
+Workloads per Table 2: A=50R/50U, B=95R/5U, C=100R, D=95R/5I(latest),
+E=95Scan/5I, F=50R/50RMW; zipfian request distribution (D: latest)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import CSV, zipf_keys
+from repro.db.baseline import BaselineConfig, LeveledStore, TieredStore
+from repro.db.compaction import CompactionConfig
+from repro.db.store import RemixDB, RemixDBConfig
+
+N_KEYS = 60_000
+OPS = 3_000
+MEM = 8192
+VW = 8
+
+WORKLOADS = dict(
+    A=dict(read=0.5, update=0.5),
+    B=dict(read=0.95, update=0.05),
+    C=dict(read=1.0),
+    D=dict(read=0.95, insert=0.05, dist="latest"),
+    E=dict(scan=0.95, insert=0.05),
+    F=dict(read=0.5, rmw=0.5),
+)
+
+
+def build(tmpdir):
+    db = RemixDB(
+        RemixDBConfig(
+            vw=VW, memtable_entries=MEM, wal_dir=tmpdir,
+            compaction=CompactionConfig(table_cap=8192, t_max=10),
+        )
+    )
+    bcfg = BaselineConfig(vw=VW, memtable_entries=MEM, table_cap=8192)
+    return {"remixdb": db, "leveled": LeveledStore(bcfg), "tiered": TieredStore(bcfg)}
+
+
+def run(csv: CSV):
+    import tempfile
+
+    rng = np.random.default_rng(17)
+    keys = (rng.permutation(N_KEYS).astype(np.uint64) + 1) * 16
+    vals = np.zeros((N_KEYS, VW), np.uint32)
+    stores = build(tempfile.mkdtemp())
+    for name, s in stores.items():
+        for c in range(0, N_KEYS, MEM):
+            s.put_batch(keys[c : c + MEM], vals[c : c + MEM])
+        s.flush()
+    skeys = np.sort(keys)
+    next_key = keys.max() + 16
+
+    for wl, mix in WORKLOADS.items():
+        zipf = zipf_keys(rng, N_KEYS, OPS)
+        ops = rng.random(OPS)
+        for name, s in stores.items():
+            inserted = 0
+            t0 = time.perf_counter()
+            reads = []
+            scans = []
+            i = 0
+            while i < OPS:
+                u = ops[i]
+                if mix.get("dist") == "latest":
+                    target = skeys[max(0, N_KEYS - 1 - zipf[i])]
+                else:
+                    target = skeys[zipf[i] % N_KEYS]
+                racc = mix.get("read", 0)
+                sacc = racc + mix.get("scan", 0)
+                uacc = sacc + mix.get("update", 0)
+                iacc = uacc + mix.get("insert", 0)
+                if u < racc:
+                    reads.append(target)
+                    if len(reads) == 256 or i == OPS - 1:  # batched reads
+                        s.get_batch(np.array(reads, np.uint64))
+                        reads = []
+                elif u < sacc:
+                    scans.append(target)
+                    if len(scans) == 64 or i == OPS - 1:  # batched scans
+                        s.scan_batch(np.array(scans, np.uint64), 50)
+                        scans = []
+                elif u < uacc:
+                    s.put(int(target), np.zeros(VW, np.uint32))
+                elif u < iacc:
+                    s.put(int(next_key + inserted * 16), np.zeros(VW, np.uint32))
+                    inserted += 1
+                else:  # rmw
+                    reads.append(target)
+                    if len(reads) == 256:
+                        s.get_batch(np.array(reads, np.uint64))
+                        reads = []
+                    s.put(int(target), np.zeros(VW, np.uint32))
+                i += 1
+            if reads:
+                s.get_batch(np.array(reads, np.uint64))
+            if scans:
+                s.scan_batch(np.array(scans, np.uint64), 50)
+            dt = time.perf_counter() - t0
+            csv.emit(f"fig17_ycsb_{wl}_{name}", dt / OPS * 1e6, f"{OPS/dt:.0f} ops/s")

@@ -1,0 +1,34 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On CPU these establish correctness-path timings only; the BlockSpec tiling
+targets TPU VMEM. Also reports the REMIX build throughput (compaction-side
+cost that the WA accounting charges)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import CSV, make_tables, qkeys, time_batched
+from repro.core.remix import build_remix
+from repro.kernels import ops
+from repro.kernels.anchor_search import anchor_search
+from repro.kernels.ref import anchor_search_ref
+
+
+def run(csv: CSV):
+    rng = np.random.default_rng(3)
+    runs, keys = make_tables(8, 16384, locality="weak")
+    t0 = time.perf_counter()
+    remix, runset = build_remix(runs, d=32)
+    csv.emit("kernels_remix_build", (time.perf_counter() - t0) * 1e6,
+             f"{8*16384} entries")
+    qk = qkeys(rng, int(keys[-1]), 1024)
+    t = time_batched(lambda q: anchor_search(remix.anchors, q, interpret=True), qk)
+    csv.emit("kernels_anchor_search_pallas_interp", t / 1024 * 1e6, "")
+    t = time_batched(lambda q: anchor_search_ref(remix.anchors, q), qk)
+    csv.emit("kernels_anchor_search_ref", t / 1024 * 1e6, "")
+    t = time_batched(lambda q: ops.seek(remix, runset, q, interpret=True), qk)
+    csv.emit("kernels_seek_fused_interp", t / 1024 * 1e6, "")

@@ -1,0 +1,60 @@
+"""Serve a small LM with batched requests + the REMIX-indexed prefix cache.
+
+Shows the paper's idea on the serving path: immutable KV-page generations
+indexed by a REMIX give one-binary-search longest-prefix lookup; outputs are
+bit-identical with the cache on or off, only recomputation is removed.
+
+    PYTHONPATH=src python examples/serve_llm_prefix_cache.py
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+from repro.models.kvcache import PrefixCache
+from repro.models.layers import split_params
+from repro.serve.engine import ServeEngine
+
+cfg = reduced(get_config("qwen2.5-3b"), n_layers=4, d_model=256, d_ff=512,
+              vocab=2048)
+params = M.init_params(cfg, jax.random.key(0))
+pv, _ = split_params(params)
+
+rng = np.random.default_rng(0)
+system_prompt = rng.integers(0, cfg.vocab, 48).astype(np.int32)
+requests = [
+    np.concatenate([system_prompt, rng.integers(0, cfg.vocab, 12).astype(np.int32)])
+    for _ in range(6)
+]
+
+print("== without prefix cache ==")
+eng = ServeEngine(cfg, pv, max_seq=128)
+t0 = time.perf_counter()
+outs_plain = [eng.generate(r, max_new=12) for r in requests]
+t_plain = time.perf_counter() - t0
+print(f"  {len(requests)} requests in {t_plain:.2f}s "
+      f"(prefill {eng.stats.prefill_tokens} tok)")
+
+print("== with REMIX prefix cache ==")
+cache = PrefixCache(cfg, n_pages=256, page_size=16)
+eng2 = ServeEngine(cfg, pv, max_seq=128, prefix_cache=cache)
+t0 = time.perf_counter()
+outs_cached = [eng2.generate(r, max_new=12) for r in requests]
+t_cached = time.perf_counter() - t0
+print(f"  {len(requests)} requests in {t_cached:.2f}s "
+      f"(prefill {eng2.stats.prefill_tokens} tok, "
+      f"reused {eng2.stats.cached_tokens} tok, "
+      f"page-table lookups {cache.table.lookups})")
+
+for a, b in zip(outs_plain, outs_cached):
+    assert np.array_equal(a, b), "prefix cache changed outputs!"
+print("outputs identical with and without the cache ✓")
+print(f"prefill tokens saved: "
+      f"{eng.stats.prefill_tokens - eng2.stats.prefill_tokens}")
+print("(note: on this CPU demo the host-side page copies can outweigh the "
+      "tiny model's prefill; the win scales with model size — the point "
+      "here is exact reuse via one REMIX lookup instead of per-generation "
+      "probing)")

@@ -1,0 +1,100 @@
+"""Generate the EXPERIMENTS.md dry-run/roofline markdown tables from sweep
+results. Usage: python results/mk_tables.py"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.roofline import analyze_cell  # noqa: E402
+
+BASE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(path, hlo_dir):
+    rows = []
+    seen = set()
+    for line in open(os.path.join(BASE, path)):
+        rec = json.loads(line)
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        if rec.get("status") == "ok":
+            hlo = os.path.join(
+                BASE, hlo_dir,
+                f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.hlo.gz",
+            )
+            rows.append(analyze_cell(rec, hlo if os.path.exists(hlo) else None))
+        else:
+            rows.append(rec)
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows):
+    out = [
+        "| arch | shape | mesh | compile s | HLO GFLOP/dev | state GiB/dev | temp GiB/dev | collective ops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"SKIPPED: {r.get('reason','')[:48]} |"
+            )
+            continue
+        counts = r.get("collectives", {}).get("counts", {})
+        cstr = " ".join(f"{k.split('-')[-1]}×{v}" for k, v in sorted(counts.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('compile_s','')} "
+            f"| {r['flops_per_dev']/1e9:,.0f} | {fmt_bytes(r['arg_bytes'])} "
+            f"| {fmt_bytes(r['temp_bytes'])} | {cstr} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows, other=None):
+    """Single-pod roofline table; optional second sweep for before/after."""
+    key = lambda r: (r["arch"], r["shape"])
+    omap = {key(r): r for r in (other or []) if r.get("status") == "ok"}
+    out = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | useful | roofline% |"
+        + (" opt roofline% | Δ |" if other else ""),
+        "|---|---|---|---|---|---|---|---|" + ("---|---|" if other else ""),
+    ]
+    for r in rows:
+        if r.get("status") != "ok" or r["mesh"] != "16x16":
+            continue
+        line = (
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2f} | "
+            f"{r['t_memory']:.2f} | {r['t_collective']:.2f} | "
+            f"{r['bottleneck']} | {r.get('useful_ratio', 0):.2f} | "
+            f"{100*r.get('roofline_frac', 0):.2f}% |"
+        )
+        if other:
+            o = omap.get(key(r))
+            if o and o["mesh"] == "16x16":
+                d = 100 * (o.get("roofline_frac", 0) - r.get("roofline_frac", 0))
+                line += f" {100*o.get('roofline_frac',0):.2f}% | {d:+.2f}pp |"
+            else:
+                line += " — | — |"
+        out.append(line)
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    base = load("dryrun_baseline.jsonl", "hlo")
+    opt = None
+    if os.path.exists(os.path.join(BASE, "dryrun_optimized.jsonl")):
+        opt = load("dryrun_optimized.jsonl", "hlo_opt")
+        opt = [r for r in opt if r.get("mesh") == "16x16" or r.get("status") != "ok"]
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run (both meshes)\n")
+        print(dryrun_table(base))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod 16×16)\n")
+        print(roofline_table(base, opt))

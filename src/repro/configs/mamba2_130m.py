@@ -1,0 +1,19 @@
+"""mamba2-130m [ssm]: attention-free SSD (state-space duality). [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,  # attention-free
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    conv_width=4,
+    ssm_chunk=64,
+    supports_long_context=True,
+)

@@ -1,0 +1,23 @@
+"""The paper's own system config: a sharded RemixDB service.
+
+Partitions are sharded over the mesh; query batches are routed with
+shard_map + all-to-all (db/sharded.py). This config drives the REMIX-service
+dry-run entry alongside the ten LM architectures.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RemixServiceConfig:
+    name: str = "remixdb"
+    runs_per_partition: int = 8  # R (paper §5.1 uses 1..16)
+    entries_per_run: int = 1 << 16  # keys per run per partition shard
+    group_d: int = 32  # REMIX group size D
+    kw: int = 2  # key words (64-bit keys)
+    vw: int = 4  # value words
+    query_batch: int = 1 << 19  # global point-query batch per step
+    # (>= n_shards per device so all_to_all routing stays dense at 512 chips)
+    scan_width: int = 64  # seek+next50 rounded up to lane multiple
+
+
+CONFIG = RemixServiceConfig()

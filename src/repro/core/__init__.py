@@ -1,0 +1,11 @@
+"""REMIX core: multiword keys, sorted runs, the REMIX index and query engine.
+
+Public API:
+  - :func:`repro.core.remix.build_remix` — build a Remix over runs
+  - :mod:`repro.core.query` — batched seek / scan / get (paper §3)
+  - :mod:`repro.core.merge_iter` — merging-iterator baseline (§2)
+  - :mod:`repro.core.bloom` — bloom-filter baseline
+"""
+from repro.core import keys, bloom, merge_iter, query, runs, view  # noqa: F401
+from repro.core.remix import Remix, build_remix  # noqa: F401
+from repro.core.runs import Run, RunSet, make_run, stack_runs  # noqa: F401

@@ -1,0 +1,78 @@
+"""Bloom filters — the paper's point-query baseline (10 bits/key, k=7).
+
+Vectorized build and probe over multiword keys; one filter per run, stacked
+(R, words) so a query batch probes all runs at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MIX1 = np.uint32(0x9E3779B1)
+MIX2 = np.uint32(0x85EBCA77)
+MIX3 = np.uint32(0xC2B2AE3D)
+
+
+def _mix(words: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two independent 32-bit hashes from (..., KW) key words."""
+    words = jnp.asarray(words, jnp.uint32)
+    h1 = jnp.uint32(0x811C9DC5)
+    h2 = jnp.uint32(0x01000193)
+    for w in range(words.shape[-1]):
+        x = words[..., w]
+        h1 = (h1 ^ x) * MIX1
+        h1 = h1 ^ (h1 >> 15)
+        h2 = (h2 + x) * MIX2
+        h2 = h2 ^ (h2 >> 13)
+    h1 = (h1 ^ (h1 >> 16)) * MIX3
+    h2 = h2 ^ (h2 >> 16)
+    return h1, h2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BloomSet:
+    bits: jnp.ndarray  # (R, W) uint32 bit arrays
+    nbits: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_bloom(
+    run_keys: list[np.ndarray], bits_per_key: int = 10, k: int = 7
+) -> BloomSet:
+    nbits = max(64, bits_per_key * max(len(kk) for kk in run_keys))
+    nbits = ((nbits + 31) // 32) * 32
+    words = nbits // 32
+    r = len(run_keys)
+    bits = np.zeros((r, words), np.uint32)
+    for i, kk in enumerate(run_keys):
+        if len(kk) == 0:
+            continue
+        h1, h2 = _mix(jnp.asarray(kk, jnp.uint32))
+        h1, h2 = np.asarray(h1, np.uint64), np.asarray(h2, np.uint64)
+        for j in range(k):
+            pos = (h1 + np.uint64(j) * h2) % np.uint64(nbits)
+            np.bitwise_or.at(
+                bits[i],
+                (pos // np.uint64(32)).astype(np.int64),
+                np.uint32(1) << (pos % np.uint64(32)).astype(np.uint32),
+            )
+    return BloomSet(bits=jnp.asarray(bits), nbits=nbits, k=k)
+
+
+@jax.jit
+def bloom_maybe_contains(bf: BloomSet, queries: jnp.ndarray) -> jnp.ndarray:
+    """(Q, KW) queries → (Q, R) bool 'may contain'."""
+    h1, h2 = _mix(jnp.asarray(queries, jnp.uint32))  # (Q,)
+    out = jnp.ones((queries.shape[0], bf.bits.shape[0]), bool)
+    for j in range(bf.k):
+        pos = (h1 + jnp.uint32(j) * h2) % jnp.uint32(bf.nbits)
+        word = (pos // jnp.uint32(32)).astype(jnp.int32)
+        bit = jnp.uint32(1) << (pos % jnp.uint32(32))
+        hit = (bf.bits[:, word].T & bit[:, None]) != 0  # (Q, R)
+        out = out & hit
+    return out

@@ -1,0 +1,114 @@
+"""Multiword fixed-width keys.
+
+Keys are lexicographically-ordered vectors of ``KW`` uint32 words, word 0
+most significant. The default ``KW=2`` gives a 64-bit keyspace, matching the
+paper's 16-byte hex-encoded 64-bit integer keys. The all-ones key is reserved
+as the +inf sentinel used for padding (queries must not use it).
+
+All comparison helpers are vectorized over arbitrary leading batch dims and
+usable inside jit / Pallas (no data-dependent Python control flow).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KW = 2  # default number of uint32 words per key (64-bit keys)
+
+UINT32_MAX = np.uint32(0xFFFFFFFF)
+
+
+def max_key(kw: int = KW) -> jnp.ndarray:
+    """The +inf sentinel key (all words 0xFFFFFFFF)."""
+    return jnp.full((kw,), UINT32_MAX, dtype=jnp.uint32)
+
+
+def pack_u64(x) -> np.ndarray:
+    """Pack uint64 scalars/arrays into (..., 2) uint32 big-word-first keys."""
+    x = np.asarray(x, dtype=np.uint64)
+    hi = (x >> np.uint64(32)).astype(np.uint32)
+    lo = (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return np.stack([hi, lo], axis=-1)
+
+
+def unpack_u64(k) -> np.ndarray:
+    """Inverse of :func:`pack_u64` (for tests / host-side code)."""
+    k = np.asarray(k)
+    return (k[..., 0].astype(np.uint64) << np.uint64(32)) | k[..., 1].astype(
+        np.uint64
+    )
+
+
+def key_lt(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Lexicographic a < b over the last axis. Broadcasts leading dims."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    kw = a.shape[-1]
+    lt = a < b
+    eq = a == b
+    out = lt[..., 0]
+    carry = eq[..., 0]
+    for w in range(1, kw):
+        out = out | (carry & lt[..., w])
+        carry = carry & eq[..., w]
+    return out
+
+
+def key_eq(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.all(jnp.asarray(a, jnp.uint32) == jnp.asarray(b, jnp.uint32), axis=-1)
+
+
+def key_le(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return key_lt(a, b) | key_eq(a, b)
+
+
+def _bsearch(keys: jnp.ndarray, queries: jnp.ndarray, pred) -> jnp.ndarray:
+    """Generic vectorized binary search.
+
+    ``keys``: (N, KW) sorted ascending. ``queries``: (Q, KW).
+    ``pred(kmid, q) -> bool``: True means "go right" (lo = mid + 1).
+    Returns (Q,) int32 insertion points in [0, N].
+    """
+    n = keys.shape[0]
+    q = queries.shape[0]
+    lo = jnp.zeros((q,), jnp.int32)
+    hi = jnp.full((q,), n, jnp.int32)
+    steps = max(1, int(math.ceil(math.log2(n + 1))) + 1)
+
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        kmid = jnp.take(keys, jnp.clip(mid, 0, n - 1), axis=0)
+        go_right = pred(kmid, queries)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def lower_bound(keys: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """First index i with keys[i] >= query. keys (N,KW) sorted, queries (Q,KW)."""
+    return _bsearch(keys, queries, lambda k, q: key_lt(k, q))
+
+
+def upper_bound(keys: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """First index i with keys[i] > query."""
+    return _bsearch(keys, queries, lambda k, q: key_le(k, q))
+
+
+def sort_indices_np(keys: np.ndarray, seq: np.ndarray | None = None) -> np.ndarray:
+    """Host-side stable ordering by (key asc, seq desc). keys (N,KW) uint32."""
+    keys = np.asarray(keys, np.uint32)
+    cols = []
+    if seq is not None:
+        seq = np.asarray(seq, np.uint64)
+        cols.append(np.uint64(0xFFFFFFFFFFFFFFFF) - seq)  # seq desc
+    for w in range(keys.shape[-1] - 1, -1, -1):
+        cols.append(keys[:, w])
+    return np.lexsort(cols)  # last col = primary = word 0

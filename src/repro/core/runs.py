@@ -1,0 +1,150 @@
+"""Immutable sorted runs ("table files").
+
+A :class:`Run` is one sorted run: keys strictly ascending (unique within the
+run), each entry carrying a global sequence number (larger = newer), a
+tombstone flag and a fixed-width value payload. A :class:`RunSet` stacks up to
+R runs into padded arrays so that (run, index) pairs can be gathered in one
+vectorized op — the TPU analogue of the paper's per-table block cursor.
+
+Padding uses the +inf sentinel key so padded slots sort after every real key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as K
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Run:
+    keys: jnp.ndarray  # (N, KW) uint32, strictly ascending
+    vals: jnp.ndarray  # (N, VW) uint32 payload
+    seq: jnp.ndarray  # (N,) uint32 sequence numbers (larger = newer)
+    tomb: jnp.ndarray  # (N,) bool tombstones
+
+    @property
+    def n(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def kw(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def vw(self) -> int:
+        return self.vals.shape[1]
+
+
+def make_run(
+    keys_np, vals_np=None, seq=0, tomb=None, vw: int = 2, sort: bool = True
+) -> Run:
+    """Build a Run from host arrays. ``keys_np``: (N,KW) uint32 or (N,) u64."""
+    keys_np = np.asarray(keys_np)
+    if keys_np.ndim == 1:
+        keys_np = K.pack_u64(keys_np)
+    keys_np = keys_np.astype(np.uint32)
+    n = keys_np.shape[0]
+    if np.isscalar(seq) or np.asarray(seq).ndim == 0:
+        seq_np = np.full((n,), int(seq), np.uint32)
+    else:
+        seq_np = np.asarray(seq, np.uint32)
+    tomb_np = (
+        np.zeros((n,), bool) if tomb is None else np.asarray(tomb, bool)
+    )
+    if vals_np is None:
+        # default payload: low word of the key, tagged, so tests can verify
+        vals_np = np.zeros((n, vw), np.uint32)
+        if n:
+            vals_np[:, 0] = keys_np[:, -1]
+            vals_np[:, -1] = seq_np
+    vals_np = np.asarray(vals_np, np.uint32)
+    if sort and n:
+        order = K.sort_indices_np(keys_np, seq_np)
+        keys_np, vals_np = keys_np[order], vals_np[order]
+        seq_np, tomb_np = seq_np[order], tomb_np[order]
+        # runs must have unique keys: keep newest per key
+        keep = np.ones(n, bool)
+        keep[1:] = np.any(keys_np[1:] != keys_np[:-1], axis=-1)
+        keys_np, vals_np = keys_np[keep], vals_np[keep]
+        seq_np, tomb_np = seq_np[keep], tomb_np[keep]
+    return Run(
+        keys=jnp.asarray(keys_np),
+        vals=jnp.asarray(vals_np),
+        seq=jnp.asarray(seq_np),
+        tomb=jnp.asarray(tomb_np),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RunSet:
+    """R runs stacked into padded (R, Nmax, ...) arrays for vector gathers."""
+
+    keys: jnp.ndarray  # (R, Nmax, KW) uint32, padded with +inf sentinel
+    vals: jnp.ndarray  # (R, Nmax, VW) uint32
+    seq: jnp.ndarray  # (R, Nmax) uint32
+    tomb: jnp.ndarray  # (R, Nmax) bool
+    lens: jnp.ndarray  # (R,) int32 true lengths
+
+    @property
+    def r(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def nmax(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def kw(self) -> int:
+        return self.keys.shape[2]
+
+    @property
+    def vw(self) -> int:
+        return self.vals.shape[2]
+
+    def total(self) -> int:
+        return int(np.sum(np.asarray(self.lens)))
+
+    def gather(self, run_idx: jnp.ndarray, pos: jnp.ndarray):
+        """Fetch (keys, vals, seq, tomb) at (run, pos); any batch shape."""
+        run_idx = jnp.clip(run_idx, 0, self.r - 1)
+        pos = jnp.clip(pos, 0, self.nmax - 1)
+        return (
+            self.keys[run_idx, pos],
+            self.vals[run_idx, pos],
+            self.seq[run_idx, pos],
+            self.tomb[run_idx, pos],
+        )
+
+
+def stack_runs(runs: Sequence[Run]) -> RunSet:
+    assert len(runs) >= 1
+    kw, vw = runs[0].kw, runs[0].vw
+    nmax = max(1, max(r.n for r in runs))
+    r = len(runs)
+    keys = np.full((r, nmax, kw), K.UINT32_MAX, np.uint32)
+    vals = np.zeros((r, nmax, vw), np.uint32)
+    seq = np.zeros((r, nmax), np.uint32)
+    tomb = np.zeros((r, nmax), bool)
+    lens = np.zeros((r,), np.int32)
+    for i, run in enumerate(runs):
+        n = run.n
+        lens[i] = n
+        if n:
+            keys[i, :n] = np.asarray(run.keys)
+            vals[i, :n] = np.asarray(run.vals)
+            seq[i, :n] = np.asarray(run.seq)
+            tomb[i, :n] = np.asarray(run.tomb)
+    return RunSet(
+        keys=jnp.asarray(keys),
+        vals=jnp.asarray(vals),
+        seq=jnp.asarray(seq),
+        tomb=jnp.asarray(tomb),
+        lens=jnp.asarray(lens),
+    )

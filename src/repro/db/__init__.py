@@ -1,0 +1,11 @@
+"""RemixDB (paper §4): a REMIX-indexed, tiered-compaction, partitioned store.
+
+  - memtable:   sorted write buffer with 8-bit update counters (§4.2 TRIAD)
+  - wal:        4 KB-block write-ahead log with virtual logs + GC (§4.3)
+  - partition:  key-range partition = table files + one REMIX
+  - compaction: abort / minor / major / split procedures (§4.2)
+  - store:      the RemixDB public API
+  - sstable:    baseline SSTable metadata (block index + bloom filters)
+  - baseline:   LevelDB-like leveled / tiered comparison stores
+"""
+from repro.db.store import RemixDB, RemixDBConfig  # noqa: F401

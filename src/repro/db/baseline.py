@@ -1,0 +1,249 @@
+"""Baseline LSM stores: leveled (LevelDB-like) and tiered (PebblesDB-like).
+
+Same MemTable + Table machinery as RemixDB, but queries run through the
+merging iterator over all overlapping sorted runs (plus optional bloom
+filters for point queries) — the configurations the paper compares against
+(§5.2). Write amplification is tracked identically for the fig-16 bench.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import keys as CK
+from repro.core import merge_iter as M
+from repro.core.bloom import bloom_maybe_contains, build_bloom
+from repro.core.runs import make_run, stack_runs
+from repro.db.memtable import MemTable
+from repro.db.partition import Table, chunk_table, merge_tables
+
+
+@dataclasses.dataclass
+class BaselineConfig:
+    vw: int = 2
+    memtable_entries: int = 1 << 18
+    table_cap: int = 65536
+    l0_limit: int = 4  # L0 run count triggering compaction into L1
+    level_ratio: int = 10  # leveled: size ratio between adjacent levels
+    tier_t: int = 4  # tiered: runs per level before merge (ScyllaDB T=4)
+    use_bloom: bool = True
+
+
+class _LSMBase:
+    def __init__(self, cfg: BaselineConfig | None = None):
+        self.cfg = cfg or BaselineConfig()
+        self.mem = MemTable(vw=self.cfg.vw)
+        self.seq = 1
+        self.user_bytes = 0
+        self.table_bytes_written = 0
+        self._runset_cache = None
+
+    def put_batch(self, keys, vals):
+        keys = np.asarray(keys, np.uint64)
+        vals = np.asarray(vals, np.uint32).reshape(len(keys), self.cfg.vw)
+        self.seq = self.mem.put_batch(keys, vals, self.seq)
+        self.user_bytes += len(keys) * (8 + 4 * self.cfg.vw)
+        if len(self.mem) >= self.cfg.memtable_entries:
+            self.flush()
+
+    def put(self, key, val):
+        self.put_batch([key], [val])
+
+    def _mem_to_table(self) -> Table:
+        keys, vals, seq, tomb, _ = self.mem.to_arrays()
+        self.mem = MemTable(vw=self.cfg.vw)
+        return Table(keys=keys, vals=vals, seq=seq, tomb=tomb)
+
+    # ---- query plumbing shared by both baselines ----
+    def _sorted_runs(self) -> list[Table]:
+        raise NotImplementedError
+
+    def runset(self):
+        if self._runset_cache is None:
+            tables = self._sorted_runs() or [
+                Table(
+                    keys=np.zeros(0, np.uint64),
+                    vals=np.zeros((0, self.cfg.vw), np.uint32),
+                    seq=np.zeros(0, np.uint32),
+                    tomb=np.zeros(0, bool),
+                )
+            ]
+            runs = [
+                make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb, sort=False)
+                for t in tables
+            ]
+            rs = stack_runs(runs)
+            blooms = (
+                build_bloom([np.asarray(r.keys) for r in runs])
+                if self.cfg.use_bloom
+                else None
+            )
+            self._runset_cache = (rs, blooms)
+        return self._runset_cache
+
+    def n_runs(self) -> int:
+        return len(self._sorted_runs())
+
+    def get_batch(self, keys):
+        keys = np.asarray(keys, np.uint64)
+        found = np.zeros(len(keys), bool)
+        vals = np.zeros((len(keys), self.cfg.vw), np.uint32)
+        rest = []
+        for i, k in enumerate(keys.tolist()):
+            e = self.mem.get(k)
+            if e is not None:
+                found[i] = not e.tomb
+                vals[i] = e.val
+            else:
+                rest.append(i)
+        if rest:
+            rest = np.array(rest)
+            rs, _ = self.runset()
+            qk = jnp.asarray(CK.pack_u64(keys[rest]))
+            f, v = M.merge_get(rs, qk)
+            found[rest] = np.asarray(f)
+            vals[rest] = np.asarray(v)
+        return found, vals
+
+    def scan(self, start_key: int, n: int):
+        rs, _ = self.runset()
+        qk = jnp.asarray(CK.pack_u64(np.array([start_key], np.uint64)))
+        width = n + n // 2 + 8
+        keys, vals, valid = M.merge_scan(rs, qk, width=width)
+        kk = CK.unpack_u64(np.asarray(keys)[0][np.asarray(valid)[0]])
+        vv = np.asarray(vals)[0][np.asarray(valid)[0]]
+        merged: dict[int, np.ndarray | None] = {
+            int(k): v for k, v in zip(kk, vv)
+        }
+        limit = int(kk[-1]) if len(kk) >= n else (1 << 64)
+        for k, e in self.mem.data.items():
+            if start_key <= k <= limit:
+                merged[k] = None if e.tomb else e.val
+        items = sorted(
+            ((k, v) for k, v in merged.items() if v is not None),
+            key=lambda kv: kv[0],
+        )[:n]
+        if not items:
+            return np.zeros(0, np.uint64), np.zeros((0, self.cfg.vw), np.uint32)
+        return (
+            np.array([k for k, _ in items], np.uint64),
+            np.stack([v for _, v in items]),
+        )
+
+    def scan_batch(self, starts, n: int):
+        """Batched scans via the merging iterator (single jitted call)."""
+        starts = np.asarray(starts, np.uint64)
+        rs, _ = self.runset()
+        qk = jnp.asarray(CK.pack_u64(starts))
+        width = n + max(8, n // 2)
+        keys, vals, valid = M.merge_scan(rs, qk, width=width)
+        keys = CK.unpack_u64(np.asarray(keys))
+        valid = np.asarray(valid)
+        out_k = np.zeros((len(starts), n), np.uint64)
+        out_m = np.zeros((len(starts), n), bool)
+        for i in range(len(starts)):
+            kk = keys[i][valid[i]][:n]
+            out_k[i, : len(kk)] = kk
+            out_m[i, : len(kk)] = True
+        if len(self.mem):
+            for i in range(len(starts)):
+                kk, _ = self.scan(int(starts[i]), n)
+                out_k[i, : len(kk)] = kk[:n]
+                out_m[i] = False
+                out_m[i, : len(kk)] = True
+        return out_k, out_m
+
+    def write_amplification(self) -> float:
+        return self.table_bytes_written / max(1, self.user_bytes)
+
+
+class LeveledStore(_LSMBase):
+    """Leveled compaction: L0 overlapping runs, L1.. single sorted runs."""
+
+    def __init__(self, cfg: BaselineConfig | None = None):
+        super().__init__(cfg)
+        self.l0: list[Table] = []
+        self.levels: list[Table] = []  # one merged run per level, L1..
+
+    def _level_cap(self, i: int) -> int:
+        return self.cfg.table_cap * 4 * (self.cfg.level_ratio ** i)
+
+    def flush(self):
+        t = self._mem_to_table()
+        if t.n == 0:
+            return
+        self.table_bytes_written += t.bytes()
+        self.l0.append(t)
+        self._runset_cache = None
+        if len(self.l0) >= self.cfg.l0_limit:
+            self._compact_l0()
+
+    def _compact_l0(self):
+        inputs = self.l0 + ([self.levels[0]] if self.levels else [])
+        merged = merge_tables(inputs, drop_tombs=len(self.levels) <= 1)
+        self.table_bytes_written += merged.bytes()
+        if self.levels:
+            self.levels[0] = merged
+        else:
+            self.levels.append(merged)
+        self.l0 = []
+        # cascade: push overflowing levels down (each rewrite amplifies)
+        i = 0
+        while i < len(self.levels) and self.levels[i].n > self._level_cap(i + 1):
+            if i + 1 >= len(self.levels):
+                self.levels.append(self.levels[i])
+                self.levels[i] = None  # type: ignore
+            else:
+                merged = merge_tables(
+                    [self.levels[i], self.levels[i + 1]],
+                    drop_tombs=(i + 2 >= len(self.levels)),
+                )
+                self.table_bytes_written += merged.bytes()
+                self.levels[i + 1] = merged
+                self.levels[i] = None  # type: ignore
+            self.levels[i] = Table(
+                keys=np.zeros(0, np.uint64),
+                vals=np.zeros((0, self.cfg.vw), np.uint32),
+                seq=np.zeros(0, np.uint32),
+                tomb=np.zeros(0, bool),
+            )
+            i += 1
+        self._runset_cache = None
+
+    def _sorted_runs(self) -> list[Table]:
+        return [t for t in self.l0 if t.n] + [
+            t for t in self.levels if t is not None and t.n
+        ]
+
+
+class TieredStore(_LSMBase):
+    """Tiered compaction: up to T overlapping runs per level (§2)."""
+
+    def __init__(self, cfg: BaselineConfig | None = None):
+        super().__init__(cfg)
+        self.tiers: list[list[Table]] = [[]]
+
+    def flush(self):
+        t = self._mem_to_table()
+        if t.n == 0:
+            return
+        self.table_bytes_written += t.bytes()
+        self.tiers[0].append(t)
+        self._runset_cache = None
+        i = 0
+        while i < len(self.tiers) and len(self.tiers[i]) >= self.cfg.tier_t:
+            merged = merge_tables(
+                self.tiers[i], drop_tombs=(i + 1 >= len(self.tiers))
+            )
+            self.table_bytes_written += merged.bytes()
+            if i + 1 >= len(self.tiers):
+                self.tiers.append([])
+            self.tiers[i + 1].append(merged)
+            self.tiers[i] = []
+            i += 1
+
+    def _sorted_runs(self) -> list[Table]:
+        return [t for tier in self.tiers for t in tier if t.n]

@@ -1,0 +1,84 @@
+"""MemTable: in-memory write buffer with per-key 8-bit update counters.
+
+The paper (§4.2, following TRIAD) counts updates per key so that compaction
+can retain frequently-updated keys in the MemTable/WAL instead of repeatedly
+rewriting them into table files. Counters saturate at 255 and are halved when
+a key is carried over by a compaction.
+
+Keys are 64-bit ints; values are fixed-width uint32 word vectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Entry:
+    seq: int
+    tomb: bool
+    val: np.ndarray  # (VW,) uint32
+    count: int  # 8-bit update counter
+
+
+class MemTable:
+    def __init__(self, vw: int = 2):
+        self.vw = vw
+        self.data: dict[int, Entry] = {}
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def put(self, key: int, val: np.ndarray, seq: int, tomb: bool = False):
+        prev = self.data.get(key)
+        count = 1 if prev is None else min(255, prev.count + 1)
+        self.data[key] = Entry(seq=seq, tomb=tomb, val=val, count=count)
+
+    def put_batch(self, keys, vals, seq0: int, tomb=None) -> int:
+        """Vectorized put; returns the next unused sequence number."""
+        keys = np.asarray(keys, np.uint64)
+        vals = np.asarray(vals, np.uint32).reshape(len(keys), self.vw)
+        tomb = np.zeros(len(keys), bool) if tomb is None else np.asarray(tomb)
+        seq = seq0
+        for k, v, t in zip(keys.tolist(), vals, tomb.tolist()):
+            self.put(k, v, seq, t)
+            seq += 1
+        return seq
+
+    def carry_over(self, key: int, entry: Entry):
+        """Re-insert a compaction-excluded hot key (counter halving, §4.2)."""
+        cur = self.data.get(key)
+        if cur is None:
+            self.data[key] = Entry(
+                seq=entry.seq, tomb=entry.tomb, val=entry.val,
+                count=max(1, entry.count // 2),
+            )
+        else:
+            # newer update already buffered: fold the halved old count in
+            cur.count = min(255, cur.count + max(1, entry.count // 2))
+
+    def get(self, key: int) -> Entry | None:
+        return self.data.get(key)
+
+    def sorted_items(self):
+        return sorted(self.data.items())
+
+    def range_items(self, lo: int, hi: int):
+        return [(k, e) for k, e in sorted(self.data.items()) if lo <= k < hi]
+
+    def approx_bytes(self, key_bytes: int = 8) -> int:
+        return len(self.data) * (key_bytes + 4 * self.vw + 8)
+
+    def to_arrays(self):
+        items = self.sorted_items()
+        keys = np.array([k for k, _ in items], np.uint64)
+        vals = (
+            np.stack([e.val for _, e in items])
+            if items
+            else np.zeros((0, self.vw), np.uint32)
+        )
+        seq = np.array([e.seq for _, e in items], np.uint32)
+        tomb = np.array([e.tomb for _, e in items], bool)
+        counts = np.array([e.count for _, e in items], np.int32)
+        return keys, vals, seq, tomb, counts

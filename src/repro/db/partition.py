@@ -1,0 +1,175 @@
+"""Key-range partitions: table files + one REMIX per partition (paper §4).
+
+Tables are host numpy arrays (the "files"); the partition lazily builds its
+REMIX + stacked RunSet (jnp, device-resident) when first queried after a
+change — compaction invalidates the cache, mirroring the paper's "new
+version of the partition includes ... a new REMIX file".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import keys as CK
+from repro.core.remix import Remix, build_remix
+from repro.core.runs import Run, RunSet, make_run
+
+KEY_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _pad_index(remix: Remix, runset: RunSet, d: int) -> tuple[Remix, RunSet]:
+    """Pad (G, R, Nmax) to power-of-two buckets; query semantics unchanged
+    (pad groups are all-placeholder with +inf anchors, pad runs are empty)."""
+    from repro.core.view import PLACEHOLDER
+
+    g2 = _pow2(remix.g, 4)
+    r2 = _pow2(remix.r, 1)
+    n2 = _pow2(runset.nmax, 64)
+    if (g2, r2, n2) == (remix.g, remix.r, runset.nmax):
+        return remix, runset
+    anchors = np.full((g2, runset.kw), 0xFFFFFFFF, np.uint32)
+    anchors[: remix.g] = np.asarray(remix.anchors)
+    cursors = np.zeros((g2, r2), np.int32)
+    cursors[: remix.g, : remix.r] = np.asarray(remix.cursors)
+    selectors = np.full((g2 * d,), PLACEHOLDER, np.uint8)
+    selectors[: remix.n_slots] = np.asarray(remix.selectors)
+    keys = np.full((r2, n2, runset.kw), 0xFFFFFFFF, np.uint32)
+    keys[: runset.r, : runset.nmax] = np.asarray(runset.keys)
+    vals = np.zeros((r2, n2, runset.vw), np.uint32)
+    vals[: runset.r, : runset.nmax] = np.asarray(runset.vals)
+    seq = np.zeros((r2, n2), np.uint32)
+    seq[: runset.r, : runset.nmax] = np.asarray(runset.seq)
+    tomb = np.zeros((r2, n2), bool)
+    tomb[: runset.r, : runset.nmax] = np.asarray(runset.tomb)
+    lens = np.zeros((r2,), np.int32)
+    lens[: runset.r] = np.asarray(runset.lens)
+    import jax.numpy as jnp
+
+    return (
+        Remix(
+            anchors=jnp.asarray(anchors),
+            cursors=jnp.asarray(cursors),
+            selectors=jnp.asarray(selectors),
+            n_entries=remix.n_entries,
+            d=d,
+        ),
+        RunSet(
+            keys=jnp.asarray(keys),
+            vals=jnp.asarray(vals),
+            seq=jnp.asarray(seq),
+            tomb=jnp.asarray(tomb),
+            lens=jnp.asarray(lens),
+        ),
+    )
+
+
+@dataclasses.dataclass
+class Table:
+    """One immutable sorted table file."""
+
+    keys: np.ndarray  # (N,) uint64 ascending, unique
+    vals: np.ndarray  # (N, VW) uint32
+    seq: np.ndarray  # (N,) uint32
+    tomb: np.ndarray  # (N,) bool
+
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+    def bytes(self, key_bytes: int = 8) -> int:
+        return self.n * (key_bytes + self.vals.shape[1] * 4 + 5)
+
+
+def merge_tables(tables: list[Table], drop_tombs: bool = False) -> Table:
+    """Sort-merge tables, newest version per key wins (tiered major merge)."""
+    keys = np.concatenate([t.keys for t in tables])
+    vals = np.concatenate([t.vals for t in tables])
+    seq = np.concatenate([t.seq for t in tables])
+    tomb = np.concatenate([t.tomb for t in tables])
+    neg = np.uint64(0xFFFFFFFFFFFFFFFF) - seq.astype(np.uint64)
+    order = np.lexsort([neg, keys])
+    keys, vals, seq, tomb = keys[order], vals[order], seq[order], tomb[order]
+    keep = np.ones(len(keys), bool)
+    keep[1:] = keys[1:] != keys[:-1]
+    keys, vals, seq, tomb = keys[keep], vals[keep], seq[keep], tomb[keep]
+    if drop_tombs:
+        live = ~tomb
+        keys, vals, seq, tomb = keys[live], vals[live], seq[live], tomb[live]
+    return Table(keys=keys, vals=vals, seq=seq, tomb=tomb)
+
+
+def chunk_table(t: Table, cap: int) -> list[Table]:
+    """Split a merged table into files of at most ``cap`` entries."""
+    if t.n == 0:
+        return []
+    return [
+        Table(
+            keys=t.keys[i : i + cap],
+            vals=t.vals[i : i + cap],
+            seq=t.seq[i : i + cap],
+            tomb=t.tomb[i : i + cap],
+        )
+        for i in range(0, t.n, cap)
+    ]
+
+
+class Partition:
+    def __init__(self, lo: int, tables: list[Table] | None = None, d: int = 32):
+        self.lo = int(lo)  # inclusive lower bound of the key range
+        self.tables: list[Table] = tables or []
+        self.d = d
+        self._remix: Remix | None = None
+        self._runset: RunSet | None = None
+        self.remix_bytes = 0  # last REMIX build size (for WA accounting)
+
+    def invalidate(self):
+        self._remix = None
+        self._runset = None
+
+    @property
+    def n_entries(self) -> int:
+        return sum(t.n for t in self.tables)
+
+    def data_bytes(self) -> int:
+        return sum(t.bytes() for t in self.tables)
+
+    def index(self) -> tuple[Remix, RunSet]:
+        """Build (or reuse) the partition's REMIX + stacked runs.
+
+        Shapes are bucket-padded to powers of two so every partition of a
+        store shares the same compiled query executables (shape-stable
+        kernels — one jit per bucket instead of one per partition).
+        """
+        if self._remix is None:
+            tabs = self.tables or [
+                Table(
+                    keys=np.zeros(0, np.uint64),
+                    vals=np.zeros((0, 2), np.uint32),
+                    seq=np.zeros(0, np.uint32),
+                    tomb=np.zeros(0, bool),
+                )
+            ]
+            runs = [
+                make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb, sort=False)
+                for t in tabs
+            ]
+            d = max(self.d, len(runs))  # paper requires D >= R
+            remix, runset = build_remix(runs, d=d)
+            self.remix_bytes = int(remix.storage_bytes())
+            self._remix, self._runset = _pad_index(remix, runset, d)
+        return self._remix, self._runset
+
+    def estimate_remix_bytes(self, extra_entries: int = 0) -> int:
+        """Size estimate of a REMIX over current + new entries (§4.2 Abort)."""
+        n = self.n_entries + extra_entries
+        r = len(self.tables) + 1
+        groups = max(1, n // self.d)
+        return int(groups * (8 + 4 * r) + n)

@@ -1,0 +1,340 @@
+"""RemixDB: the public key-value store API (paper §4).
+
+Write path: put/delete → WAL append + MemTable (update counters). When the
+MemTable exceeds its budget, ``flush()`` freezes it, routes the new data to
+partitions, plans + executes compactions (abort/minor/major/split), carries
+hot keys back (TRIAD-style), and garbage-collects the WAL's virtual log.
+
+Read path: MemTable overlay first, then the owning partition's REMIX
+(batched JAX seek/get/scan — no bloom filters, §4).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import keys as CK
+from repro.core import query as Q
+from repro.db.compaction import (
+    CompactionConfig,
+    Plan,
+    apply_abort_budget,
+    execute,
+    plan_partition,
+)
+from repro.db.memtable import MemTable
+from repro.db.partition import Partition, Table
+from repro.db.wal import WAL
+
+
+@dataclasses.dataclass
+class RemixDBConfig:
+    vw: int = 2  # value words (uint32)
+    d: int = 32  # REMIX group size
+    memtable_entries: int = 1 << 18
+    hot_threshold: int = 8  # update count above which a key stays buffered
+    compaction: CompactionConfig = dataclasses.field(
+        default_factory=CompactionConfig
+    )
+    wal_dir: str | None = None
+    use_kernels: bool = False  # route queries through the Pallas kernel path
+    # in-group search mode: "auto" picks binary probes on CPU (gathers are
+    # scalar-expensive) and the vectorized all-slot compare on TPU (§Perf)
+    ingroup: str = "auto"
+
+
+
+def _pow2pad(n: int) -> int:
+    """Next power-of-two bucket (bounds jit recompiles per batch size)."""
+    b = 8
+    while b < n:
+        b <<= 1
+    return b
+
+
+class RemixDB:
+    def __init__(self, config: RemixDBConfig | None = None):
+        self.cfg = config or RemixDBConfig()
+        self.mem = MemTable(vw=self.cfg.vw)
+        wal_dir = self.cfg.wal_dir or tempfile.mkdtemp(prefix="remixdb-")
+        os.makedirs(wal_dir, exist_ok=True)
+        self.wal = WAL(os.path.join(wal_dir, "wal.log"), vw=self.cfg.vw)
+        self.partitions: list[Partition] = [Partition(lo=0, d=self.cfg.d)]
+        self.seq = 1
+        # write-amplification accounting (fig 16)
+        self.user_bytes = 0
+        self.table_bytes_written = 0
+        self.compaction_log: list[dict] = []
+
+    # ---------------- write path ----------------
+    def put(self, key: int, val) -> None:
+        val = np.asarray(val, np.uint32).reshape(self.cfg.vw)
+        self.wal.append(int(key), self.seq, False, val)
+        self.mem.put(int(key), val, self.seq)
+        self.user_bytes += 8 + 4 * self.cfg.vw
+        self.seq += 1
+        self._maybe_flush()
+
+    def delete(self, key: int) -> None:
+        val = np.zeros(self.cfg.vw, np.uint32)
+        self.wal.append(int(key), self.seq, True, val)
+        self.mem.put(int(key), val, self.seq, tomb=True)
+        self.user_bytes += 8 + 4 * self.cfg.vw
+        self.seq += 1
+        self._maybe_flush()
+
+    def put_batch(self, keys, vals) -> None:
+        keys = np.asarray(keys, np.uint64)
+        vals = np.asarray(vals, np.uint32).reshape(len(keys), self.cfg.vw)
+        seqs = np.arange(self.seq, self.seq + len(keys), dtype=np.uint64)
+        self.wal.append_batch(keys, seqs, np.zeros(len(keys), bool), vals)
+        self.seq = self.mem.put_batch(keys, vals, self.seq)
+        self.user_bytes += len(keys) * (8 + 4 * self.cfg.vw)
+        self._maybe_flush()
+
+    def _maybe_flush(self):
+        if len(self.mem) >= self.cfg.memtable_entries:
+            self.flush()
+
+    # ---------------- flush / compaction ----------------
+    def _route(self, key: int) -> int:
+        los = [p.lo for p in self.partitions]
+        return max(0, bisect.bisect_right(los, key) - 1)
+
+    def flush(self) -> dict:
+        """Freeze the MemTable and run one compaction round (§4.2)."""
+        keys, vals, seq, tomb, counts = self.mem.to_arrays()
+        if len(keys) == 0:
+            return dict(kinds={})
+        hot = counts > self.cfg.hot_threshold
+        frozen = self.mem
+        self.mem = MemTable(vw=self.cfg.vw)
+        # hot keys skip compaction; carried over with halved counters
+        for k in np.asarray(keys[hot], np.uint64).tolist():
+            self.mem.carry_over(int(k), frozen.data[int(k)])
+        keys, vals, seq, tomb = (
+            keys[~hot], vals[~hot], seq[~hot], tomb[~hot],
+        )
+        # route new data to partitions
+        los = np.array([p.lo for p in self.partitions], np.uint64)
+        pidx = np.maximum(
+            np.searchsorted(los, keys, side="right") - 1, 0
+        )
+        plans: list[Plan] = []
+        for i, p in enumerate(self.partitions):
+            m = pidx == i
+            t = Table(keys=keys[m], vals=vals[m], seq=seq[m], tomb=tomb[m])
+            plans.append(plan_partition(p, t, self.cfg.compaction))
+        apply_abort_budget(plans, self.cfg.compaction)
+        kinds: dict[str, int] = {}
+        new_parts: list[Partition] = []
+        for p, pl in zip(self.partitions, plans):
+            kinds[pl.kind] = kinds.get(pl.kind, 0) + 1
+            res = execute(pl, self.cfg.compaction)
+            self.table_bytes_written += res.bytes_written
+            if res.carried is not None:  # aborted: back into the MemTable
+                for j in range(res.carried.n):
+                    e = frozen.data[int(res.carried.keys[j])]
+                    self.mem.carry_over(int(res.carried.keys[j]), e)
+            if res.new_partitions is not None:
+                new_parts.extend(res.new_partitions)
+            else:
+                new_parts.append(p)
+        new_parts.sort(key=lambda p: p.lo)
+        self.partitions = new_parts
+        # WAL GC: only carried/hot keys remain live in the log (§4.3)
+        self.wal.gc(set(self.mem.data.keys()))
+        stats = dict(kinds=kinds)
+        self.compaction_log.append(stats)
+        return stats
+
+    # ---------------- read path ----------------
+    def _query_mod(self):
+        if self.cfg.use_kernels:
+            from repro.kernels import ops
+
+            return ops
+        return Q
+
+    def _qkw(self) -> dict:
+        """Per-backend query kwargs (§Perf: binary in-group probes win on
+        CPU, the vectorized all-slot compare wins on TPU)."""
+        if self.cfg.use_kernels:
+            return {}
+        mode = self.cfg.ingroup
+        if mode == "auto":
+            import jax
+
+            mode = "binary" if jax.default_backend() == "cpu" else "vector"
+        return dict(ingroup=mode)
+
+    def get(self, key: int):
+        e = self.mem.get(int(key))
+        if e is not None:
+            return None if e.tomb else e.val
+        p = self.partitions[self._route(int(key))]
+        remix, runset = p.index()
+        qk = jnp.asarray(CK.pack_u64(np.array([key], np.uint64)))
+        found, val = self._query_mod().get(remix, runset, qk, **self._qkw())
+        return np.asarray(val)[0] if bool(np.asarray(found)[0]) else None
+
+    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Batched point lookups. Returns (found (Q,), vals (Q,VW))."""
+        keys = np.asarray(keys, np.uint64)
+        found = np.zeros(len(keys), bool)
+        vals = np.zeros((len(keys), self.cfg.vw), np.uint32)
+        rest = []
+        for i, k in enumerate(keys.tolist()):
+            e = self.mem.get(k)
+            if e is not None:
+                found[i] = not e.tomb
+                vals[i] = e.val
+            else:
+                rest.append(i)
+        if rest:
+            rest = np.array(rest)
+            los = np.array([p.lo for p in self.partitions], np.uint64)
+            pidx = np.maximum(
+                np.searchsorted(los, keys[rest], side="right") - 1, 0
+            )
+            for pi in np.unique(pidx):
+                sel = rest[pidx == pi]
+                remix, runset = self.partitions[pi].index()
+                kq = keys[sel]
+                pad = _pow2pad(len(kq))
+                kq = np.pad(kq, (0, pad - len(kq)))
+                qk = jnp.asarray(CK.pack_u64(kq))
+                f, v = self._query_mod().get(remix, runset, qk, **self._qkw())
+                found[sel] = np.asarray(f)[: len(sel)]
+                vals[sel] = np.asarray(v)[: len(sel)]
+        return found, vals
+
+    def scan(self, start_key: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Range scan: seek + next×n across partitions + MemTable overlay."""
+        out_k: list[int] = []
+        out_v: list[np.ndarray] = []
+        pi = self._route(int(start_key))
+        lo = int(start_key)
+        width = max(8, n + n // 2)
+        while len(out_k) < n and pi < len(self.partitions):
+            p = self.partitions[pi]
+            hi = (
+                self.partitions[pi + 1].lo
+                if pi + 1 < len(self.partitions)
+                else 1 << 64
+            )
+            remix, runset = p.index()
+            qk = jnp.asarray(CK.pack_u64(np.array([lo], np.uint64)))
+            keys, vals, valid, _ = self._query_mod().scan(
+                remix, runset, qk, width=width, **self._qkw()
+            )
+            kk = CK.unpack_u64(np.asarray(keys)[0][np.asarray(valid)[0]])
+            vv = np.asarray(vals)[0][np.asarray(valid)[0]]
+            got_in_range = 0
+            for j in range(len(kk)):
+                if int(kk[j]) >= hi:
+                    break
+                out_k.append(int(kk[j]))
+                out_v.append(vv[j])
+                got_in_range += 1
+            if got_in_range == 0 or (len(kk) > got_in_range):
+                # nothing (more) in this partition's range: advance partition
+                pi += 1
+                lo = self.partitions[pi].lo if pi < len(self.partitions) else 0
+            else:
+                lo = int(kk[got_in_range - 1]) + 1
+        # overlay MemTable entries in range
+        merged: dict[int, np.ndarray | None] = {}
+        for k, v in zip(out_k, out_v):
+            merged[k] = v
+        limit = max(out_k) if len(out_k) >= n else (1 << 64)
+        for k, e in self.mem.data.items():
+            if int(start_key) <= k <= limit:
+                merged[k] = None if e.tomb else e.val
+        items = sorted(
+            ((k, v) for k, v in merged.items() if v is not None),
+            key=lambda kv: kv[0],
+        )[:n]
+        if not items:
+            return np.zeros(0, np.uint64), np.zeros((0, self.cfg.vw), np.uint32)
+        return (
+            np.array([k for k, _ in items], np.uint64),
+            np.stack([v for _, v in items]),
+        )
+
+    def scan_batch(self, starts, n: int):
+        """Batched range scans (one jitted call per touched partition).
+
+        Returns (keys (Q, n) uint64, valid (Q, n)). Queries whose range
+        crosses a partition boundary fall back to the sequential path.
+        """
+        starts = np.asarray(starts, np.uint64)
+        q = len(starts)
+        out_k = np.zeros((q, n), np.uint64)
+        out_m = np.zeros((q, n), bool)
+        los = np.array([p.lo for p in self.partitions], np.uint64)
+        pidx = np.maximum(np.searchsorted(los, starts, side="right") - 1, 0)
+        width = n + max(8, n // 2)
+        for pi in np.unique(pidx):
+            sel = np.flatnonzero(pidx == pi)
+            remix, runset = self.partitions[pi].index()
+            sq = starts[sel]
+            pad = _pow2pad(len(sq))
+            sq = np.pad(sq, (0, pad - len(sq)))
+            qk = jnp.asarray(CK.pack_u64(sq))
+            keys, vals, valid, _ = self._query_mod().scan(
+                remix, runset, qk, width=width, **self._qkw()
+            )
+            keys = CK.unpack_u64(np.asarray(keys))[: len(sel)]
+            valid = np.asarray(valid)[: len(sel)]
+            hi = (
+                self.partitions[pi + 1].lo
+                if pi + 1 < len(self.partitions)
+                else 1 << 64
+            )
+            for row, qi in enumerate(sel):
+                kk = keys[row][valid[row]]
+                kk = kk[kk < hi][:n]
+                out_k[qi, : len(kk)] = kk
+                out_m[qi, : len(kk)] = True
+                if len(kk) < n and pi + 1 < len(self.partitions):
+                    kk2, _ = self.scan(int(starts[qi]), n)  # boundary fallback
+                    out_k[qi, : len(kk2)] = kk2[:n]
+                    out_m[qi] = False
+                    out_m[qi, : len(kk2)] = True
+        # memtable overlay (host merge) only if buffered entries exist
+        if len(self.mem):
+            for qi in range(q):
+                kk, _ = self.scan(int(starts[qi]), n)
+                out_k[qi, : len(kk)] = kk[:n]
+                out_m[qi] = False
+                out_m[qi, : len(kk)] = True
+        return out_k, out_m
+
+    # ---------------- stats / recovery ----------------
+    def write_amplification(self) -> float:
+        total = self.table_bytes_written + self.wal.bytes_written
+        return total / max(1, self.user_bytes)
+
+    def stats(self) -> dict:
+        return dict(
+            partitions=len(self.partitions),
+            tables=sum(len(p.tables) for p in self.partitions),
+            entries=sum(p.n_entries for p in self.partitions),
+            memtable=len(self.mem),
+            wa=self.write_amplification(),
+            wal_blocks=self.wal.used_blocks(),
+        )
+
+    def recover_memtable(self) -> MemTable:
+        """Rebuild the MemTable from the WAL's live virtual log (§4.3)."""
+        mem = MemTable(vw=self.cfg.vw)
+        for k, s, t, v in sorted(self.wal.replay(), key=lambda r: r[1]):
+            mem.put(k, v, s, t)
+        return mem

@@ -1,0 +1,203 @@
+"""Write-ahead log with *virtual logs* (paper §4.3).
+
+One physical file holds a sequence of 4 KB blocks. A *virtual log* is a
+mapping table (list of physical block ids + expected 1-bit epoch + validity
+bitmap). Garbage collection builds a new virtual log in the same file:
+blocks with >= 1/4 of their data still valid are remapped as-is (their
+bitmap masks dead records); sparser blocks are freed and their survivors
+rewritten. Each block's first byte carries the 1-bit epoch that flips on
+every physical overwrite, so recovery can distinguish remapped-valid blocks
+from stale *unwritten* blocks, exactly as in the paper.
+
+Record format inside a block (fixed width): key u64 | seq u32 | flags u32 |
+VW*u32 value. Records never span blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import struct
+
+import numpy as np
+
+BLOCK = 4096
+HDR = 8  # 1-bit epoch in byte 0 + u16 record count + padding
+
+
+def _rec_size(vw: int) -> int:
+    return 8 + 4 + 4 + 4 * vw
+
+
+@dataclasses.dataclass
+class BlockMap:
+    """Mapping-table entry for one block of a virtual log."""
+
+    phys: int  # physical block index in the file
+    epoch: int  # expected 1-bit value (paper: inverted for unwritten blocks)
+    written: bool  # False => 'unwritten' placeholder slot
+    bitmap: int  # validity bitmap over records (bit i = record i live)
+
+
+class VirtualLog:
+    """The active virtual log: mapping table + append cursor."""
+
+    def __init__(self, timestamp: int):
+        self.timestamp = timestamp
+        self.blocks: list[BlockMap] = []
+
+
+class WAL:
+    def __init__(self, path: str, vw: int = 2, capacity_blocks: int = 1 << 20):
+        self.path = path
+        self.vw = vw
+        self.rec_size = _rec_size(vw)
+        self.recs_per_block = (BLOCK - HDR) // self.rec_size
+        self.capacity_blocks = capacity_blocks
+        self.epoch_bits: dict[int, int] = {}  # phys block -> current 1-bit
+        self.free: list[int] = []
+        self.next_phys = 0
+        self.vlog = VirtualLog(timestamp=1)
+        self._pending: list[tuple[int, int, int, np.ndarray]] = []
+        self.bytes_written = 0  # physical write accounting (for WA ratios)
+        if not os.path.exists(path):
+            with open(path, "wb"):
+                pass
+
+    # ---------- append path ----------
+    def append(self, key: int, seq: int, tomb: bool, val: np.ndarray):
+        self._pending.append((key, seq, int(tomb), np.asarray(val, np.uint32)))
+        if len(self._pending) >= self.recs_per_block:
+            self._flush_pending()
+
+    def append_batch(self, keys, seqs, tombs, vals):
+        for k, s, t, v in zip(keys, seqs, tombs, vals):
+            self._pending.append((int(k), int(s), int(t), v))
+        while len(self._pending) >= self.recs_per_block:
+            self._flush_pending()
+
+    def _alloc_block(self) -> int:
+        if self.free:
+            return self.free.pop()
+        phys = self.next_phys
+        self.next_phys += 1
+        if phys >= self.capacity_blocks:
+            raise RuntimeError("WAL capacity exceeded (4 GB budget, §4.3)")
+        return phys
+
+    def _flush_pending(self):
+        n = min(len(self._pending), self.recs_per_block)
+        recs, self._pending = self._pending[:n], self._pending[n:]
+        phys = self._alloc_block()
+        epoch = self.epoch_bits.get(phys, 0) ^ 1  # flips on every overwrite
+        self.epoch_bits[phys] = epoch
+        buf = io.BytesIO()
+        buf.write(struct.pack("<BxH4x", epoch, n))
+        for k, s, t, v in recs:
+            buf.write(struct.pack("<QII", k, s, t))
+            buf.write(np.asarray(v, np.uint32).tobytes())
+        data = buf.getvalue().ljust(BLOCK, b"\0")
+        with open(self.path, "r+b") as f:
+            f.seek(phys * BLOCK)
+            f.write(data)
+        self.bytes_written += BLOCK
+        self.vlog.blocks.append(
+            BlockMap(phys=phys, epoch=epoch, written=True,
+                     bitmap=(1 << n) - 1)
+        )
+
+    def sync(self):
+        if self._pending:
+            self._flush_pending()
+
+    # ---------- read / recovery path ----------
+    def _read_block(self, phys: int):
+        with open(self.path, "rb") as f:
+            f.seek(phys * BLOCK)
+            data = f.read(BLOCK)
+        epoch, n = struct.unpack_from("<BxH", data, 0)
+        recs = []
+        off = HDR
+        for _ in range(n):
+            k, s, t = struct.unpack_from("<QII", data, off)
+            v = np.frombuffer(
+                data, np.uint32, count=self.vw, offset=off + 16
+            ).copy()
+            recs.append((k, s, bool(t), v))
+            off += self.rec_size
+        return epoch, recs
+
+    def replay(self):
+        """Yield all live records of the current virtual log, in log order."""
+        self.sync()
+        for bm in self.vlog.blocks:
+            if not bm.written:
+                continue
+            epoch, recs = self._read_block(bm.phys)
+            if epoch != bm.epoch:  # stale block: treat as unwritten (§4.3)
+                continue
+            for i, rec in enumerate(recs):
+                if bm.bitmap >> i & 1:
+                    yield rec
+
+    # ---------- garbage collection ----------
+    def gc(self, live_keys: set[int]):
+        """Build a new virtual log keeping only records of ``live_keys``.
+
+        Blocks with >= 1/4 valid records are remapped with a masking bitmap;
+        others are freed and their survivors rewritten (batched re-append).
+        """
+        self.sync()
+        new = VirtualLog(timestamp=self.vlog.timestamp + 1)
+        rewrite: list[tuple[int, int, int, np.ndarray]] = []
+        freed = []
+        for bm in self.vlog.blocks:
+            if not bm.written:
+                continue
+            epoch, recs = self._read_block(bm.phys)
+            if epoch != bm.epoch:
+                continue
+            live = [
+                i
+                for i, (k, s, t, v) in enumerate(recs)
+                if (bm.bitmap >> i & 1) and k in live_keys
+            ]
+            if len(recs) and len(live) * 4 >= len(recs):
+                bitmap = 0
+                for i in live:
+                    bitmap |= 1 << i
+                new.blocks.append(
+                    BlockMap(phys=bm.phys, epoch=bm.epoch, written=True,
+                             bitmap=bitmap)
+                )
+            else:
+                for i in live:
+                    k, s, t, v = recs[i]
+                    rewrite.append((k, s, int(t), v))
+                freed.append(bm.phys)
+                # record as unwritten in the new mapping table with the
+                # *inverted* epoch so a scan detects it as not-yet-written
+                new.blocks.append(
+                    BlockMap(
+                        phys=bm.phys,
+                        epoch=self.epoch_bits.get(bm.phys, 0) ^ 1,
+                        written=False,
+                        bitmap=0,
+                    )
+                )
+        self.vlog = new
+        self.free.extend(freed)
+        self._pending.extend(rewrite)
+        self.sync()
+
+    def manifest(self) -> str:
+        return json.dumps(
+            dict(
+                timestamp=self.vlog.timestamp,
+                blocks=[dataclasses.asdict(b) for b in self.vlog.blocks],
+            )
+        )
+
+    def used_blocks(self) -> int:
+        return sum(1 for b in self.vlog.blocks if b.written)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for REMIX hot paths, with jnp oracles in ref.py.
+
+  - selector_decode: in-group occurrence decode (paper §3.2 SIMD counting)
+  - anchor_search:   batched compare-and-count anchor index search
+  - ops:             jit'd wrappers composing kernels into seek/get/scan
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.anchor_search import anchor_le_count, anchor_search  # noqa: F401
+from repro.kernels.selector_decode import selector_decode  # noqa: F401

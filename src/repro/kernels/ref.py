@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (the ref implementations)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core.view import NEWEST_BIT, PLACEHOLDER
+
+
+def selector_decode_ref(selectors: jnp.ndarray, cursors: jnp.ndarray, *, r: int):
+    """Oracle for kernels.selector_decode: (Q,D)+(Q,R) → runid/absidx/newest/pad."""
+    sel = selectors.astype(jnp.int32)
+    pad = sel == PLACEHOLDER
+    newest = ((sel & NEWEST_BIT) != 0) & ~pad
+    runid = jnp.where(pad, 0, sel & 0x7F)
+    onehot = (runid[..., None] == jnp.arange(r)) & ~pad[..., None]
+    onehot = onehot.astype(jnp.int32)
+    occ = jnp.cumsum(onehot, axis=-2) - onehot
+    occ = jnp.sum(occ * onehot, axis=-1)
+    base = jnp.take_along_axis(cursors.astype(jnp.int32), runid, axis=-1)
+    return runid, base + occ, newest, pad
+
+
+def anchor_search_ref(anchors: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.anchor_search: target group = upper_bound - 1, >= 0."""
+    return jnp.maximum(K.upper_bound(anchors, queries) - 1, 0)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: in-group run-selector decode (paper §3.2).
+
+The paper counts selector occurrences with SIMD instructions to place run
+cursors inside a group. The TPU-native formulation: for a (block, D) tile of
+selectors, compute each slot's exclusive occurrence count of its own run via
+an unrolled one-hot + prefix-sum on the VPU, then add the group's cursor
+offsets to obtain absolute in-run indices.
+
+Block layout: selectors tile (BQ, D) — D is the lane dimension (group sizes
+16/32/64 are lane-friendly); R is static and unrolled. All compute is
+elementwise/prefix ops in VMEM; no gathers inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.view import NEWEST_BIT, PLACEHOLDER
+
+
+def _decode_kernel(sel_ref, cur_ref, runid_ref, absidx_ref, flags_ref, *, r: int):
+    sel = sel_ref[...].astype(jnp.int32)  # (BQ, D)
+    pad = sel == PLACEHOLDER
+    newest = (sel & NEWEST_BIT) != 0
+    runid = jnp.where(pad, 0, sel & 0x7F)
+    occ = jnp.zeros_like(runid)
+    base = jnp.zeros_like(runid)
+    for rr in range(r):  # R static: unrolled one-hot prefix counting
+        hit = ((runid == rr) & ~pad).astype(jnp.int32)
+        cnt = jnp.cumsum(hit, axis=1) - hit  # exclusive prefix count
+        occ = occ + cnt * hit
+        # base uses runid even on placeholder slots (matches ref.py contract)
+        base = base + (runid == rr).astype(jnp.int32) * cur_ref[:, rr][:, None]
+    runid_ref[...] = runid
+    absidx_ref[...] = base + occ
+    flags_ref[...] = (
+        newest.astype(jnp.int32) | (pad.astype(jnp.int32) << 1)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("r", "block_q", "interpret"))
+def selector_decode(
+    selectors: jnp.ndarray,  # (Q, D) uint8/int32 group selector tiles
+    cursors: jnp.ndarray,  # (Q, R) int32 cursor offsets at group heads
+    *,
+    r: int,
+    block_q: int = 128,
+    interpret: bool | None = None,
+):
+    """Decode selector tiles → (runid (Q,D), absidx (Q,D), newest, pad)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q, d = selectors.shape
+    bq = min(block_q, q)
+    grid = (pl.cdiv(q, bq),)
+    runid, absidx, flags = pl.pallas_call(
+        functools.partial(_decode_kernel, r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, cursors.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, d), jnp.int32),
+            jax.ShapeDtypeStruct((q, d), jnp.int32),
+            jax.ShapeDtypeStruct((q, d), jnp.int32),
+        ],
+        interpret=interpret,
+    )(selectors.astype(jnp.int32), cursors.astype(jnp.int32))
+    newest = (flags & 1) != 0
+    pad = (flags & 2) != 0
+    return runid, absidx, newest, pad

@@ -1,0 +1,315 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds abstract inputs (ShapeDtypeStruct — zero
+allocation), jits the step with explicit in/out shardings on the production
+mesh, compiles, and records memory_analysis / cost_analysis / the HLO
+collective schedule for §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--out results.jsonl]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+from repro.models import model as M
+from repro.models.layers import split_params
+from repro.models.sharding import ShardingRules, get_rules, set_rules
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]"
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = dict(
+    f64=8, f32=4, bf16=2, f16=2, s64=8, u64=8, s32=4, u32=4, s16=2, u16=2,
+    s8=1, u8=1, pred=1, c64=8, c128=16,
+)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO.
+
+    NOTE: top-level only — while-loop bodies are NOT multiplied by trip
+    count here; launch/roofline.py does the trip-corrected accounting.
+    """
+    from repro.launch.roofline import collective_line_bytes
+
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        mc = collective_line_bytes(line.strip())
+        if mc:
+            kind, size = mc
+            out[kind] = out.get(kind, 0) + size
+            count[kind] = count.get(kind, 0) + 1
+    return dict(bytes=out, counts=count, total=sum(out.values()))
+
+
+def _shardings_for_params(cfg, mesh, rules):
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+    from repro.models.layers import Param, is_param
+
+    pv = jax.tree.map(lambda p: p.value, params, is_leaf=is_param)
+    pax = jax.tree.map(lambda p: p.axes, params, is_leaf=is_param)
+    shardings = jax.tree.map(
+        lambda v, ax: rules.named(ax, shape=v.shape),
+        pv, pax, is_leaf=lambda x: hasattr(x, "shape") or isinstance(x, tuple),
+    )
+    return pv, shardings
+
+
+def _cache_sharding(cfg, cache, mesh, rules):
+    """Decode-cache shardings: (L, B, S, KVH, hd) → batch + cache_seq."""
+    def spec_for(path_leaf_shape):
+        nd = len(path_leaf_shape)
+        if nd == 5:  # (L, B, S, KVH, hd)
+            return rules.physical(
+                (None, "batch", "cache_seq", "kv_heads", None),
+                shape=path_leaf_shape,
+            )
+        if nd == 4:  # (L, B, S, latent) — MLA
+            return rules.physical(
+                (None, "batch", "cache_seq", None), shape=path_leaf_shape
+            )
+        if nd == 5 or nd == 3:
+            return rules.physical((None, "batch", None), shape=path_leaf_shape)
+        return rules.physical(
+            (None, "batch") + (None,) * (nd - 2), shape=path_leaf_shape
+        )
+
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, spec_for(l.shape)), cache
+    )
+
+
+def run_cell(
+    arch: str, shape: str, multi_pod: bool, moment_dtype: str = "float32",
+    overrides: dict | None = None,
+):
+    """Lower + compile one cell; returns the result record."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh=mesh)
+    set_rules(rules)
+    rec = dict(
+        arch=arch, shape=shape,
+        mesh="2x16x16" if multi_pod else "16x16",
+        chips=int(np.prod(list(mesh.shape.values()))),
+    )
+    if arch == "remixdb":
+        return _run_remixdb_cell(rec, mesh, rules, t0)
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+        rec["overrides"] = dict(overrides)
+    okay, why = cell_supported(cfg, shape)
+    if not okay:
+        rec.update(status="skipped", reason=why)
+        return rec
+    spec = input_specs(cfg, shape)
+    pv, pshard = _shardings_for_params(cfg, mesh, rules)
+    with jax.set_mesh(mesh):
+        if spec["kind"] == "train":
+            opt_cfg = OptConfig(moment_dtype=moment_dtype)
+            opt = jax.eval_shape(lambda: init_opt_state(opt_cfg, pv))
+            oshard = dict(
+                mu=pshard, nu=pshard,
+                step=NamedSharding(mesh, P()),
+            )
+            bshard = jax.tree.map(
+                lambda l: NamedSharding(
+                    mesh,
+                    rules.physical(
+                        ("batch",) + (None,) * (len(l.shape) - 1), shape=l.shape
+                    ),
+                ),
+                spec["batch"],
+            )
+            step_fn = make_train_step(cfg, opt_cfg)
+            metric_shard = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(
+                    pshard, oshard,
+                    dict(loss=metric_shard, grad_norm=metric_shard,
+                         lr=metric_shard),
+                ),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(pv, opt, spec["batch"])
+        elif spec["kind"] == "prefill":
+            bshard = jax.tree.map(
+                lambda l: NamedSharding(
+                    mesh,
+                    rules.physical(
+                        ("batch",) + (None,) * (len(l.shape) - 1), shape=l.shape
+                    ),
+                ),
+                spec["batch"],
+            )
+            fn = lambda p, b: M.prefill(cfg, p, b)
+            jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(pv, spec["batch"])
+        else:  # decode
+            cache = spec["cache"]
+            cshard = _cache_sharding(cfg, cache, mesh, rules)
+            tshard = NamedSharding(
+                mesh, rules.physical(("batch",), shape=spec["token"].shape)
+            )
+            pos = SHAPES[shape]["seq"] - 1
+
+            def fn(p, c, tok):
+                return M.decode_step(cfg, p, c, tok, pos)
+
+            jitted = jax.jit(
+                fn, in_shardings=(pshard, cshard, tshard), donate_argnums=(1,)
+            )
+            lowered = jitted.lower(pv, cache, spec["token"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return _finish_record(rec, cfg, compiled, t_lower, t_compile, spec["kind"])
+
+
+HLO_DIR = os.environ.get("DRYRUN_HLO_DIR")
+
+
+def _finish_record(rec, cfg, compiled, t_lower, t_compile, kind):
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    if HLO_DIR:
+        import gzip
+
+        os.makedirs(HLO_DIR, exist_ok=True)
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.hlo.gz"
+        with gzip.open(os.path.join(HLO_DIR, name), "wt") as f:
+            f.write(txt)
+    rec.update(
+        status="ok",
+        kind=kind,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops=float(ca.get("flops", -1)),
+        bytes_accessed=float(ca.get("bytes accessed", -1)),
+        arg_bytes=int(ma.argument_size_in_bytes),
+        out_bytes=int(ma.output_size_in_bytes),
+        temp_bytes=int(ma.temp_size_in_bytes),
+        alias_bytes=int(ma.alias_size_in_bytes),
+        collectives=coll,
+    )
+    if cfg is not None and hasattr(cfg, "n_params"):
+        rec["n_params"] = cfg.n_params()
+        rec["active_params"] = cfg.active_params()
+    return rec
+
+
+def _run_remixdb_cell(rec, mesh, rules, t0):
+    from repro.configs import get_config as gc
+    from repro.db.sharded import abstract_state, make_sharded_get
+
+    cfg = gc("remixdb")
+    n_shards = int(np.prod(list(mesh.shape.values())))
+    remix, runset = abstract_state(cfg, n_shards)
+    step, qspec = make_sharded_get(cfg, mesh)
+    queries = jax.ShapeDtypeStruct((cfg.query_batch, cfg.kw), jnp.uint32)
+    sspec = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                jax.tree.map(lambda _: sspec, remix,
+                             is_leaf=lambda x: hasattr(x, "shape")),
+                jax.tree.map(lambda _: sspec, runset,
+                             is_leaf=lambda x: hasattr(x, "shape")),
+                NamedSharding(mesh, qspec),
+            ),
+        )
+        lowered = jitted.lower(remix, runset, queries)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    rec["shape"] = f"get_{cfg.query_batch}"
+    return _finish_record(rec, None, compiled, t_lower, t_compile, "kvstore")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument(
+        "--override", default=None,
+        help='JSON dict of ModelConfig overrides, e.g. {"param_dtype":"bfloat16"}',
+    )
+    args = ap.parse_args()
+    overrides = json.loads(args.override) if args.override else None
+
+    cells = []
+    if args.all:
+        for arch in ARCHS + ["remixdb"]:
+            shapes = list(SHAPES) if arch != "remixdb" else ["service"]
+            for shape in shapes:
+                for mp in ([False, True] if args.multipod else [False]):
+                    cells.append((arch, shape, mp))
+    else:
+        cells.append((args.arch, args.shape, args.multipod))
+
+    out = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch, shape, mp in cells:
+        try:
+            rec = run_cell(
+                arch, shape, mp, moment_dtype=args.moment_dtype,
+                overrides=overrides,
+            )
+        except Exception as e:
+            failures += 1
+            rec = dict(
+                arch=arch, shape=shape, mesh="2x16x16" if mp else "16x16",
+                status="error", error=f"{type(e).__name__}: {e}",
+            )
+            traceback.print_exc()
+        line = json.dumps(rec)
+        print(line, flush=True)
+        if out:
+            out.write(line + "\n")
+            out.flush()
+    if out:
+        out.close()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production meshes. 16×16 = one v5e pod slice (256 chips); the multi-pod
+mesh adds a leading 'pod' axis (2 pods = 512 chips, DCN-connected)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,334 @@
+"""Roofline analysis from dry-run artifacts.
+
+Terms per (arch × shape × mesh), all in seconds on TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips × 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+  collective = collective_bytes / (chips × 50e9 B/s per ICI link)
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically), so lax.scan-over-layers programs are undercounted by ~L×.
+This module therefore re-derives FLOPs/bytes by walking the optimized HLO:
+every dot/convolution is costed from its shapes, and ops inside a while
+body are multiplied by the loop's trip count (recovered from the loop
+condition's comparison constant). Collective bytes likewise multiply.
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params — the
+"useful compute" yardstick; HLO/MODEL ratio flags remat & dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+DTYPE_BYTES = dict(
+    f64=8, f32=4, bf16=2, f16=2, s64=8, u64=8, s32=4, u32=4, s16=2, u16=2,
+    s8=1, u8=1, pred=1, c64=8, c128=16, u4=1, s4=1,
+)
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE = re.compile(r"while\(.*\).*condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+# result may be a scalar shape or a tuple of shapes (all-to-all emits tuples)
+_COLL = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*(all-gather|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute)\("
+)
+
+
+def collective_line_bytes(line: str):
+    """(kind, bytes) if this HLO line applies a collective op, else None."""
+    m = _COLL.search(line)
+    if not m:
+        return None
+    total = sum(_bytes_of(dt, dims) for dt, dims in _SHAPE.findall(m.group(1)))
+    return m.group(2), total
+_CONST_CMP = re.compile(r"compare\(.*\)")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+
+
+def _bytes_of(dt: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return DTYPE_BYTES.get(dt, 4) * n
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    whiles: list = dataclasses.field(default_factory=list)  # (cond, body)
+    calls: list = dataclasses.field(default_factory=list)  # fusion/call targets
+
+
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_RESULT = re.compile(r"^%?[\w\.\-]+ = ([a-z0-9]+)\[([0-9,]*)\]")
+
+
+_DEF = re.compile(r"^%?([\w\.\-]+) = ")
+_DOT_OPS = re.compile(r"dot\(%?([\w\.\-]+), %?([\w\.\-]+)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def parse_hlo(text: str):
+    """Split into computations and cost each one (dots, collectives, whiles).
+
+    HLO operands are variable references, so each computation carries a
+    symbol table (instruction → shape) used to resolve dot operand shapes.
+    """
+    comps: dict[str, CompCost] = {}
+    consts: dict[str, int] = {}  # computation -> max int constant (trip bound)
+    cur = None
+    symtab: dict[str, tuple] = {}
+    pending_dots: list[tuple] = []
+
+    def close_comp():
+        if cur is None:
+            return
+        cc = comps[cur]
+        for out_dt, out_dims, lhs, rhs, cdims in pending_dots:
+            lshape = symtab.get(lhs)
+            rshape = symtab.get(rhs)
+            if lshape is None:
+                continue
+            lhs_dims = [int(d) for d in lshape[1].split(",") if d]
+            k = 1.0
+            if cdims is not None and lhs_dims:
+                for i in cdims.split(","):
+                    if i:
+                        k *= lhs_dims[int(i)]
+            elif lhs_dims:
+                k = float(lhs_dims[-1])
+            cc.flops += 2.0 * _elems(out_dims) * k
+            cc.bytes += _bytes_of(out_dt, out_dims) + _bytes_of(*lshape)
+            if rshape is not None:
+                cc.bytes += _bytes_of(*rshape)
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{"):
+            m = _COMP_HDR.match(line.rstrip("{").strip())
+            if m:
+                close_comp()
+                cur = m.group(1)
+                comps[cur] = CompCost()
+                consts[cur] = 0
+                symtab = {}
+                pending_dots = []
+                continue
+        if cur is None or line == "}":
+            if line == "}":
+                close_comp()
+                cur = None
+            continue
+        cc = comps[cur]
+        md = _DEF.match(line)
+        if md:
+            ms = _SHAPE.search(line[md.end() - 2 :])
+            if ms:
+                symtab[md.group(1)] = (ms.group(1), ms.group(2))
+        for m in _CONSTANT.finditer(line):
+            consts[cur] = max(consts[cur], int(m.group(1)))
+        mw = _WHILE.search(line)
+        if mw:
+            cc.whiles.append((mw.group(1), mw.group(2)))
+            continue
+        mc = collective_line_bytes(line)
+        if mc:
+            k, b = mc
+            cc.coll_bytes += b
+            cc.coll_by_kind[k] = cc.coll_by_kind.get(k, 0.0) + b
+            continue
+        if " fusion(" in line or " call(" in line or " conditional(" in line:
+            for tgt in _CALLS.findall(line):
+                cc.calls.append(tgt)
+            continue
+        if " dot(" in line:
+            mr = _RESULT.match(line)
+            mo = _DOT_OPS.search(line)
+            if not (mr and mo):
+                continue
+            mk = _LHS_CDIMS.search(line)
+            pending_dots.append(
+                (
+                    mr.group(1), mr.group(2), mo.group(1), mo.group(2),
+                    mk.group(1) if mk else None,
+                )
+            )
+    close_comp()
+    return comps, consts
+
+
+def total_cost(text: str) -> dict:
+    comps, consts = parse_hlo(text)
+
+    memo: dict[str, tuple] = {}
+
+    def cost_of(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 12:
+            return (0.0, 0.0, 0.0, {})
+        cc = comps[name]
+        f, b, c = cc.flops, cc.bytes, cc.coll_bytes
+        kinds = dict(cc.coll_by_kind)
+        for tgt in cc.calls:  # fusions / calls execute once per reference
+            tf, tb, tc, tk = cost_of(tgt, depth + 1)
+            f += tf
+            b += tb
+            c += tc
+            for k, v in tk.items():
+                kinds[k] = kinds.get(k, 0.0) + v
+        for cond, body in cc.whiles:
+            trips = max(1, consts.get(cond, 1))
+            bf, bb, bc, bk = cost_of(body, depth + 1)
+            f += bf * trips
+            b += bb * trips
+            c += bc * trips
+            for k, v in bk.items():
+                kinds[k] = kinds.get(k, 0.0) + v * trips
+        memo[name] = (f, b, c, kinds)
+        return memo[name]
+
+    # entry = the computation containing whiles at top level; XLA text marks
+    # it with ENTRY; find it as the computation whose name contains 'main'
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None:  # fallback: computation with most flops after expansion
+        entry = max(comps, key=lambda n: cost_of(n)[0])
+    f, b, c, kinds = cost_of(entry)
+    return dict(flops=f, bytes=b, coll_bytes=c, coll_by_kind=kinds, entry=entry)
+
+
+def analyze_cell(rec: dict, hlo_path: str | None = None) -> dict:
+    """Compute roofline terms for one dry-run record (+ optional HLO file)."""
+    chips = rec.get("chips", 256)
+    if hlo_path:
+        with gzip.open(hlo_path, "rt") as f:
+            text = f.read()
+        cost = total_cost(text)
+        flops_dev = cost["flops"]
+        bytes_dev = max(cost["bytes"], rec.get("bytes_accessed", 0))
+        coll_dev = cost["coll_bytes"]
+        coll_kinds = cost["coll_by_kind"]
+    else:
+        flops_dev = rec.get("flops", 0)
+        bytes_dev = rec.get("bytes_accessed", 0)
+        coll_dev = rec.get("collectives", {}).get("total", 0)
+        coll_kinds = rec.get("collectives", {}).get("bytes", {})
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+    out = dict(
+        rec,
+        flops_per_dev=flops_dev,
+        bytes_per_dev=bytes_dev,
+        coll_bytes_per_dev=coll_dev,
+        coll_by_kind=coll_kinds,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+    )
+    # MODEL_FLOPS yardstick
+    n_act = rec.get("active_params")
+    if n_act and rec.get("status") == "ok":
+        if rec.get("kind") == "train":
+            from repro.launch.shapes import SHAPES
+
+            info = SHAPES[rec["shape"]]
+            tokens = info["batch"] * info["seq"]
+            model_flops = 6.0 * n_act * tokens
+        elif rec.get("kind") == "prefill":
+            from repro.launch.shapes import SHAPES
+
+            info = SHAPES[rec["shape"]]
+            tokens = info["batch"] * info["seq"]
+            model_flops = 2.0 * n_act * tokens
+        else:  # decode: one token per sequence
+            from repro.launch.shapes import SHAPES
+
+            info = SHAPES[rec["shape"]]
+            model_flops = 2.0 * n_act * info["batch"]
+        out["model_flops"] = model_flops
+        hlo_total = flops_dev * chips
+        out["useful_ratio"] = model_flops / hlo_total if hlo_total else 0.0
+        out["roofline_frac"] = (
+            (model_flops / (chips * PEAK_FLOPS)) / max(terms.values())
+            if max(terms.values()) > 0
+            else 0.0
+        )
+    return out
+
+
+def main():
+    import argparse, os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="dryrun results.jsonl")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = []
+    with open(args.results) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("status") != "ok":
+                rows.append(rec)
+                continue
+            hlo = None
+            if args.hlo_dir:
+                p = os.path.join(
+                    args.hlo_dir,
+                    f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.hlo.gz",
+                )
+                hlo = p if os.path.exists(p) else None
+            rows.append(analyze_cell(rec, hlo))
+    text = json.dumps(rows, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    # table
+    hdr = f"{'arch':22s} {'shape':12s} {'mesh':8s} {'compute':>9s} {'memory':>9s} {'collect':>9s} {'bneck':>10s} {'useful':>7s} {'roofl%':>7s}"
+    print(hdr)
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r.get('arch','?'):22s} {r.get('shape','?'):12s} {r.get('mesh','?'):8s} -- {r.get('status')}: {r.get('reason', r.get('error',''))[:60]}")
+            continue
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute']*1e3:8.2f}m {r['t_memory']*1e3:8.2f}m "
+            f"{r['t_collective']*1e3:8.2f}m {r['bottleneck']:>10s} "
+            f"{r.get('useful_ratio', 0):7.2f} {100*r.get('roofline_frac', 0):6.1f}%"
+        )
+
+
+if __name__ == "__main__":
+    main()

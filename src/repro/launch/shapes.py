@@ -1,0 +1,72 @@
+"""Assigned input shapes and abstract input specs per (arch × shape) cell.
+
+Shapes (LM family): train_4k / prefill_32k / decode_32k / long_500k.
+``decode_*`` and ``long_*`` lower ``serve_step`` (one token against a KV
+cache of seq_len); ``long_500k`` only for sub-quadratic archs (ssm/hybrid).
+All inputs are ShapeDtypeStructs — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode skipped (DESIGN.md)"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Abstract inputs for the cell's step function (tokens/labels/cache...)."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            batch = dict(
+                frontend=sds((b, s, cfg.d_model), jnp.float32),
+                tokens=sds((b, s), jnp.int32),
+                labels=sds((b, s), jnp.int32),
+            )
+        elif cfg.frontend == "vlm":
+            batch = dict(
+                tokens=sds((b, s - cfg.frontend_len), jnp.int32),
+                labels=sds((b, s - cfg.frontend_len), jnp.int32),
+                frontend=sds((b, cfg.frontend_len, cfg.d_model), jnp.float32),
+            )
+        else:
+            batch = dict(
+                tokens=sds((b, s), jnp.int32), labels=sds((b, s), jnp.int32)
+            )
+        if kind == "prefill":
+            batch.pop("labels")
+        return dict(kind=kind, batch=batch)
+    # decode
+    from repro.models import model as M
+
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    spec = dict(
+        kind="decode",
+        cache=cache,
+        token=sds((b,), jnp.int32),
+        pos=s - 1,
+    )
+    if cfg.family == "encdec":
+        spec["enc_out"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    return spec

@@ -1,0 +1,179 @@
+"""REMIX-indexed KV-page table: the paper's index applied to LM serving.
+
+Decoded/prefilled KV pages are registered in immutable *generations*: each
+generation is one sorted run keyed by a 64-bit prefix hash, valued by a page
+slot in the pool. Generations accumulate like L0 tables in an LSM; a REMIX
+over them gives one-binary-search lookup of the longest cached prefix and a
+comparison-free walk over a sequence's pages (paper §3 applied to serving
+metadata). Stale entries (evicted slots) are superseded by newer runs via
+REMIX's versioning (newest-bit) — no rewrite of old generations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as CK
+from repro.core import query as Q
+from repro.core.remix import build_remix
+from repro.core.runs import make_run
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+_M64 = (1 << 64) - 1
+
+
+def chain_hash(h: int, tokens: np.ndarray) -> int:
+    """FNV-1a over token ids — the page key (stable across runs)."""
+    h = int(h)
+    for t in np.asarray(tokens).tolist():
+        h = ((h ^ int(t)) * FNV_PRIME) & _M64
+    return h
+
+
+def prefix_hash(tokens: np.ndarray) -> int:
+    return chain_hash(FNV_OFFSET, tokens)
+
+
+class RemixPageTable:
+    """LSM-of-generations page table with a REMIX global view."""
+
+    def __init__(self, d: int = 32, max_runs: int = 8):
+        self.d = d
+        self.max_runs = max_runs
+        self.runs: list = []
+        self.gen = 0
+        self._pending_keys: list[int] = []
+        self._pending_vals: list[tuple[int, int]] = []
+        self._index = None
+        self.lookups = 0
+
+    def add(self, key: np.uint64, slot: int, length: int):
+        self._pending_keys.append(int(key))
+        self._pending_vals.append((slot, length))
+
+    def flush_generation(self):
+        """Seal pending entries into a new immutable run + rebuild REMIX."""
+        if not self._pending_keys:
+            return
+        keys = np.array(self._pending_keys, np.uint64)
+        vals = np.array(self._pending_vals, np.uint32)
+        self.gen += 1
+        self.runs.append(make_run(keys, vals, seq=self.gen))
+        self._pending_keys, self._pending_vals = [], []
+        if len(self.runs) > self.max_runs:  # tiered merge of generations
+            from repro.db.partition import Table, merge_tables
+
+            tabs = [
+                Table(
+                    keys=CK.unpack_u64(np.asarray(r.keys)),
+                    vals=np.asarray(r.vals),
+                    seq=np.asarray(r.seq),
+                    tomb=np.asarray(r.tomb),
+                )
+                for r in self.runs
+            ]
+            merged = merge_tables(tabs)
+            self.runs = [
+                make_run(merged.keys, merged.vals, seq=merged.seq, sort=False)
+            ]
+        self._index = None
+
+    def index(self):
+        if self._index is None:
+            if not self.runs:
+                return None
+            self._index = build_remix(self.runs, d=max(self.d, len(self.runs)))
+        return self._index
+
+    def lookup_batch(self, hashes: np.ndarray):
+        """Batched point lookups → (found (Q,), slot (Q,), length (Q,))."""
+        idx = self.index()
+        self.lookups += len(hashes)
+        if idx is None:
+            z = np.zeros(len(hashes), np.int64)
+            return np.zeros(len(hashes), bool), z, z
+        remix, runset = idx
+        qk = jnp.asarray(CK.pack_u64(np.asarray(hashes, np.uint64)))
+        found, vals = Q.get(remix, runset, qk)
+        vals = np.asarray(vals)
+        return np.asarray(found), vals[:, 0].astype(np.int64), vals[:, 1].astype(np.int64)
+
+
+class PrefixCache:
+    """Prefix KV reuse: longest cached prefix via REMIX chained-hash lookup.
+
+    The pool holds full-layer KV pages of ``page_size`` tokens; ``match``
+    probes hashes of growing prefixes (one *batched* REMIX lookup — the
+    paper's batched-seek efficiency on the serving path), ``register``
+    inserts new pages into the pending generation.
+    """
+
+    def __init__(self, cfg, n_pages: int, page_size: int = 16, d: int = 32):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        hd = cfg.hd
+        self.pool_k = np.zeros(
+            (n_pages, cfg.n_layers, page_size, cfg.n_kv_heads, hd), np.float16
+        )
+        self.pool_v = np.zeros_like(self.pool_k)
+        self.next_slot = 0
+        self.table = RemixPageTable(d=d)
+        self.hits = 0
+        self.misses = 0
+
+    def _alloc(self) -> int:
+        slot = self.next_slot % self.n_pages  # ring eviction
+        self.next_slot += 1
+        return slot
+
+    def register(self, tokens: np.ndarray, k_cache: np.ndarray, v_cache: np.ndarray):
+        """Register all complete pages of a finished sequence.
+
+        k_cache/v_cache: (L, S, KVH, hd) single-sequence caches.
+        """
+        ps = self.page_size
+        h = FNV_OFFSET
+        for pg in range(len(tokens) // ps):
+            h = chain_hash(h, tokens[pg * ps : (pg + 1) * ps])
+            slot = self._alloc()
+            self.pool_k[slot] = np.asarray(
+                k_cache[:, pg * ps : (pg + 1) * ps], np.float16
+            )
+            self.pool_v[slot] = np.asarray(
+                v_cache[:, pg * ps : (pg + 1) * ps], np.float16
+            )
+            self.table.add(h, slot, (pg + 1) * ps)
+        self.table.flush_generation()
+
+    def match(self, tokens: np.ndarray):
+        """Longest cached prefix → (n_tokens_cached, [slots...])."""
+        ps = self.page_size
+        n_pages = len(tokens) // ps
+        if n_pages == 0:
+            return 0, []
+        hashes = []
+        h = FNV_OFFSET
+        for pg in range(n_pages):
+            h = chain_hash(h, tokens[pg * ps : (pg + 1) * ps])
+            hashes.append(h)
+        found, slots, _ = self.table.lookup_batch(np.array(hashes, np.uint64))
+        out = []
+        for pg in range(n_pages):
+            if not found[pg]:
+                break
+            out.append(int(slots[pg]))
+        if out:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return len(out) * ps, out
+
+    def gather(self, slots: list[int]):
+        """Assemble (L, n_tokens, KVH, hd) caches from pooled pages."""
+        k = np.concatenate([self.pool_k[s] for s in slots], axis=1)
+        v = np.concatenate([self.pool_v[s] for s in slots], axis=1)
+        return k, v

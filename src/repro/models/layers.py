@@ -1,0 +1,625 @@
+"""Model building blocks, pure JAX (no flax): norms, rope, attention
+(GQA / MLA / local+softcap / flash-chunked), gated MLP, MoE, Mamba2 SSD.
+
+Params are pytrees of ``Param(value, axes)`` where ``axes`` are *logical*
+sharding axes (see models/sharding.py); ``split_params`` separates values
+from the sharding annotation tree so both always share one structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import shard
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A parameter leaf: array value + static logical sharding axes."""
+
+    value: jnp.ndarray
+    axes: tuple = dataclasses.field(metadata=dict(static=True))
+
+
+def is_param(x):
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return vals, axes
+
+
+def mk(key, shape, axes, scale=None, dtype=jnp.float32):
+    if scale is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    v = jax.random.normal(key, shape, dtype) * scale
+    return Param(v, axes)
+
+
+def ones(shape, axes):
+    return Param(jnp.ones(shape, jnp.float32), axes)
+
+
+def zeros(shape, axes):
+    return Param(jnp.zeros(shape, jnp.float32), axes)
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- norms/rope
+def rmsnorm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotate-half RoPE. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ------------------------------------------------------------ flash attention
+def flash_attention(
+    q, k, v, *, causal=True, window=None, cap=None, q_offset=0, kv_len=None,
+    block=512, pin_kv=True,
+):
+    """Blocked online-softmax attention in pure JAX.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd_k/hd_v). GQA via head-group
+    reshape; the value width may differ from the qk width (MLA). Never
+    materializes (Sq, Sk).
+
+    The computation is a lax.scan over a STATIC list of (q-block, kv-block)
+    pairs; for self-attention with ``causal=True`` the above-diagonal pairs
+    are pruned, halving both FLOPs and HBM traffic versus scanning the full
+    rectangle (§Perf it: "triangular flash"). ``q_offset`` is the absolute
+    position of q[0]; ``kv_len`` masks the valid prefix of k/v.
+    """
+    orig_dtype = q.dtype
+    b, sq, h, hd = q.shape
+    hd_v = v.shape[-1]
+    sk, kvh = k.shape[1], k.shape[2]
+    groups = h // max(1, kvh)
+    scale = 1.0 / math.sqrt(hd)
+    blk_q = min(block, max(64, sq))
+    nq = (sq + blk_q - 1) // blk_q
+    padq = nq * blk_q - sq
+    nk = (sk + block - 1) // block
+    padk = nk * block - sk
+    q = (q * scale).astype(jnp.float32)
+    qg = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+    qg = qg.reshape(b, nq, blk_q, kvh, groups, hd)
+    kp = jnp.pad(k, ((0, 0), (0, padk), (0, 0), (0, 0))).astype(jnp.float32)
+    vp = jnp.pad(v, ((0, 0), (0, padk), (0, 0), (0, 0))).astype(jnp.float32)
+    kp = kp.reshape(b, nk, block, kvh, hd)
+    vp = vp.reshape(b, nk, block, kvh, hd_v)
+    # pin K/V blocks replicated over the model axis: GQA kv heads are few
+    # and small; without this GSPMD sub-shards kvh and re-gathers a kv
+    # block on EVERY loop step (measured +38 GB/step all-gather on
+    # qwen2.5 prefill_32k). Training disables the pin: the constraint's
+    # BACKWARD forces cotangent re-gathers that cost more than it saves
+    # (§Perf triangular-flash caveat 2b).
+    if pin_kv:
+        kp = shard(kp, "batch", None, None, None, None)
+        vp = shard(vp, "batch", None, None, None, None)
+    kv_valid = sk if kv_len is None else kv_len
+
+    # static pair list: prune above-diagonal blocks for causal self-attn
+    prune = causal and kv_len is None and isinstance(q_offset, int)
+    pairs = [
+        (qi, kj)
+        for qi in range(nq)
+        for kj in range(nk)
+        if not prune or kj * block <= q_offset + (qi + 1) * blk_q - 1
+    ]
+    qi_arr = jnp.array([p[0] for p in pairs], jnp.int32)
+    kj_arr = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        qi, kj = pair
+        qb = jax.lax.dynamic_index_in_dim(qg, qi, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kp, kj, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vp, kj, 1, keepdims=False)
+        qpos = q_offset + qi * blk_q + jnp.arange(blk_q)
+        kpos = kj * block + jnp.arange(block)
+        s = jnp.einsum("bqkgd,bjkd->bqkgj", qb, kb)  # (B,bq,KVH,G,block)
+        s = softcap(s, cap)
+        mask = (
+            kpos[None, :] <= qpos[:, None]
+            if causal
+            else jnp.ones((blk_q, block), bool)
+        )
+        mask = mask & (kpos < kv_valid)[None, :]
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 1, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 1, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 1, keepdims=False)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + jnp.sum(p, axis=-1)
+        a_new = a_old * corr[..., None] + jnp.einsum("bqkgj,bjkd->bqkgd", p, vb)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 1)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 1)
+        return (m, l, acc), None
+
+    m0 = jnp.full((b, nq, blk_q, kvh, groups), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, nq, blk_q, kvh, groups), jnp.float32)
+    a0 = jnp.zeros((b, nq, blk_q, kvh, groups, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (qi_arr, kj_arr))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, nq * blk_q, h, hd_v)[:, :sq]
+    return out.astype(orig_dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window=None, cap=None):
+    """Single-token attention over a (possibly seq-sharded) KV cache.
+
+    q: (B, H, hd); caches: (B, S, KVH, hd); attends to positions <= pos.
+    Plain einsum + masked softmax: with the cache's S dim sharded over the
+    'model' axis, GSPMD turns the reductions into partial-softmax combines
+    (flash-decode). Memory per device is O(S/shards).
+    """
+    b, h, hd = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    groups = h // max(1, kvh)
+    qg = (q * (1.0 / math.sqrt(hd))).reshape(b, kvh, groups, hd)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    )
+    scores = softcap(scores, cap)
+    kpos = jnp.arange(s)
+    mask = kpos <= pos
+    if window is not None:
+        mask = mask & (kpos > pos - window)
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def init_attention(cfg: ModelConfig, key):
+    hd = cfg.hd
+    ks = jax.random.split(key, 8)
+    p = dict(
+        wq=mk(ks[0], (cfg.d_model, cfg.n_heads * hd), ("fsdp", "heads")),
+        wk=mk(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), ("fsdp", "heads")),
+        wv=mk(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), ("fsdp", "heads")),
+        wo=mk(ks[3], (cfg.n_heads * hd, cfg.d_model), ("heads", "fsdp")),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = zeros((cfg.n_heads * hd,), ("heads",))
+        p["bk"] = zeros((cfg.n_kv_heads * hd,), ("heads",))
+        p["bv"] = zeros((cfg.n_kv_heads * hd,), ("heads",))
+    return p
+
+
+def attention(
+    cfg: ModelConfig, p, x, positions, *, causal=True, window=None,
+    kv_override=None, return_kv=False, pin_kv=True,
+):
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = (kv_override[0] if kv_override is not None else x) @ p["wk"].astype(x.dtype)
+    v = (kv_override[1] if kv_override is not None else x) @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    sk = k.shape[1]
+    k = k.reshape(b, sk, cfg.n_kv_heads, hd)
+    v = v.reshape(b, sk, cfg.n_kv_heads, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    if causal or kv_override is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if kv_override is None else jnp.arange(sk)[None, :], cfg.rope_theta)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, cap=cfg.attn_softcap,
+        pin_kv=pin_kv,
+    )
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    out = out @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return shard(out, "batch", "seq", "embed"), (k, v)
+    return shard(out, "batch", "seq", "embed")
+
+
+def attention_decode(cfg: ModelConfig, p, x, k_cache, v_cache, pos, *, window=None):
+    """One-token decode. x: (B, D); caches (B, S, KVH, hd) updated at pos."""
+    b, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, 1, cfg.n_heads, hd)
+    k = k.reshape(b, 1, cfg.n_kv_heads, hd)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)[:, 0]
+    k = rope(k, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    k_cache = shard(k_cache, "batch", "cache_seq", "kv_heads", None)
+    v_cache = shard(v_cache, "batch", "cache_seq", "kv_heads", None)
+    out = decode_attention(
+        q, k_cache, v_cache, pos=pos, window=window, cap=cfg.attn_softcap
+    )
+    out = out.reshape(b, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    return out, k_cache, v_cache
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    return dict(
+        wq_a=mk(ks[0], (cfg.d_model, cfg.q_lora), ("fsdp", None)),
+        q_norm=zeros((cfg.q_lora,), (None,)),
+        wq_b=mk(ks[1], (cfg.q_lora, h * (cfg.qk_nope + cfg.qk_rope)), (None, "heads")),
+        wkv_a=mk(ks[2], (cfg.d_model, cfg.kv_lora + cfg.qk_rope), ("fsdp", None)),
+        kv_norm=zeros((cfg.kv_lora,), (None,)),
+        wkv_b=mk(ks[3], (cfg.kv_lora, h * (cfg.qk_nope + cfg.v_head)), (None, "heads")),
+        wo=mk(ks[4], (h * cfg.v_head, cfg.d_model), ("heads", "fsdp")),
+    )
+
+
+def mla_attention(cfg: ModelConfig, p, x, positions, *, decode_cache=None, pos=None, pin_kv=True):
+    """Multi-head latent attention (prefill path expands the latent).
+
+    Cache stores the compressed (kv_lora + qk_rope) latent per position —
+    the MLA memory saving shows up directly in the decode roofline.
+    """
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope, cfg.qk_rope, cfg.v_head
+    q = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = q @ p["wq_b"].astype(x.dtype)
+    kv = x @ p["wkv_a"].astype(x.dtype)  # (B, S, kv_lora + dr)
+    latent = rmsnorm(kv[..., : cfg.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora :]
+    if decode_cache is None:  # train / prefill: expand latent to full kv
+        s = x.shape[1]
+        q = q.reshape(b, s, h, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = rope(q_rope, positions, cfg.rope_theta)
+        k_rope_h = rope(k_rope.reshape(b, s, 1, dr), positions, cfg.rope_theta)
+        kvx = (latent @ p["wkv_b"].astype(x.dtype)).reshape(b, s, h, dn + dv)
+        k_nope, v = kvx[..., :dn], kvx[..., dn:]
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope_h, (b, s, h, dr))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        # flash supports a distinct value width: no v padding (§Perf it:
+        # padding v from 64→96 wasted 50% of the AV einsum flops)
+        out = flash_attention(qf, k, v, causal=True, pin_kv=pin_kv)
+        out = out.reshape(b, s, h * dv) @ p["wo"].astype(x.dtype)
+        new_cache = jnp.concatenate([latent, k_rope], -1)  # (B,S,kv_lora+dr)
+        return shard(out, "batch", "seq", "embed"), new_cache
+    # ---- decode with absorbed projections (cache = latent ++ k_rope) ----
+    cache, = (decode_cache,)
+    lat_c = cache[..., : cfg.kv_lora]  # (B, S, kv_lora)
+    kr_c = cache[..., cfg.kv_lora :]  # (B, S, dr)
+    new = jnp.concatenate([latent, k_rope], -1)  # (B, 1, kv_lora+dr)
+    cache = jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), pos, axis=1)
+    lat_c = cache[..., : cfg.kv_lora]
+    kr_c = cache[..., cfg.kv_lora :]
+    q = q.reshape(b, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = rope(q_rope[:, None], posv, cfg.rope_theta)[:, 0]  # (B,h,dr)
+    wkv_b = p["wkv_b"].astype(x.dtype).reshape(cfg.kv_lora, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope, w_uk)  # absorb k up-proj
+    s_len = cache.shape[1]
+    kpos = jnp.arange(s_len)
+    # rope the cached k_rope at its own positions
+    kr = rope(kr_c.reshape(b, s_len, 1, dr), kpos[None, :], cfg.rope_theta)[:, :, 0]
+    scores = jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32), lat_c.astype(jnp.float32))
+    scores = scores + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))
+    scores = scores / math.sqrt(dn + dr)
+    scores = jnp.where((kpos <= pos)[None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsl->bhl", w, lat_c.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhd->bhd", out_lat.astype(x.dtype), w_uv)  # absorb v
+    out = out.reshape(b, h * dv) @ p["wo"].astype(x.dtype)
+    return out, cache
+
+
+# ------------------------------------------------------------------ MLP / MoE
+def init_mlp(cfg: ModelConfig, key, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return dict(
+        w_gate=mk(ks[0], (cfg.d_model, d_ff), ("fsdp", "mlp")),
+        w_up=mk(ks[1], (cfg.d_model, d_ff), ("fsdp", "mlp")),
+        w_down=mk(ks[2], (d_ff, cfg.d_model), ("mlp", "fsdp")),
+    )
+
+
+def mlp(cfg: ModelConfig, p, x):
+    act = jax.nn.silu if cfg.gated_act == "silu" else partial(jax.nn.gelu, approximate=True)
+    g = act(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    names = ("batch", "seq", "mlp") if x.ndim == 3 else ("batch", "mlp")
+    h = shard(g * u, *names)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def init_moe(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    return dict(
+        router=mk(ks[0], (d, e), (None, None), scale=0.02),
+        w_gate=mk(ks[1], (e, d, f), ("experts", "fsdp", "expert_mlp")),
+        w_up=mk(ks[2], (e, d, f), ("experts", "fsdp", "expert_mlp")),
+        w_down=mk(ks[3], (e, f, d), ("experts", "expert_mlp", "fsdp")),
+    )
+
+
+def moe(cfg: ModelConfig, p, x):
+    """Mixture of experts over tokens. x: (B, S, D) → (B, S, D).
+
+    dense_ec: capacity-based gather/batched-matmul/scatter — experts shard
+    over the 'experts' (model) axis, dispatch is data movement not FLOPs.
+    ragged: sort + ragged_dot grouped matmul (no capacity waste).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k, f = cfg.n_experts, cfg.top_k, cfg.d_ff_expert
+    xf = x.reshape(t, d)
+    logits = (xf @ p["router"].astype(jnp.float32).astype(x.dtype)).astype(jnp.float32)
+    gate_w, choice = jax.lax.top_k(logits, k)  # (T, k)
+    gate_w = jax.nn.softmax(gate_w, axis=-1)
+    act = jax.nn.silu if cfg.gated_act == "silu" else partial(jax.nn.gelu, approximate=True)
+
+    if cfg.moe_impl == "ragged":
+        flat_e = choice.reshape(-1)
+        order = jnp.argsort(flat_e)
+        tok = (jnp.arange(t * k) // k)[order]
+        xs = xf[tok]  # (T*k, D)
+        counts = jnp.bincount(flat_e, length=e)
+        g = act(jax.lax.ragged_dot(xs, p["w_gate"].astype(x.dtype), counts))
+        u = jax.lax.ragged_dot(xs, p["w_up"].astype(x.dtype), counts)
+        y = jax.lax.ragged_dot(g * u, p["w_down"].astype(x.dtype), counts)
+        wflat = gate_w.reshape(-1)[order].astype(y.dtype)
+        out = jax.ops.segment_sum(y * wflat[:, None], tok, num_segments=t)
+        return out.reshape(b, s, d).astype(x.dtype)
+
+    # dense_ec: fixed expert capacity. With moe_local_dispatch the tokens
+    # are split into G = data-shard groups (Switch-style): capacity, sort
+    # and scatter are per group — dispatch tensors shrink G× and the global
+    # cross-shard argsort disappears (§Perf it2).
+    groups = 1
+    if cfg.moe_local_dispatch:
+        from repro.models.sharding import get_rules
+
+        mesh = get_rules().mesh
+        if mesh is not None:
+            groups = int(
+                np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")])
+            )
+            if t % groups:
+                groups = 1
+    tg = t // groups
+    cap = int(math.ceil(tg * k / e * cfg.moe_capacity))
+    cap = max(8, -(-cap // 8) * 8)
+
+    def one_group(xf_g, gate_g, choice_g):
+        flat_e = choice_g.reshape(-1)  # (Tg*k,)
+        flat_t = jnp.arange(tg * k) // k
+        order = jnp.argsort(flat_e)
+        se, st_ = flat_e[order], flat_t[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.cumsum(counts) - counts
+        slot = jnp.arange(tg * k) - starts[se]  # position within expert
+        ok = slot < cap
+        gather_idx = jnp.zeros((e, cap), jnp.int32)
+        gather_idx = gather_idx.at[se, jnp.where(ok, slot, cap - 1)].set(
+            jnp.where(ok, st_, 0), mode="drop"
+        )
+        filled = jnp.zeros((e, cap), bool).at[
+            se, jnp.where(ok, slot, cap - 1)
+        ].set(ok, mode="drop")
+        xe = xf_g[gather_idx] * filled[..., None].astype(x.dtype)  # (E,C,D)
+        g_ = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype)))
+        u_ = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+        y = jnp.einsum("ecf,efd->ecd", g_ * u_, p["w_down"].astype(x.dtype))
+        wsort = gate_g.reshape(-1)[order]
+        wslot = jnp.zeros((e, cap), jnp.float32).at[
+            se, jnp.where(ok, slot, cap - 1)
+        ].set(jnp.where(ok, wsort, 0.0), mode="drop")
+        return jax.ops.segment_sum(
+            (y * wslot[..., None].astype(y.dtype)).reshape(e * cap, d),
+            gather_idx.reshape(-1),
+            num_segments=tg,
+        )
+
+    if groups == 1:
+        out = one_group(xf, gate_w, choice).reshape(b, s, d)
+        return shard(out, "batch", "seq", "embed").astype(x.dtype)
+    xg = shard(xf.reshape(groups, tg, d), "batch", None, None)
+    gg = gate_w.reshape(groups, tg, k)
+    cg = choice.reshape(groups, tg, k)
+    out = jax.vmap(one_group)(xg, gg, cg)  # (G, Tg, D)
+    out = shard(out, "batch", None, None)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ Mamba2 SSD
+def init_mamba(cfg: ModelConfig, key):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return dict(
+        in_proj=mk(ks[0], (d, 2 * di + 2 * n + h), ("fsdp", "mlp")),
+        conv_w=mk(ks[1], (cfg.conv_width, conv_ch), (None, "mlp"), scale=0.5),
+        a_log=Param(jnp.zeros((h,), jnp.float32), (None,)),
+        dt_bias=zeros((h,), (None,)),
+        d_skip=ones((h,), (None,)),
+        out_norm=zeros((di,), (None,)),
+        out_proj=mk(ks[2], (di, d), ("mlp", "fsdp")),
+    )
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk, init_state=None):
+    """SSD (Mamba-2) chunked scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) >0; a: (H,) (A = -exp(a_log));
+    bmat/cmat: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p_ = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    q = chunk
+    da = dt * a[None, None, :]  # (B,S,H) negative
+    xw = xh * dt[..., None]
+    # reshape into chunks
+    das = da.reshape(b, nc, q, h)
+    xws = xw.reshape(b, nc, q, h, p_)
+    bs = bmat.reshape(b, nc, q, n)
+    cs = cmat.reshape(b, nc, q, n)
+    cum = jnp.cumsum(das, axis=2)  # (B,NC,Q,H)
+    # intra-chunk (diagonal blocks): decay between positions i>=j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,Q,Q,H) i,j
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cs, bs)  # (B,NC,Q,Q)
+    y_d = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, l, xws)
+    # chunk states: contribution of each chunk to its end state
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,NC,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bs, decay_end, xws)
+    # inter-chunk recurrence over chunk boundary states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    def scan_fn(prev, inp):
+        st, dec = inp
+        new = st + prev * dec[..., None, None]
+        return new, prev
+
+    init = (
+        jnp.zeros((b, h, p_, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    final, prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prevs = jnp.moveaxis(prevs, 0, 1)  # (B,NC,H,P,N) state entering chunk
+    decay_in = jnp.exp(cum)  # (B,NC,Q,H) decay from chunk start to i
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cs, decay_in, prevs)
+    y = (y_d + y_off).reshape(b, s, h, p_)
+    return y, final
+
+
+def mamba_forward(cfg: ModelConfig, p, x, *, state=None, conv_state=None):
+    """Mamba2 block over a full sequence. x: (B,S,D)."""
+    b, s, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)  # (B,S,2di+2n+h)
+    z, xr, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    # depthwise causal conv over (x, B, C)
+    xbc = jnp.concatenate([xr, bmat, cmat], -1)  # (B,S,di+2n)
+    w = p["conv_w"].astype(x.dtype)  # (W, di+2n)
+    pad = cfg.conv_width - 1
+    xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(
+        xbc_p[:, i : i + s, :] * w[i][None, None, :]
+        for i in range(cfg.conv_width)
+    )
+    conv = jax.nn.silu(conv)
+    xr, bmat, cmat = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    xh = xr.reshape(b, s, h, pd).astype(jnp.float32)
+    # pad S to a chunk multiple; dt=0 on padding keeps the state exact
+    padn = (-s) % cfg.ssm_chunk
+    if padn:
+        pad2 = lambda t: jnp.pad(t, ((0, 0), (0, padn)) + ((0, 0),) * (t.ndim - 2))
+        y, final = _ssd_chunked(
+            pad2(xh), pad2(dt), a,
+            pad2(bmat.astype(jnp.float32)), pad2(cmat.astype(jnp.float32)),
+            cfg.ssm_chunk, init_state=state,
+        )
+        y = y[:, :s]
+    else:
+        y, final = _ssd_chunked(
+            xh, dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            cfg.ssm_chunk, init_state=state,
+        )
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), final
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state, conv_state):
+    """Single-token Mamba2 step. x: (B,D); state (B,H,P,N); conv (B,W-1,CH)."""
+    b, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xr, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    xbc = jnp.concatenate([xr, bmat, cmat], -1)  # (B, CH)
+    w = p["conv_w"].astype(x.dtype)
+    hist = jnp.concatenate([conv_state, xbc[:, None, :]], 1)  # (B,W,CH)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w))
+    new_conv_state = hist[:, 1:]
+    xr, bmat, cmat = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a[None, :])  # (B,H)
+    xh = xr.reshape(b, h, pd).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], bmat.astype(jnp.float32))
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), state, new_conv_state

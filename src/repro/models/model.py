@@ -1,0 +1,459 @@
+"""Model assembly per architecture family: init / loss / prefill / decode.
+
+All families stack their repeated block over a leading 'layers' axis and run
+it with lax.scan + jax.checkpoint (compile-time and memory control at 94
+layers). Params are Param(value, logical_axes) trees at init; jitted entry
+points consume the raw value tree (see split_params).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import shard
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+# ------------------------------------------------------------------ init
+def _stack_layers(inits):
+    """Stack per-layer Param trees along a new leading 'layers' axis."""
+    return jax.tree.map(
+        lambda *xs: L.Param(
+            jnp.stack([x.value for x in xs]), ("layers",) + xs[0].axes
+        ),
+        *inits,
+        is_leaf=L.is_param,
+    )
+
+
+def _init_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    p = dict(ln_attn=L.zeros((cfg.d_model,), (None,)))
+    if cfg.family == "mla":
+        p["attn"] = L.init_mla(cfg, ks[0])
+    elif cfg.family != "ssm":
+        p["attn"] = L.init_attention(cfg, ks[0])
+    p["ln_mlp"] = L.zeros((cfg.d_model,), (None,))
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(cfg, ks[1])
+        if cfg.dense_ff_parallel and cfg.d_ff:
+            p["mlp"] = L.init_mlp(cfg, ks[2])
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(cfg, ks[2])
+    if cfg.post_norms:
+        p["ln_attn_post"] = L.zeros((cfg.d_model,), (None,))
+        p["ln_mlp_post"] = L.zeros((cfg.d_model,), (None,))
+    return p
+
+
+def _init_mamba_block(cfg: ModelConfig, key):
+    return dict(
+        ln=L.zeros((cfg.d_model,), (None,)),
+        mamba=L.init_mamba(cfg, key),
+    )
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    params = dict(
+        embed=L.mk(ks[0], (cfg.vocab, cfg.d_model), ("vocab", "fsdp"), scale=0.02),
+        final_norm=L.zeros((cfg.d_model,), (None,)),
+    )
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.mk(
+            ks[1], (cfg.d_model, cfg.vocab), ("fsdp", "vocab"), scale=0.02
+        )
+    if cfg.family in ("dense", "mla", "moe"):
+        keys = jax.random.split(ks[2], cfg.n_layers)
+        params["blocks"] = _stack_layers(
+            [_init_block(cfg, k) for k in keys]
+        )
+    elif cfg.family == "ssm":
+        keys = jax.random.split(ks[2], cfg.n_layers)
+        params["blocks"] = _stack_layers(
+            [_init_mamba_block(cfg, k) for k in keys]
+        )
+    elif cfg.family == "hybrid":
+        keys = jax.random.split(ks[2], cfg.n_layers)
+        params["blocks"] = _stack_layers(
+            [_init_mamba_block(cfg, k) for k in keys]
+        )
+        params["shared_attn"] = _init_block(cfg, ks[3])
+    elif cfg.family == "encdec":
+        ekeys = jax.random.split(ks[2], cfg.enc_layers)
+        dkeys = jax.random.split(ks[3], cfg.dec_layers)
+        params["enc_blocks"] = _stack_layers([_init_block(cfg, k) for k in ekeys])
+        dec = []
+        for k in dkeys:
+            k1, k2 = jax.random.split(k)
+            blk = _init_block(cfg, k1)
+            blk["cross"] = L.init_attention(cfg, k2)
+            blk["ln_cross"] = L.zeros((cfg.d_model,), (None,))
+            dec.append(blk)
+        params["dec_blocks"] = _stack_layers(dec)
+        params["enc_norm"] = L.zeros((cfg.d_model,), (None,))
+    else:
+        raise ValueError(cfg.family)
+    if cfg.param_dtype == "bfloat16":
+        # store weight matrices in bf16 (halves FSDP/TP collective bytes);
+        # 1-D params (norm scales, biases, a_log) stay f32 for stability
+        params = jax.tree.map(
+            lambda p: (
+                L.Param(p.value.astype(jnp.bfloat16), p.axes)
+                if p.value.dtype == jnp.float32 and p.value.ndim >= 2
+                else p
+            ),
+            params,
+            is_leaf=L.is_param,
+        )
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def _dense_block(cfg: ModelConfig, p, x, positions, layer_idx, enc_out=None, train=False):
+    """One transformer block (train/prefill). Handles gemma2 alternation."""
+    window = None
+    if cfg.window is not None:
+        # even layers local, odd layers global — passed in statically via
+        # per-layer window select at scan time (layer_idx is traced; use
+        # jnp.where on the mask inside attention is costly, so both local
+        # and global use flash attention with a traced window bound).
+        window = jnp.where(layer_idx % 2 == 0, cfg.window, 1 << 30)
+    h = L.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    if cfg.family == "mla":
+        a, _ = L.mla_attention(cfg, p["attn"], h, positions, pin_kv=not train)
+    else:
+        a = L.attention(
+            cfg, p["attn"], h, positions,
+            causal=enc_out is None or True, window=window, pin_kv=not train,
+        )
+    if cfg.post_norms:
+        a = L.rmsnorm(a, p["ln_attn_post"], cfg.norm_eps)
+    x = x + a
+    if "cross" in p and enc_out is not None:
+        h = L.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        c = L.attention(
+            cfg, p["cross"], h, positions, causal=False,
+            kv_override=(enc_out, enc_out),
+        )
+        x = x + c
+    h = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m = L.moe(cfg, p["moe"], h)
+        if cfg.dense_ff_parallel and "mlp" in p:
+            m = m + L.mlp(cfg, p["mlp"], h)
+    else:
+        m = L.mlp(cfg, p["mlp"], h)
+    if cfg.post_norms:
+        m = L.rmsnorm(m, p["ln_mlp_post"], cfg.norm_eps)
+    return x + m
+
+
+def _enc_block(cfg: ModelConfig, p, x, positions):
+    h = L.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    a = L.attention(cfg, p["attn"], h, positions, causal=False)
+    x = x + a
+    h = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    return x + L.mlp(cfg, p["mlp"], h)
+
+
+# ------------------------------------------------------------------ forward
+def _embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens].astype(L.cdtype(cfg))
+    if cfg.name.startswith("gemma2"):
+        x = x * math.sqrt(cfg.d_model)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _logits(cfg, params, x):
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(x.dtype)
+    logits = x @ w
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _scan_blocks(cfg, blocks, x, positions, enc_out=None, remat=True):
+    n_layers = jax.tree.leaves(blocks)[0].shape[0]
+    is_mamba = "mamba" in blocks  # ssm / hybrid backbone blocks
+
+    def body(carry, inp):
+        bp, idx = inp
+        if is_mamba:
+            h = L.rmsnorm(carry, bp["ln"], cfg.norm_eps)
+            y, _ = L.mamba_forward(cfg, bp["mamba"], h)
+            out = carry + y
+        else:
+            out = _dense_block(
+                cfg, bp, carry, positions, idx, enc_out=enc_out, train=remat
+            )
+        return out, None
+
+    fn = jax.checkpoint(body, policy=REMAT_POLICY) if remat else body
+    x, _ = jax.lax.scan(fn, x, (blocks, jnp.arange(n_layers)))
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, remat=True):
+    """Training forward → logits. batch: dict(tokens, [frontend], [dec_tokens])."""
+    if cfg.family == "encdec":
+        enc_x = batch["frontend"].astype(L.cdtype(cfg))  # (B,S,D) stub frames
+        pos_e = jnp.arange(enc_x.shape[1])[None, :]
+        enc_x = _scan_blocks(cfg, params["enc_blocks"], enc_x, pos_e, remat=remat)
+        enc_out = L.rmsnorm(enc_x, params["enc_norm"], cfg.norm_eps)
+        tokens = batch["tokens"]
+        x = _embed_tokens(cfg, params, tokens)
+        pos_d = jnp.arange(tokens.shape[1])[None, :]
+        x = _scan_blocks(
+            cfg, params["dec_blocks"], x, pos_d, enc_out=enc_out, remat=remat
+        )
+        return _logits(cfg, params, x)
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vlm" and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)  # (B, P, D) patch embeddings
+        x = jnp.concatenate([fe, x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    if cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions, remat=remat)
+    else:
+        x = _scan_blocks(cfg, params["blocks"], x, positions, remat=remat)
+    return _logits(cfg, params, x)
+
+
+def _hybrid_forward(cfg, params, x, positions, remat=True):
+    """zamba2: groups of mamba layers + one SHARED attention block."""
+    per = cfg.attn_every
+    n_groups = cfg.n_layers // per
+
+    def grp(i, x):
+        sub = jax.tree.map(lambda a: a[i * per : (i + 1) * per], params["blocks"])
+        x = _scan_blocks(cfg, sub, x, positions, remat=remat)
+        return _dense_block(cfg, params["shared_attn"], x, positions, 1)
+
+    for i in range(n_groups):
+        x = grp(i, x)
+    rem = cfg.n_layers - n_groups * per
+    if rem:
+        sub = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+        x = _scan_blocks(cfg, sub, x, positions, remat=remat)
+    return x
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat=True):
+    logits = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vlm" and "frontend" in batch:
+        pad = batch["frontend"].shape[1]
+        logits = logits[:, pad:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Abstract/concrete decode cache per family."""
+    hd = cfg.hd
+    if cfg.family in ("dense", "moe"):
+        shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, hd)
+        return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+    if cfg.family == "mla":
+        shape = (cfg.n_layers, batch, seq, cfg.kv_lora + cfg.qk_rope)
+        return dict(latent=jnp.zeros(shape, dtype))
+    if cfg.family == "ssm":
+        return dict(
+            state=jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            conv=jnp.zeros(
+                (cfg.n_layers, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                dtype,
+            ),
+        )
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        return dict(
+            state=jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            conv=jnp.zeros(
+                (cfg.n_layers, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                dtype,
+            ),
+            k=jnp.zeros((n_groups, batch, seq, cfg.n_kv_heads, hd), dtype),
+            v=jnp.zeros((n_groups, batch, seq, cfg.n_kv_heads, hd), dtype),
+        )
+    if cfg.family == "encdec":
+        shape = (cfg.dec_layers, batch, seq, cfg.n_kv_heads, hd)
+        # cross-attention K/V are projected ONCE from the encoder output at
+        # prefill time and cached (decode must not re-project 32k frames
+        # per token — that would dominate the decode roofline)
+        return dict(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            cross_k=jnp.zeros(shape, dtype),
+            cross_v=jnp.zeros(shape, dtype),
+        )
+    raise ValueError(cfg.family)
+
+
+def encdec_prepare_cross(cfg: ModelConfig, params, enc_out):
+    """Project encoder output to per-layer cross K/V caches (prefill)."""
+    hd = cfg.hd
+    b, s, _ = enc_out.shape
+
+    def one(bp, _):
+        k = (enc_out @ bp["cross"]["wk"].astype(enc_out.dtype)).reshape(
+            b, s, cfg.n_kv_heads, hd
+        )
+        v = (enc_out @ bp["cross"]["wv"].astype(enc_out.dtype)).reshape(
+            b, s, cfg.n_kv_heads, hd
+        )
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(one, None, params["dec_blocks"])
+    return ks, vs
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos, enc_out=None):
+    """One decode step. token: (B,) int32 → (logits (B,V), new cache)."""
+    x = params["embed"][token].astype(L.cdtype(cfg))
+    if cfg.name.startswith("gemma2"):
+        x = x * math.sqrt(cfg.d_model)
+    x = shard(x, "batch", "embed")
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, inp):
+            bp, kc, vc, idx = inp
+            window = None
+            if cfg.window is not None:
+                window = jnp.where(idx % 2 == 0, cfg.window, 1 << 30)
+            h = L.rmsnorm(carry, bp["ln_attn"], cfg.norm_eps)
+            a, kc, vc = L.attention_decode(cfg, bp["attn"], h, kc, vc, pos, window=window)
+            if cfg.post_norms:
+                a = L.rmsnorm(a, bp["ln_attn_post"], cfg.norm_eps)
+            x2 = carry + a
+            h = L.rmsnorm(x2, bp["ln_mlp"], cfg.norm_eps)
+            if cfg.family == "moe":
+                m = L.moe(cfg, bp["moe"], h[:, None, :])[:, 0]
+                if cfg.dense_ff_parallel and "mlp" in bp:
+                    m = m + L.mlp(cfg, bp["mlp"], h)
+            else:
+                m = L.mlp(cfg, bp["mlp"], h)
+            if cfg.post_norms:
+                m = L.rmsnorm(m, bp["ln_mlp_post"], cfg.norm_eps)
+            return x2 + m, (kc, vc)
+
+        n_layers = cfg.n_layers
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], jnp.arange(n_layers))
+        )
+        cache = dict(k=k_new, v=v_new)
+    elif cfg.family == "mla":
+        def body(carry, inp):
+            bp, lat, idx = inp
+            h = L.rmsnorm(carry, bp["ln_attn"], cfg.norm_eps)
+            a, lat = L.mla_attention(
+                cfg, bp["attn"], h[:, None, :], None, decode_cache=lat, pos=pos
+            )
+            x2 = carry + a
+            h = L.rmsnorm(x2, bp["ln_mlp"], cfg.norm_eps)
+            return x2 + L.mlp(cfg, bp["mlp"], h), lat
+
+        x, lat_new = jax.lax.scan(
+            body, x, (params["blocks"], cache["latent"], jnp.arange(cfg.n_layers))
+        )
+        cache = dict(latent=lat_new)
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            bp, st, cv, idx = inp
+            h = L.rmsnorm(carry, bp["ln"], cfg.norm_eps)
+            y, st, cv = L.mamba_decode(cfg, bp["mamba"], h, st, cv)
+            return carry + y, (st, cv)
+
+        x, (st_new, cv_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["state"], cache["conv"], jnp.arange(cfg.n_layers))
+        )
+        cache = dict(state=st_new, conv=cv_new)
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        st_all, cv_all = cache["state"], cache["conv"]
+        k_all, v_all = cache["k"], cache["v"]
+        sts, cvs, ks, vs = [], [], [], []
+        for g in range(n_groups):
+            def body(carry, inp):
+                bp, st, cv = inp
+                h = L.rmsnorm(carry, bp["ln"], cfg.norm_eps)
+                y, st, cv = L.mamba_decode(cfg, bp["mamba"], h, st, cv)
+                return carry + y, (st, cv)
+
+            sub = jax.tree.map(lambda a: a[g * per : (g + 1) * per], params["blocks"])
+            x, (st, cv) = jax.lax.scan(
+                body, x, (sub, st_all[g * per : (g + 1) * per], cv_all[g * per : (g + 1) * per])
+            )
+            sts.append(st)
+            cvs.append(cv)
+            bp = params["shared_attn"]
+            h = L.rmsnorm(x, bp["ln_attn"], cfg.norm_eps)
+            a, kc, vc = L.attention_decode(cfg, bp["attn"], h, k_all[g], v_all[g], pos)
+            x = x + a
+            h = L.rmsnorm(x, bp["ln_mlp"], cfg.norm_eps)
+            x = x + L.mlp(cfg, bp["mlp"], h)
+            ks.append(kc)
+            vs.append(vc)
+        cache = dict(
+            state=jnp.concatenate(sts), conv=jnp.concatenate(cvs),
+            k=jnp.stack(ks), v=jnp.stack(vs),
+        )
+    elif cfg.family == "encdec":
+        hd = cfg.hd
+
+        def body(carry, inp):
+            bp, kc, vc, ck, cv, idx = inp
+            h = L.rmsnorm(carry, bp["ln_attn"], cfg.norm_eps)
+            a, kc, vc = L.attention_decode(cfg, bp["attn"], h, kc, vc, pos)
+            x2 = carry + a
+            h = L.rmsnorm(x2, bp["ln_cross"], cfg.norm_eps)
+            q = (h @ bp["cross"]["wq"].astype(h.dtype)).reshape(
+                -1, cfg.n_heads, hd
+            )
+            c = L.decode_attention(q, ck, cv, pos=ck.shape[1] - 1)
+            c = c.reshape(-1, cfg.n_heads * hd) @ bp["cross"]["wo"].astype(h.dtype)
+            x2 = x2 + c
+            h = L.rmsnorm(x2, bp["ln_mlp"], cfg.norm_eps)
+            return x2 + L.mlp(cfg, bp["mlp"], h), (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x,
+            (params["dec_blocks"], cache["k"], cache["v"],
+             cache["cross_k"], cache["cross_v"], jnp.arange(cfg.dec_layers)),
+        )
+        cache = dict(
+            k=k_new, v=v_new, cross_k=cache["cross_k"], cross_v=cache["cross_v"]
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(cfg, params, x[:, None, :])[:, 0]
+    return logits, cache
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Prefill: full forward returning last-position logits (cache writes are
+    exercised by decode_step; the dry-run lowers prefill as pure forward)."""
+    logits = forward(cfg, params, batch, remat=False)
+    return logits[:, -1]

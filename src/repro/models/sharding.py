@@ -1,0 +1,98 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Tensors are annotated with *logical* axis names; a rule table maps them to
+physical mesh axes. Axes that do not divide evenly are dropped (replicated)
+so one rule set works across all ten architectures. Changing the rule table
+is the main §Perf hillclimbing lever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical → physical mapping (single- and multi-pod meshes)
+DEFAULT_RULES: dict[str, Sequence[str] | str | None] = {
+    "batch": ("pod", "data"),  # data parallel over pod×data
+    "seq": None,  # sequence replicated in training/prefill
+    "cache_seq": "model",  # decode KV cache: sequence sharded over model
+    "embed": None,  # activation d_model dim
+    "vocab": "model",  # embedding/logits vocab dim (TP)
+    "heads": "model",  # attention heads (TP)
+    "kv_heads": None,  # GQA kv heads often tiny: replicate by default
+    "mlp": "model",  # FFN hidden dim (TP)
+    "experts": "model",  # MoE expert dim (EP-as-TP over experts)
+    "expert_mlp": None,  # per-expert FFN hidden: replicated by default
+    "fsdp": "data",  # weight d_in dim (ZeRO-3 style)
+    "layers": None,  # stacked-scan layer dim
+    "ssm_state": None,
+    "conv": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    mesh: Mesh | None = None
+
+    def physical(self, logical: Sequence[str | None], shape=None) -> P:
+        """Map logical axis names to a PartitionSpec, dropping non-divisible
+        or unknown axes (replication)."""
+        mesh = self.mesh
+        used: set[str] = set()
+        parts = []
+        if shape is not None:
+            logical = tuple(logical)[: len(shape)]
+        for i, name in enumerate(logical):
+            spec = self.rules.get(name) if name else None
+            if spec is None:
+                parts.append(None)
+                continue
+            axes = (spec,) if isinstance(spec, str) else tuple(spec)
+            if mesh is not None:
+                axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+                size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+                if shape is not None and axes and shape[i] % size != 0:
+                    axes = ()
+            if not axes:
+                parts.append(None)
+            else:
+                used.update(axes)
+                parts.append(axes if len(axes) > 1 else axes[0])
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def constraint(self, x, *logical):
+        """with_sharding_constraint by logical names (no-op without a mesh)."""
+        mesh = self.mesh
+        if mesh is None or len(mesh.devices.flatten()) == 1:
+            return x
+        spec = self.physical(logical, shape=x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def named(self, logical: Sequence[str | None], shape=None) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.physical(logical, shape=shape))
+
+
+# a module-level current rule set that model code reads; the launcher swaps
+# it (plain global: model fns capture it at trace time, which is what we
+# want — one jit per (mesh, rules) combination).
+_CURRENT = ShardingRules(mesh=None)
+
+
+def set_rules(rules: ShardingRules):
+    global _CURRENT
+    _CURRENT = rules
+
+
+def get_rules() -> ShardingRules:
+    return _CURRENT
+
+
+def shard(x, *logical):
+    return _CURRENT.constraint(x, *logical)

@@ -1,0 +1,79 @@
+"""AdamW with warmup-cosine schedule (no optax dependency).
+
+Optimizer moments are stored in a configurable dtype (f32 default, bf16 for
+memory-tight giant-MoE configs) and are sharded exactly like their params
+(ZeRO: the 'fsdp' logical axis shards both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # float32 | bfloat16
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup))
+    prog = jnp.clip(
+        (step - cfg.warmup) / max(1, cfg.total_steps - cfg.warmup), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(cfg: OptConfig, params):
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros_like = lambda p: jnp.zeros(p.shape, dt)
+    return dict(
+        mu=jax.tree.map(zeros_like, params),
+        nu=jax.tree.map(zeros_like, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def apply_updates(cfg: OptConfig, params, grads, opt_state):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    # global grad-norm clip
+    gsq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        nu32 = nu.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        mhat = mu32 / (1 - cfg.b1 ** step)
+        nhat = nu32 / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (delta + decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, dict(mu=new_mu, nu=new_nu, step=step), dict(
+        grad_norm=gnorm, lr=lr
+    )

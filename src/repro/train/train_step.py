@@ -1,0 +1,47 @@
+"""The jitted train step: loss → grads → AdamW, with microbatch gradient
+accumulation and logical-axis shardings applied at the jit boundary."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import OptConfig, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) → (params, opt, metrics)."""
+
+    def loss(params, batch):
+        return M.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss)(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            l = lsum / microbatches
+        params, opt_state, info = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = dict(loss=l, **info)
+        return params, opt_state, metrics
+
+    return train_step

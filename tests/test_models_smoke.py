@@ -1,0 +1,172 @@
+"""Per-architecture smoke tests on reduced configs (CPU): one forward +
+one train-ish step (grads) + decode step; asserts shapes and finiteness."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import model as M
+from repro.models.layers import split_params
+
+
+def make_batch(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    batch = dict(
+        tokens=jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        labels=jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    )
+    if cfg.frontend == "vlm":
+        batch["frontend"] = jnp.asarray(
+            rng.normal(size=(b, cfg.frontend_len, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "encdec":
+        batch["frontend"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grads(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.key(0))
+    pv, _ = split_params(params)
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def loss_and_grad(p, b):
+        loss, grads = jax.value_and_grad(lambda q: M.loss_fn(cfg, q, b))(p)
+        return loss, grads
+
+    loss, grads = loss_and_grad(pv, batch)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+    logits = jax.jit(lambda p, b: M.forward(cfg, p, b))(pv, batch)
+    s_out = batch["tokens"].shape[1] + (
+        cfg.frontend_len if cfg.frontend == "vlm" else 0
+    )
+    assert logits.shape == (2, s_out, cfg.vocab), (arch, logits.shape)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.key(0))
+    pv, _ = split_params(params)
+    b, s = 2, 16
+    cache = M.init_cache(cfg, b, s)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = jnp.zeros((b, 8, cfg.d_model), jnp.bfloat16)
+
+    @jax.jit
+    def step(p, c, tok, pos):
+        return M.decode_step(cfg, p, c, tok, pos, enc_out=enc_out)
+
+    tok = jnp.zeros((b,), jnp.int32)
+    logits, cache = step(pv, cache, tok, 0)
+    logits2, cache = step(pv, cache, tok, 1)
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()) and bool(jnp.isfinite(logits2).all())
+    for leaf in jax.tree.leaves(cache):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), arch
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.layers import flash_attention
+
+    rng = np.random.default_rng(1)
+    b, s, h, kvh, hd = 2, 48, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    for window, cap in [(None, None), (8, None), (None, 20.0), (8, 20.0)]:
+        out = flash_attention(q, k, v, causal=True, window=window, cap=cap, block=16)
+        # naive reference
+        kk = jnp.repeat(k, h // kvh, axis=2)
+        vv = jnp.repeat(v, h // kvh, axis=2)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(hd)
+        if cap:
+            sc = jnp.tanh(sc / cap) * cap
+        i, j = np.arange(s)[:, None], np.arange(s)[None, :]
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vv)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5,
+            err_msg=f"window={window} cap={cap}",
+        )
+
+
+def test_ssd_chunked_matches_recurrence():
+    from repro.models.layers import _ssd_chunked
+
+    rng = np.random.default_rng(2)
+    b, s, h, p, n, chunk = 2, 32, 3, 8, 4, 8
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, s, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y, final = _ssd_chunked(x, dt, a, bm, cm, chunk)
+    # naive per-step recurrence
+    state = np.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        da = np.exp(np.asarray(dt[:, t]) * np.asarray(a)[None])  # (B,H)
+        upd = np.einsum(
+            "bhp,bn->bhpn",
+            np.asarray(x[:, t]) * np.asarray(dt[:, t])[..., None],
+            np.asarray(bm[:, t]),
+        )
+        state = state * da[..., None, None] + upd
+        ys.append(np.einsum("bhpn,bn->bhp", state, np.asarray(cm[:, t])))
+    ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), state, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "minicpm3-4b", "mamba2-130m", "gemma2-27b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = reduced(get_config(arch), n_layers=2)
+    params = M.init_params(cfg, jax.random.key(1))
+    pv, _ = split_params(params)
+    rng = np.random.default_rng(3)
+    b, s = 1, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    full = M.forward(cfg, pv, dict(tokens=tokens), remat=False)
+    cache = M.init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        logits, cache = M.decode_step(cfg, pv, cache, tokens[:, t], t)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_param_count_in_range():
+    """Full configs must land near their nominal sizes (sanity of configs)."""
+    expect = {
+        "internvl2-26b": (17e9, 26e9),  # LM backbone only (InternLM2-20B)
+        "qwen2.5-3b": (2.0e9, 3.5e9),
+        "mistral-nemo-12b": (10e9, 14e9),
+        "minicpm3-4b": (3e9, 5e9),
+        "gemma2-27b": (22e9, 30e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "zamba2-2.7b": (2e9, 3.4e9),
+        "arctic-480b": (400e9, 520e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).n_params()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.1f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,182 @@
+"""Unit tests for the REMIX core against brute-force oracles."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core import query as Q
+from repro.core import merge_iter as M
+from repro.core.remix import build_remix
+from repro.core.runs import make_run, stack_runs
+from repro.core.view import PLACEHOLDER, build_view
+
+
+def paper_fig3_runs():
+    """The example of Fig. 3: three runs forming the 15-key sorted view."""
+    r0 = make_run(np.array([2, 11, 23, 71, 91], np.uint64), seq=0)
+    r1 = make_run(np.array([6, 7, 17, 29, 73], np.uint64), seq=1)
+    r2 = make_run(np.array([4, 31, 43, 52, 67], np.uint64), seq=2)
+    return [r0, r1, r2]
+
+
+def brute_force_view(runs):
+    """Sorted (key, seq desc) list of all entries, as u64."""
+    items = []
+    for i, r in enumerate(runs):
+        kk = K.unpack_u64(np.asarray(r.keys))
+        for j in range(r.n):
+            items.append((int(kk[j]), -int(np.asarray(r.seq)[j]), i, j))
+    items.sort()
+    return items
+
+
+def test_fig3_layout():
+    runs = paper_fig3_runs()
+    remix, runset = build_remix(runs, d=4)
+    anchors = K.unpack_u64(np.asarray(remix.anchors))
+    # Paper: anchors 2, 11, 31, 71
+    assert list(anchors[:4]) == [2, 11, 31, 71]
+    # Paper: cursor offsets for group of anchor 11 are (1, 2, 1)
+    assert list(np.asarray(remix.cursors)[1]) == [1, 2, 1]
+    # Paper run selectors (runs renumbered: R0->0 etc.):
+    sels = np.asarray(remix.selectors) & 0x7F
+    expect = [0, 2, 1, 1, 0, 1, 0, 1, 2, 2, 2, 2, 0, 1, 0]
+    assert list(sels[:15]) == expect
+    assert remix.n_slots == 16 and int(remix.n_entries) == 15
+
+
+def test_seek_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    runs = [
+        make_run(np.sort(rng.choice(10_000, size=n, replace=False)).astype(np.uint64), seq=i)
+        for i, n in enumerate([300, 500, 200, 400])
+    ]
+    remix, runset = build_remix(runs, d=32)
+    items = brute_force_view(runs)
+    all_keys = np.array([it[0] for it in items], np.uint64)
+    queries = rng.integers(0, 10_100, size=257).astype(np.uint64)
+    qk = jnp.asarray(K.pack_u64(queries))
+    for mode in ("vector", "binary"):
+        pos = np.asarray(Q.seek(remix, runset, qk, ingroup=mode))
+        keys, vals, valid = (np.asarray(x) for x in Q.gather_view(remix, runset, jnp.asarray(pos), 1))
+        got = K.unpack_u64(keys[:, 0])
+        expect_idx = np.searchsorted(all_keys, queries, side="left")
+        for i, e in enumerate(expect_idx):
+            if e >= len(all_keys):
+                assert not valid[i, 0], (mode, i)
+            else:
+                assert valid[i, 0] and got[i] == all_keys[e], (mode, i, queries[i])
+
+
+def test_scan_matches_bruteforce_and_merge_iter():
+    rng = np.random.default_rng(1)
+    runs = [
+        make_run(np.sort(rng.choice(5_000, size=400, replace=False)).astype(np.uint64), seq=i)
+        for i in range(8)
+    ]
+    remix, runset = build_remix(runs, d=32)
+    items = brute_force_view(runs)
+    queries = rng.integers(0, 5_100, size=64).astype(np.uint64)
+    qk = jnp.asarray(K.pack_u64(queries))
+    W = 50
+    keys, vals, valid, _ = Q.scan(remix, runset, qk, width=W)
+    mkeys, mvals, mvalid = M.merge_scan(runset, qk, width=W)
+    all_keys = np.array([it[0] for it in items], np.uint64)
+    uniq = np.unique(all_keys)
+    for i, q in enumerate(queries):
+        start = np.searchsorted(uniq, q, side="left")
+        got = K.unpack_u64(np.asarray(keys)[i][np.asarray(valid)[i]])
+        mgot = K.unpack_u64(np.asarray(mkeys)[i][np.asarray(mvalid)[i]])
+        # W view slots contain >= W/2 unique newest keys in this workload;
+        # every returned key must be the correct next unique key in order.
+        expect = uniq[start : start + len(got)]
+        assert len(got) >= 25, f"too few results q={q}: {len(got)}"
+        assert list(got) == list(expect), f"remix scan mismatch q={q}"
+        mexpect = uniq[start : start + len(mgot)]
+        assert list(mgot) == list(mexpect), f"merge scan mismatch q={q}"
+        assert abs(len(mgot) - len(got)) <= 8, (len(got), len(mgot))
+
+
+def test_versions_and_tombstones():
+    # same key updated across runs; newest wins; tombstone hides key
+    r0 = make_run(np.array([5, 10, 20], np.uint64), seq=1)
+    r1 = make_run(np.array([10, 30], np.uint64), seq=2)  # 10 updated
+    r2 = make_run(
+        np.array([20, 40], np.uint64), seq=3, tomb=np.array([True, False])
+    )  # 20 deleted
+    remix, runset = build_remix([r0, r1, r2], d=4)
+    qk = jnp.asarray(K.pack_u64(np.array([5, 10, 20, 30, 40, 41], np.uint64)))
+    found, vals = Q.get(remix, runset, qk)
+    assert list(np.asarray(found)) == [True, True, False, True, True, False]
+    # newest version of 10 comes from r1 (seq=2): val[-1] stores seq
+    assert int(np.asarray(vals)[1, -1]) == 2
+    # scan must skip the tombstoned 20 and the old 10
+    keys, vals2, valid, _ = Q.scan(remix, runset, qk[:1], width=8)
+    got = K.unpack_u64(np.asarray(keys)[0][np.asarray(valid)[0]])
+    assert list(got) == [5, 10, 30, 40]
+    # merging iterator agrees
+    mf, mv = M.merge_get(runset, qk)
+    assert list(np.asarray(mf)) == [True, True, False, True, True, False]
+
+
+def test_placeholders_keep_anchor_newest():
+    # force a version cluster to straddle a group boundary: 7 singleton keys
+    # fill slots 0..6, then key 8's two versions would sit at slots 7|8.
+    r0 = make_run(np.arange(1, 9, dtype=np.uint64), seq=0)  # 1..8
+    r1 = make_run(np.array([8, 9], np.uint64), seq=1)  # 8 updated
+    layout = build_view(
+        [np.asarray(r.keys) for r in (r0, r1)],
+        [np.asarray(r.seq) for r in (r0, r1)],
+        d=8,
+    )
+    sel = layout.sel
+    assert sel[7] == PLACEHOLDER  # padding pushed the cluster to group 2
+    remix, runset = build_remix([r0, r1], d=8)
+    anchors = K.unpack_u64(np.asarray(remix.anchors))
+    assert anchors[1] == 8  # second group starts at the NEWEST version of 8
+    qk = jnp.asarray(K.pack_u64(np.array([8], np.uint64)))
+    found, vals = Q.get(remix, runset, qk)
+    assert bool(np.asarray(found)[0]) and int(np.asarray(vals)[0, -1]) == 1
+
+
+def test_exact_fit_cluster_needs_no_placeholder():
+    # a cluster ending exactly at a group boundary must NOT be padded
+    r0 = make_run(np.arange(1, 8, dtype=np.uint64), seq=0)  # 1..7
+    r1 = make_run(np.array([7, 8], np.uint64), seq=1)
+    layout = build_view(
+        [np.asarray(r.keys) for r in (r0, r1)],
+        [np.asarray(r.seq) for r in (r0, r1)],
+        d=8,
+    )
+    assert layout.sel[6] == (1 | 0x80)  # newest version of 7 from r1
+    assert layout.sel[7] == 0  # old version of 7 from r0, no pad
+    remix, runset = build_remix([r0, r1], d=8)
+    anchors = K.unpack_u64(np.asarray(remix.anchors))
+    assert anchors[1] == 8
+
+
+def test_get_ingroup_modes_agree():
+    rng = np.random.default_rng(2)
+    runs = [
+        make_run(np.sort(rng.choice(3000, size=333, replace=False)).astype(np.uint64), seq=i)
+        for i in range(5)
+    ]
+    remix, runset = build_remix(runs, d=16)
+    queries = rng.integers(0, 3100, size=128).astype(np.uint64)
+    qk = jnp.asarray(K.pack_u64(queries))
+    f1, v1 = Q.get(remix, runset, qk, ingroup="vector")
+    f2, v2 = Q.get(remix, runset, qk, ingroup="binary")
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(
+        np.asarray(v1)[np.asarray(f1)], np.asarray(v2)[np.asarray(f2)]
+    )
+
+
+def test_empty_and_single_run():
+    r0 = make_run(np.array([], np.uint64).reshape(0), seq=0)
+    r1 = make_run(np.array([3], np.uint64), seq=1)
+    remix, runset = build_remix([r0, r1], d=4)
+    qk = jnp.asarray(K.pack_u64(np.array([1, 3, 4], np.uint64)))
+    found, _ = Q.get(remix, runset, qk)
+    assert list(np.asarray(found)) == [False, True, False]

