@@ -1,0 +1,137 @@
+"""REMIX (re)build cost: CKB-based incremental vs from-scratch (Snippet 1).
+
+The Snippet-1 experiment: a partition holds R table files on disk and a
+minor compaction appends one freshly flushed table. Building the new REMIX
+  - from scratch reads every old table's key-value data (keys, vals, seq,
+    tomb sections) and re-sorts all keys;
+  - incrementally reads only the old tables' Compressed Keys Blocks plus
+    the old REMIX's selector stream, and never touches a value block.
+Both must produce bit-identical REMIX structures; the incremental path is
+what buys the reference implementation its 2x random-write throughput.
+
+Run directly (``python -m benchmarks.rebuild_bench``) or via
+``python -m benchmarks.run --only rebuild``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.core import keys as CK
+from repro.core.remix import build_remix
+from repro.core.runs import make_run
+from repro.db.partition import Table
+from repro.io.rebuild import incremental_build_remix
+from repro.io.remix_io import dump_remix, load_remix
+from repro.io.sstable import write_sstable
+
+R_OLD = 8
+N_PER_TABLE = 16384
+D = 32
+
+
+def _setup(root: str, seed: int = 0):
+    """R_OLD tables on disk (with CKBs) + their REMIX file + one new run."""
+    rng = np.random.default_rng(seed)
+    total = (R_OLD + 1) * N_PER_TABLE
+    domain = np.arange(1, total + 1, dtype=np.uint64) * 64
+    owner = rng.integers(0, R_OLD + 1, total)
+    paths, runs, seqbase = [], [], 1
+    for i in range(R_OLD):
+        kk = domain[owner == i]
+        seqs = np.arange(seqbase, seqbase + len(kk), dtype=np.uint32)
+        seqbase += len(kk)
+        run = make_run(kk, seq=seqs, sort=True)
+        p = os.path.join(root, f"t-{i:06d}.sst")
+        write_sstable(
+            p, np.asarray(run.keys), np.asarray(run.vals),
+            np.asarray(run.seq), np.asarray(run.tomb),
+        )
+        paths.append(p)
+        runs.append(run)
+    old_remix, _ = build_remix(runs, d=D)
+    rpath = os.path.join(root, "x-000000.rmx")
+    dump_remix(old_remix, rpath)
+    kk = domain[owner == R_OLD]  # the freshly flushed (in-memory) table
+    new_run = make_run(
+        kk, seq=np.arange(seqbase, seqbase + len(kk), dtype=np.uint32),
+        sort=True,
+    )
+    return paths, rpath, new_run
+
+
+def _fresh_handles(paths):
+    """New lazy handles so per-section read accounting starts at zero."""
+    return [Table.from_file(p) for p in paths]
+
+
+def _section_bytes(tables, sections):
+    return sum(t._rd().bytes_read[s] for t in tables for s in sections)
+
+
+def run(csv: CSV) -> None:
+    with tempfile.TemporaryDirectory(prefix="rebuild-bench-") as root:
+        paths, rpath, new_run = _setup(root)
+        nk = [np.asarray(new_run.keys)]
+        ns = [np.asarray(new_run.seq)]
+
+        # ---- from scratch: read old tables' KV data, global re-sort ----
+        tabs = _fresh_handles(paths)
+        t0 = time.perf_counter()
+        runs = [
+            make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb, sort=False)
+            for t in tabs
+        ] + [new_run]
+        scratch, _ = build_remix(runs, d=D)
+        t_scratch = time.perf_counter() - t0
+        kv_scratch = _section_bytes(tabs, ("keys", "vals", "seq", "tomb"))
+        val_scratch = _section_bytes(tabs, ("vals",))
+
+        # ---- incremental: old REMIX + CKBs only ----
+        tabs = _fresh_handles(paths)
+        t0 = time.perf_counter()
+        old_remix = load_remix(rpath)
+        inc = incremental_build_remix(
+            old_remix, [t.key_words() for t in tabs], nk, ns, d=D
+        )
+        t_inc = time.perf_counter() - t0
+        ckb_inc = _section_bytes(tabs, ("ckb",))
+        val_inc = _section_bytes(tabs, ("vals",))
+        kv_inc = _section_bytes(tabs, ("keys", "vals", "seq", "tomb"))
+
+        identical = all(
+            np.array_equal(np.asarray(getattr(scratch, f)),
+                           np.asarray(getattr(inc, f)))
+            for f in ("anchors", "cursors", "selectors")
+        ) and int(np.asarray(scratch.n_entries)) == int(
+            np.asarray(inc.n_entries)
+        )
+
+    n = R_OLD * N_PER_TABLE
+    csv.emit("rebuild_scratch", t_scratch * 1e6,
+             f"kv_bytes_read={kv_scratch};value_bytes_read={val_scratch}")
+    csv.emit("rebuild_incremental", t_inc * 1e6,
+             f"ckb_bytes_read={ckb_inc};value_bytes_read={val_inc};"
+             f"kv_bytes_read={kv_inc}")
+    csv.emit(
+        "rebuild_summary", 0.0,
+        f"n_old_entries={n};speedup={t_scratch / max(t_inc, 1e-9):.2f}x;"
+        f"read_reduction={kv_scratch / max(ckb_inc, 1):.2f}x;"
+        f"bit_identical={identical}",
+    )
+    if not identical:
+        raise AssertionError("incremental REMIX differs from scratch build")
+    if val_inc != 0:
+        raise AssertionError(
+            f"incremental rebuild read {val_inc} value bytes (expected 0)"
+        )
+
+
+if __name__ == "__main__":
+    c = CSV()
+    print("name,us_per_call,derived")
+    run(c)

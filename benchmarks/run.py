@@ -24,6 +24,7 @@ def main() -> None:
         fig14_16_stores,
         fig17_ycsb,
         kernels_bench,
+        rebuild_bench,
         table1_storage,
     )
 
@@ -35,6 +36,7 @@ def main() -> None:
         "fig14_16": fig14_16_stores.run,
         "fig17": fig17_ycsb.run,
         "kernels": kernels_bench.run,
+        "rebuild": rebuild_bench.run,
     }
     if args.only:
         names = args.only.split(",")

@@ -63,6 +63,30 @@ def build_remix(runs: Sequence[Run], d: int = 32) -> tuple[Remix, RunSet]:
     return _remix_from_layout(layout, run_keys, len(runs)), runset
 
 
+def remix_from_order(
+    runid: np.ndarray,
+    pos: np.ndarray,
+    newest: np.ndarray,
+    run_keys: Sequence[np.ndarray],
+    d: int,
+) -> Remix:
+    """Build a Remix from a precomputed (key asc, seq desc) merge order.
+
+    Skips the global sort of :func:`build_remix`: callers that already
+    know the merged order — e.g. the incremental rebuild that recovers it
+    from an old REMIX's selector stream plus the new runs (§4.2,
+    Snippet 1) — pay only the group layout cost. ``run_keys`` must list
+    every run's (Ni, KW) uint32 keys in run-id order.
+    """
+    if d < len(run_keys):
+        raise ValueError(
+            f"group size D={d} must be >= number of runs R={len(run_keys)}"
+        )
+    layout = V.layout_from_order(runid, pos, newest, d)
+    return _remix_from_layout(layout, [np.asarray(k) for k in run_keys],
+                              len(run_keys))
+
+
 def _remix_from_layout(
     layout: V.ViewLayout, run_keys, r: int
 ) -> Remix:

@@ -112,15 +112,20 @@ def _layout_groups(newest: np.ndarray, d: int) -> np.ndarray:
     return slot_of_cluster[cluster_of_entry] + within
 
 
-def build_view(run_keys, run_seqs, d: int) -> ViewLayout:
-    """Construct the sorted-view layout for runs given as host arrays.
+def layout_from_order(
+    runid: np.ndarray, pos: np.ndarray, newest: np.ndarray, d: int
+) -> ViewLayout:
+    """Lay out a precomputed (key asc, seq desc) merge order into groups.
 
-    ``run_keys``: list of (Ni, KW) uint32; ``run_seqs``: list of (Ni,) uint32.
+    ``runid``/``pos``/``newest`` are parallel arrays over the merged
+    entries in view order. This is the sort-free half of
+    :func:`build_view`; the incremental REMIX rebuild
+    (:mod:`repro.io.rebuild`) calls it with an order recovered from an old
+    REMIX's selector stream instead of a fresh global sort.
     """
-    r = len(run_keys)
-    if d < r:
-        raise ValueError(f"group size D={d} must be >= number of runs R={r}")
-    runid, pos, _, newest = _merge_order(run_keys, run_seqs)
+    runid = np.asarray(runid, np.int32)
+    pos = np.asarray(pos, np.int32)
+    newest = np.asarray(newest, bool)
     slots = _layout_groups(newest, d)
     n_slots_used = int(slots[-1]) + 1 if slots.shape[0] else 0
     n_slots = max(d, ((n_slots_used + d - 1) // d) * d)
@@ -139,3 +144,15 @@ def build_view(run_keys, run_seqs, d: int) -> ViewLayout:
         n_entries=int(runid.shape[0]),
         d=d,
     )
+
+
+def build_view(run_keys, run_seqs, d: int) -> ViewLayout:
+    """Construct the sorted-view layout for runs given as host arrays.
+
+    ``run_keys``: list of (Ni, KW) uint32; ``run_seqs``: list of (Ni,) uint32.
+    """
+    r = len(run_keys)
+    if d < r:
+        raise ValueError(f"group size D={d} must be >= number of runs R={r}")
+    runid, pos, _, newest = _merge_order(run_keys, run_seqs)
+    return layout_from_order(runid, pos, newest, d)

@@ -87,7 +87,21 @@ class ExecResult:
     carried: Table | None = None  # aborted new data (stays in MemTable/WAL)
 
 
-def execute(plan: Plan, cfg: CompactionConfig) -> ExecResult:
+def _persist_tables(tables: list[Table], storage) -> None:
+    """Write freshly produced tables through the SSTable writer (io layer);
+    each gains a file path and (optionally) a CKB trailer."""
+    if storage is None:
+        return
+    from repro.core import keys as CK
+
+    for t in tables:
+        name = storage.write_table(
+            CK.pack_u64(t.keys), t.vals, t.seq, t.tomb
+        )
+        t.path = storage.table_path(name)
+
+
+def execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
     p = plan.partition
     if plan.kind in ("noop",):
         return ExecResult()
@@ -95,11 +109,17 @@ def execute(plan: Plan, cfg: CompactionConfig) -> ExecResult:
         return ExecResult(carried=plan.new)
     if plan.kind == "minor":
         written = 0
-        for t in chunk_table(plan.new, cfg.table_cap):
+        outs = chunk_table(plan.new, cfg.table_cap)
+        _persist_tables(outs, storage)
+        for t in outs:
             p.tables.append(t)
             written += t.bytes()
         p.invalidate()
-        p.index()  # rebuild REMIX now; its size counts toward WA
+        # rebuild REMIX now (incrementally: tables were only appended);
+        # its size counts toward WA
+        p.index()
+        if storage is not None:
+            p.persist_index(storage)
         return ExecResult(bytes_written=written + p.remix_bytes)
     if plan.kind == "major":
         order = np.argsort([t.n for t in p.tables])
@@ -107,15 +127,19 @@ def execute(plan: Plan, cfg: CompactionConfig) -> ExecResult:
         keep = [p.tables[i] for i in order[plan.major_inputs :]]
         merged = merge_tables(chosen + [plan.new])
         outs = chunk_table(merged, cfg.table_cap)
+        _persist_tables(outs, storage)
         p.tables = keep + outs
         p.invalidate()
         p.index()
+        if storage is not None:
+            p.persist_index(storage)
         written = sum(t.bytes() for t in outs)
         return ExecResult(bytes_written=written + p.remix_bytes)
     if plan.kind == "split":
         # full merge (tombstones can be dropped: whole partition rewritten)
         merged = merge_tables(p.tables + [plan.new], drop_tombs=True)
         outs = chunk_table(merged, cfg.table_cap)
+        _persist_tables(outs, storage)
         written = sum(t.bytes() for t in outs)
         parts: list[Partition] = []
         m = cfg.split_m
@@ -124,6 +148,8 @@ def execute(plan: Plan, cfg: CompactionConfig) -> ExecResult:
             lo = p.lo if i == 0 else int(group[0].keys[0])
             np_ = Partition(lo=lo, tables=list(group), d=p.d)
             np_.index()
+            if storage is not None:
+                np_.persist_index(storage)
             written += np_.remix_bytes
             parts.append(np_)
         if not parts:  # everything deleted

@@ -71,21 +71,89 @@ def _pad_index(remix: Remix, runset: RunSet, d: int) -> tuple[Remix, RunSet]:
     )
 
 
-@dataclasses.dataclass
 class Table:
-    """One immutable sorted table file."""
+    """One immutable sorted table file.
 
-    keys: np.ndarray  # (N,) uint64 ascending, unique
-    vals: np.ndarray  # (N, VW) uint32
-    seq: np.ndarray  # (N,) uint32
-    tomb: np.ndarray  # (N,) bool
+    Either fully in-memory (``keys``/``vals``/``seq``/``tomb`` arrays) or a
+    lazily-loadable handle onto an on-disk SSTable (``path``): column
+    sections are fetched — and checksum-verified — on first access.
+    ``key_words()`` serves REMIX (re)builds from the table's Compressed
+    Keys Block when one exists, so a rebuild never reads value bytes.
+    """
+
+    def __init__(
+        self,
+        keys: np.ndarray | None = None,  # (N,) uint64 ascending, unique
+        vals: np.ndarray | None = None,  # (N, VW) uint32
+        seq: np.ndarray | None = None,  # (N,) uint32
+        tomb: np.ndarray | None = None,  # (N,) bool
+        path: str | None = None,
+    ):
+        if keys is None and path is None:
+            raise ValueError("Table needs in-memory arrays or a file path")
+        self._keys, self._vals = keys, vals
+        self._seq, self._tomb = seq, tomb
+        self.path = path
+        self._reader = None
+
+    @classmethod
+    def from_file(cls, path: str) -> "Table":
+        return cls(path=path)
+
+    def _rd(self):
+        if self._reader is None:
+            from repro.io.sstable import SSTableReader
+
+            self._reader = SSTableReader(self.path)
+        return self._reader
+
+    @property
+    def keys(self) -> np.ndarray:
+        if self._keys is None:
+            self._keys = CK.unpack_u64(self._rd().read_keys())
+        return self._keys
+
+    @property
+    def vals(self) -> np.ndarray:
+        if self._vals is None:
+            self._vals = self._rd().read_vals()
+        return self._vals
+
+    @property
+    def seq(self) -> np.ndarray:
+        if self._seq is None:
+            self._seq = self._rd().read_seq()
+        return self._seq
+
+    @property
+    def tomb(self) -> np.ndarray:
+        if self._tomb is None:
+            self._tomb = self._rd().read_tomb()
+        return self._tomb
 
     @property
     def n(self) -> int:
-        return len(self.keys)
+        if self._keys is not None:
+            return len(self._keys)
+        return self._rd().n
+
+    @property
+    def vw(self) -> int:
+        if self._vals is not None:
+            return self._vals.shape[1]
+        return self._rd().vw
+
+    def key_words(self) -> np.ndarray:
+        """(N, KW) uint32 key words for index builds; prefers the CKB."""
+        if self._keys is not None:
+            return CK.pack_u64(self._keys)
+        rd = self._rd()
+        if rd.has_ckb:
+            return rd.read_ckb_keys()
+        return rd.read_keys()
 
     def bytes(self, key_bytes: int = 8) -> int:
-        return self.n * (key_bytes + self.vals.shape[1] * 4 + 5)
+        return self.n * (key_bytes + self.vw * 4 + 5)
 
 
 def merge_tables(tables: list[Table], drop_tombs: bool = False) -> Table:
@@ -129,10 +197,26 @@ class Partition:
         self._remix: Remix | None = None
         self._runset: RunSet | None = None
         self.remix_bytes = 0  # last REMIX build size (for WA accounting)
+        # last built (unpadded) REMIX + the tables it covered: a minor
+        # compaction that only appends tables rebuilds incrementally from
+        # it + the tables' CKBs instead of re-sorting everything (§4.2)
+        self._built_remix: Remix | None = None
+        self._built_tables: list[Table] = []
+        self.remix_name: str | None = None  # manifest name when persisted
+        self.last_build_kind = "none"  # none | scratch | incremental | reuse
 
     def invalidate(self):
+        """Drop the padded query cache; the last built REMIX is kept as the
+        base for an incremental rebuild."""
         self._remix = None
         self._runset = None
+
+    def preload_index(self, remix: Remix):
+        """Adopt a deserialized REMIX for the current table list (recovery
+        path): the next ``index()`` reuses it instead of rebuilding."""
+        self._built_remix = remix
+        self._built_tables = list(self.tables)
+        self.remix_bytes = int(remix.storage_bytes())
 
     @property
     def n_entries(self) -> int:
@@ -157,15 +241,68 @@ class Partition:
                     tomb=np.zeros(0, bool),
                 )
             ]
-            runs = [
-                make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb, sort=False)
-                for t in tabs
-            ]
-            d = max(self.d, len(runs))  # paper requires D >= R
-            remix, runset = build_remix(runs, d=d)
+            d = max(self.d, len(tabs))  # paper requires D >= R
+            remix = self._try_incremental(tabs, d)
+            if remix is not None:
+                from repro.core.runs import stack_runs
+
+                runset = stack_runs(
+                    [
+                        make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb,
+                                 sort=False)
+                        for t in tabs
+                    ]
+                )
+            else:
+                runs = [
+                    make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb,
+                             sort=False)
+                    for t in tabs
+                ]
+                remix, runset = build_remix(runs, d=d)
+                self.last_build_kind = "scratch"
+            self._built_remix = remix
+            self._built_tables = list(tabs) if self.tables else []
             self.remix_bytes = int(remix.storage_bytes())
             self._remix, self._runset = _pad_index(remix, runset, d)
         return self._remix, self._runset
+
+    def _try_incremental(self, tabs: list[Table], d: int) -> Remix | None:
+        """Reuse/extend the last built REMIX when this rebuild only appended
+        tables (minor compaction) — zero key comparisons among old runs.
+
+        Returns None when the table set changed in any other way (major,
+        split, first build) or the group size moved; those rebuild from
+        scratch.
+        """
+        prev, base = self._built_remix, self._built_tables
+        if prev is None or not base or prev.r != len(base) or prev.d != d:
+            return None
+        if len(tabs) < len(base) or any(
+            a is not b for a, b in zip(base, tabs)
+        ):
+            return None
+        if len(tabs) == len(base):  # nothing changed: reuse as-is
+            self.last_build_kind = "reuse"
+            return prev
+        from repro.io.rebuild import incremental_build_remix
+
+        new = tabs[len(base):]
+        remix = incremental_build_remix(
+            prev,
+            [t.key_words() for t in base],
+            [t.key_words() for t in new],
+            [np.asarray(t.seq) for t in new],
+            d=d,
+        )
+        self.last_build_kind = "incremental"
+        return remix
+
+    def persist_index(self, storage) -> None:
+        """Build (if needed) and serialize this partition's REMIX; the
+        padded on-device copy is derived, only the unpadded index persists."""
+        self.index()
+        self.remix_name = storage.write_remix(self._built_remix)
 
     def estimate_remix_bytes(self, extra_entries: int = 0) -> int:
         """Size estimate of a REMIX over current + new entries (§4.2 Abort)."""

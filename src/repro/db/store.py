@@ -17,6 +17,7 @@ import tempfile
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import keys as CK
@@ -47,6 +48,10 @@ class RemixDBConfig:
     # in-group search mode: "auto" picks binary probes on CPU (gathers are
     # scalar-expensive) and the vectorized all-slot compare on TPU (§Perf)
     ingroup: str = "auto"
+    # persistence root: when set, flushes write SSTables + REMIX files there
+    # and commit a manifest; RemixDB.open(dir) recovers the store from it
+    data_dir: str | None = None
+    ckb: bool = True  # append Compressed Keys Blocks to new table files
 
 
 
@@ -61,16 +66,128 @@ def _pow2pad(n: int) -> int:
 class RemixDB:
     def __init__(self, config: RemixDBConfig | None = None):
         self.cfg = config or RemixDBConfig()
+        # resolve the in-group search mode once; query paths only ever see
+        # a valid "binary"/"vector" (a stray "auto" would raise in seek)
+        mode = self.cfg.ingroup
+        if mode == "auto":
+            mode = "binary" if jax.default_backend() == "cpu" else "vector"
+        if mode not in ("binary", "vector"):
+            raise ValueError(
+                f"ingroup must be 'auto', 'binary' or 'vector', got {mode!r}"
+            )
+        self._ingroup = mode
         self.mem = MemTable(vw=self.cfg.vw)
-        wal_dir = self.cfg.wal_dir or tempfile.mkdtemp(prefix="remixdb-")
-        os.makedirs(wal_dir, exist_ok=True)
-        self.wal = WAL(os.path.join(wal_dir, "wal.log"), vw=self.cfg.vw)
+        self.storage = None
+        state = None
+        if self.cfg.data_dir is not None:
+            from repro.io.manifest import Storage
+
+            self.storage = Storage(self.cfg.data_dir, with_ckb=self.cfg.ckb)
+            state = self.storage.load_state()
+            wal_path = self.storage.wal_path()
+        else:
+            wal_dir = self.cfg.wal_dir or tempfile.mkdtemp(prefix="remixdb-")
+            os.makedirs(wal_dir, exist_ok=True)
+            wal_path = os.path.join(wal_dir, "wal.log")
+        self.wal = WAL(wal_path, vw=self.cfg.vw)
         self.partitions: list[Partition] = [Partition(lo=0, d=self.cfg.d)]
         self.seq = 1
         # write-amplification accounting (fig 16)
         self.user_bytes = 0
         self.table_bytes_written = 0
         self.compaction_log: list[dict] = []
+        if state is not None:
+            self._recover(state)
+        elif self.storage is not None:
+            # fresh directory (or crashed before the first commit): any
+            # table/REMIX files present are orphans of an uncommitted
+            # flush, but WAL blocks written before the crash are real
+            # acknowledged data — adopt and replay them (empty checkpoint,
+            # so every written block shows as an epoch flip)
+            self.storage.gc_orphans(set())
+            if self.wal.recover_tail():
+                self._replay_wal()
+
+    @classmethod
+    def open(cls, data_dir: str, config: RemixDBConfig | None = None
+             ) -> "RemixDB":
+        """Open (or create) a persistent RemixDB rooted at ``data_dir``:
+        recovers partitions from the committed manifest and replays the
+        WAL tail on top (§4.3)."""
+        cfg = config or RemixDBConfig()
+        cfg = dataclasses.replace(cfg, data_dir=data_dir)
+        return cls(cfg)
+
+    def _recover(self, state: dict) -> None:
+        """Rebuild partitions/WAL/MemTable from a committed manifest."""
+        from repro.io.remix_io import load_remix
+
+        if int(state.get("vw", self.cfg.vw)) != self.cfg.vw:
+            raise ValueError(
+                f"data dir has vw={state['vw']}, config has vw={self.cfg.vw}"
+            )
+        live: set[str] = set()
+        parts: list[Partition] = []
+        for pe in state["partitions"]:
+            tables = [
+                Table.from_file(self.storage.table_path(nm))
+                for nm in pe["tables"]
+            ]
+            live.update(pe["tables"])
+            p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
+            if pe.get("remix"):
+                live.add(pe["remix"])
+                p.remix_name = pe["remix"]
+                p.preload_index(
+                    load_remix(self.storage.remix_path(pe["remix"]))
+                )
+            parts.append(p)
+        if parts:
+            self.partitions = sorted(parts, key=lambda p: p.lo)
+        self.storage.gc_orphans(live)
+        self.seq = int(state.get("seq", 1))
+        self.wal.restore_state(state["wal"])
+        self.wal.recover_tail()
+        self._replay_wal()
+
+    def _replay_wal(self) -> None:
+        """Rebuild the MemTable from the WAL's live log; advance seq past
+        every replayed record."""
+        self.mem = self.recover_memtable()
+        for e in self.mem.data.values():
+            self.seq = max(self.seq, e.seq + 1)
+
+    def _commit(self) -> None:
+        """Durably publish the current version (atomic manifest commit)."""
+        state = dict(
+            seq=int(self.seq),
+            vw=self.cfg.vw,
+            d=self.cfg.d,
+            partitions=[
+                dict(
+                    lo=p.lo,
+                    tables=[os.path.basename(t.path) for t in p.tables],
+                    remix=p.remix_name,
+                )
+                for p in self.partitions
+            ],
+            wal=self.wal.save_state(),
+        )
+        self.storage.commit(state)
+        # files superseded by this version (old REMIXes, compacted-away
+        # tables) are unreferenced now — reclaim them immediately instead
+        # of leaking until the next open()
+        live = {n for pe in state["partitions"] for n in pe["tables"]}
+        live |= {pe["remix"] for pe in state["partitions"] if pe["remix"]}
+        self.storage.gc_orphans(live)
+
+    def close(self) -> None:
+        """Flush WAL buffers and, in persistent mode, commit a manifest so
+        reopening needs no tail scan. The MemTable stays in the WAL."""
+        self.wal.sync()
+        if self.storage is not None:
+            self._commit()
+            self.wal.release_quarantine()
 
     # ---------------- write path ----------------
     def put(self, key: int, val) -> None:
@@ -136,7 +253,7 @@ class RemixDB:
         new_parts: list[Partition] = []
         for p, pl in zip(self.partitions, plans):
             kinds[pl.kind] = kinds.get(pl.kind, 0) + 1
-            res = execute(pl, self.cfg.compaction)
+            res = execute(pl, self.cfg.compaction, storage=self.storage)
             self.table_bytes_written += res.bytes_written
             if res.carried is not None:  # aborted: back into the MemTable
                 for j in range(res.carried.n):
@@ -148,8 +265,15 @@ class RemixDB:
                 new_parts.append(p)
         new_parts.sort(key=lambda p: p.lo)
         self.partitions = new_parts
-        # WAL GC: only carried/hot keys remain live in the log (§4.3)
-        self.wal.gc(set(self.mem.data.keys()))
+        # WAL GC: only carried/hot keys remain live in the log (§4.3).
+        # In persistent mode freed blocks stay quarantined until the new
+        # mapping table is committed with the manifest: a crash in between
+        # must still be able to replay the previous checkpoint's blocks.
+        self.wal.gc(set(self.mem.data.keys()),
+                    defer_free=self.storage is not None)
+        if self.storage is not None:
+            self._commit()
+            self.wal.release_quarantine()
         stats = dict(kinds=kinds)
         self.compaction_log.append(stats)
         return stats
@@ -164,15 +288,11 @@ class RemixDB:
 
     def _qkw(self) -> dict:
         """Per-backend query kwargs (§Perf: binary in-group probes win on
-        CPU, the vectorized all-slot compare wins on TPU)."""
+        CPU, the vectorized all-slot compare wins on TPU). ``auto`` was
+        resolved once at construction; only valid modes reach seek."""
         if self.cfg.use_kernels:
             return {}
-        mode = self.cfg.ingroup
-        if mode == "auto":
-            import jax
-
-            mode = "binary" if jax.default_backend() == "cpu" else "vector"
-        return dict(ingroup=mode)
+        return dict(ingroup=self._ingroup)
 
     def get(self, key: int):
         e = self.mem.get(int(key))

@@ -57,9 +57,14 @@ class WAL:
         self.capacity_blocks = capacity_blocks
         self.epoch_bits: dict[int, int] = {}  # phys block -> current 1-bit
         self.free: list[int] = []
+        # blocks freed by a GC whose mapping table is not yet durably
+        # committed: reusing them would corrupt the checkpointed virtual
+        # log, so they are held here until release_quarantine()
+        self.quarantine: list[int] = []
         self.next_phys = 0
         self.vlog = VirtualLog(timestamp=1)
         self._pending: list[tuple[int, int, int, np.ndarray]] = []
+        self._dirty = False  # blocks written since the last fsync
         self.bytes_written = 0  # physical write accounting (for WA ratios)
         if not os.path.exists(path):
             with open(path, "wb"):
@@ -101,6 +106,7 @@ class WAL:
         with open(self.path, "r+b") as f:
             f.seek(phys * BLOCK)
             f.write(data)
+        self._dirty = True
         self.bytes_written += BLOCK
         self.vlog.blocks.append(
             BlockMap(phys=phys, epoch=epoch, written=True,
@@ -108,8 +114,14 @@ class WAL:
         )
 
     def sync(self):
-        if self._pending:
+        """Flush buffered records to blocks and fsync them to disk: after
+        sync() returns, everything appended so far survives power loss."""
+        while self._pending:
             self._flush_pending()
+        if self._dirty:
+            with open(self.path, "rb") as f:
+                os.fsync(f.fileno())
+            self._dirty = False
 
     # ---------- read / recovery path ----------
     def _read_block(self, phys: int):
@@ -142,11 +154,17 @@ class WAL:
                     yield rec
 
     # ---------- garbage collection ----------
-    def gc(self, live_keys: set[int]):
+    def gc(self, live_keys: set[int], defer_free: bool = False):
         """Build a new virtual log keeping only records of ``live_keys``.
 
         Blocks with >= 1/4 valid records are remapped with a masking bitmap;
         others are freed and their survivors rewritten (batched re-append).
+
+        With ``defer_free`` the freed blocks are quarantined instead of
+        returned to the free list: until the new mapping table is durably
+        committed, the previous checkpoint still references them, and a
+        crash between GC and commit must find their contents intact. Call
+        :meth:`release_quarantine` after the commit.
         """
         self.sync()
         new = VirtualLog(timestamp=self.vlog.timestamp + 1)
@@ -187,9 +205,73 @@ class WAL:
                     )
                 )
         self.vlog = new
-        self.free.extend(freed)
+        (self.quarantine if defer_free else self.free).extend(freed)
         self._pending.extend(rewrite)
         self.sync()
+
+    def release_quarantine(self):
+        """Return quarantined blocks to the free list (mapping committed)."""
+        self.free.extend(self.quarantine)
+        self.quarantine = []
+
+    # ---------- checkpoint / crash recovery ----------
+    def save_state(self) -> dict:
+        """JSON-safe snapshot of the mapping table for a manifest commit.
+
+        Quarantined blocks are saved as free: the state being committed is
+        exactly what makes their reuse safe again.
+        """
+        self.sync()
+        return dict(
+            timestamp=self.vlog.timestamp,
+            next_phys=self.next_phys,
+            free=sorted(self.free + self.quarantine),
+            epoch=[[k, v] for k, v in sorted(self.epoch_bits.items())],
+            blocks=[
+                [b.phys, b.epoch, int(b.written), b.bitmap]
+                for b in self.vlog.blocks
+            ],
+        )
+
+    def restore_state(self, state: dict):
+        """Adopt a checkpointed mapping table (inverse of save_state)."""
+        self.vlog = VirtualLog(timestamp=int(state["timestamp"]))
+        self.vlog.blocks = [
+            BlockMap(phys=p, epoch=e, written=bool(w), bitmap=bm)
+            for p, e, w, bm in state["blocks"]
+        ]
+        self.next_phys = int(state["next_phys"])
+        self.free = [int(b) for b in state["free"]]
+        self.quarantine = []
+        self.epoch_bits = {int(k): int(v) for k, v in state["epoch"]}
+        self._pending = []
+
+    def recover_tail(self) -> int:
+        """Adopt blocks written after the checkpoint (epoch flip scan, §4.3).
+
+        Appends since the last commit went either to checkpoint-free blocks
+        or past ``next_phys``; in both cases the block's on-disk epoch bit
+        is the checkpointed expectation flipped. Returns #blocks adopted.
+        """
+        n_phys = os.path.getsize(self.path) // BLOCK
+        candidates = sorted(set(self.free) | set(range(self.next_phys, n_phys)))
+        adopted = 0
+        for phys in candidates:
+            if phys >= n_phys:
+                continue
+            epoch, recs = self._read_block(phys)
+            if epoch != self.epoch_bits.get(phys, 0) ^ 1 or not recs:
+                continue
+            self.epoch_bits[phys] = epoch
+            if phys in self.free:
+                self.free.remove(phys)
+            self.next_phys = max(self.next_phys, phys + 1)
+            self.vlog.blocks.append(
+                BlockMap(phys=phys, epoch=epoch, written=True,
+                         bitmap=(1 << len(recs)) - 1)
+            )
+            adopted += 1
+        return adopted
 
     def manifest(self) -> str:
         return json.dumps(

@@ -1,0 +1,85 @@
+"""Compressed Keys Block: prefix-compressed sorted key stream (Snippet 1).
+
+A CKB re-encodes every key of a table (no values) in sorted order. Keys are
+fixed-width ``KW`` uint32-word vectors; each key is serialized big-endian
+(word 0 first) so that byte-wise shared prefixes coincide with the
+lexicographic word order used everywhere else. Per key the stream stores::
+
+    u8 shared | u8 non_shared | suffix bytes
+
+with ``shared`` forced to 0 at every restart point (default: every 16th
+key), followed by a restart-offset array so future work can binary-search
+within a block. Decoding is a single sequential pass.
+
+Layout::
+
+    magic 'CKB1' u32 | n u32 | key_bytes u16 | restart_interval u16 |
+    entry stream | restarts (u32 each) | n_restarts u32
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x31424B43  # 'CKB1' little-endian
+_HDR = struct.Struct("<IIHH")
+
+
+def _key_bytes_be(keys: np.ndarray) -> np.ndarray:
+    """(N, KW) uint32 -> (N, KW*4) uint8, big-endian within each word."""
+    keys = np.ascontiguousarray(np.asarray(keys, np.uint32))
+    n, kw = keys.shape
+    return keys.astype(">u4").view(np.uint8).reshape(n, kw * 4)
+
+
+def encode_ckb(keys: np.ndarray, restart_interval: int = 16) -> bytes:
+    """Encode sorted (N, KW) uint32 keys into a CKB byte string."""
+    keys = np.asarray(keys, np.uint32)
+    if keys.ndim != 2:
+        raise ValueError("CKB keys must be (N, KW) uint32")
+    n, kw = keys.shape
+    kb = kw * 4
+    if kb > 255:
+        raise ValueError("CKB supports keys up to 255 bytes")
+    raw = _key_bytes_be(keys)
+    shared = np.zeros(n, np.int32)
+    if n > 1:
+        eq = raw[1:] == raw[:-1]
+        shared[1:] = np.cumprod(eq, axis=1).sum(axis=1)
+    if restart_interval > 0:
+        shared[::restart_interval] = 0
+    parts = [_HDR.pack(MAGIC, n, kb, restart_interval)]
+    restarts = []
+    off = _HDR.size
+    for i in range(n):
+        s = int(shared[i])
+        if restart_interval > 0 and i % restart_interval == 0:
+            restarts.append(off)
+        suffix = raw[i, s:].tobytes()
+        parts.append(bytes((s, kb - s)))
+        parts.append(suffix)
+        off += 2 + kb - s
+    parts.append(np.asarray(restarts, "<u4").tobytes())
+    parts.append(struct.pack("<I", len(restarts)))
+    return b"".join(parts)
+
+
+def decode_ckb(buf: bytes | memoryview) -> np.ndarray:
+    """Decode a CKB back into (N, KW) uint32 keys (sorted order)."""
+    mv = memoryview(buf)
+    magic, n, kb, _interval = _HDR.unpack_from(mv, 0)
+    if magic != MAGIC:
+        raise ValueError("bad CKB magic")
+    if kb % 4:
+        raise ValueError("CKB key size must be a whole number of words")
+    out = np.zeros((n, kb), np.uint8)
+    prev = np.zeros(kb, np.uint8)
+    off = _HDR.size
+    for i in range(n):
+        s, ns = mv[off], mv[off + 1]
+        off += 2
+        prev[s : s + ns] = np.frombuffer(mv[off : off + ns], np.uint8)
+        off += ns
+        out[i] = prev
+    return out.view(">u4").astype(np.uint32).reshape(n, kb // 4)

@@ -1,0 +1,176 @@
+"""Versioned table/partition registry with atomic rename commits (§4.3).
+
+``Manifest`` owns the commit protocol (see the package docstring diagram):
+every commit writes ``MANIFEST-<v>.tmp``, fsyncs, renames it into place,
+then repoints ``CURRENT`` the same way. A crash at any step leaves either
+the previous or the new version fully readable. ``Storage`` layers file
+allocation on top: monotonically numbered immutable table / REMIX files
+plus orphan collection for files a crashed flush wrote but never
+committed.
+
+The manifest state is a plain JSON dict; ``repro.io`` imposes no schema
+beyond ``{"version": int}`` so the db layer owns its own contents
+(partitions, sequence number, WAL mapping table).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+CURRENT = "CURRENT"
+_MANIFEST_RE = re.compile(r"^MANIFEST-(\d{6})$")
+_FILE_RE = re.compile(r"^(t|x)-(\d{6})\.(sst|rmx)$")
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class Manifest:
+    """The versioned registry: MANIFEST-<v> files + the CURRENT pointer."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _current_name(self) -> str | None:
+        cur = os.path.join(self.root, CURRENT)
+        if not os.path.exists(cur):
+            return None
+        with open(cur, "r") as f:
+            name = f.read().strip()
+        return name or None
+
+    def current_version(self) -> int:
+        name = self._current_name()
+        if name is None:
+            return 0
+        m = _MANIFEST_RE.match(name)
+        if not m:
+            raise ValueError(f"corrupt CURRENT pointer: {name!r}")
+        return int(m.group(1))
+
+    def load(self) -> dict | None:
+        """State of the committed version, or None for a fresh directory."""
+        name = self._current_name()
+        if name is None:
+            return None
+        path = os.path.join(self.root, name)
+        if not _MANIFEST_RE.match(name) or not os.path.exists(path):
+            raise ValueError(
+                f"CURRENT points at {name!r} which does not exist — "
+                f"corrupt manifest directory {self.root}"
+            )
+        with open(path, "r") as f:
+            return json.load(f)
+
+    def commit(self, state: dict) -> int:
+        """Durably publish ``state`` as the next version; returns it."""
+        version = self.current_version() + 1
+        state = dict(state, version=version)
+        name = f"MANIFEST-{version:06d}"
+        _atomic_write(
+            os.path.join(self.root, name),
+            json.dumps(state, separators=(",", ":")).encode(),
+        )
+        _atomic_write(os.path.join(self.root, CURRENT), name.encode() + b"\n")
+        # previous manifest versions are superseded; keep only the latest
+        for f in os.listdir(self.root):
+            m = _MANIFEST_RE.match(f)
+            if m and int(m.group(1)) < version:
+                os.remove(os.path.join(self.root, f))
+        return version
+
+
+class Storage:
+    """File allocation + commit glue for one RemixDB data directory.
+
+    Layout::
+
+        <root>/CURRENT, MANIFEST-xxxxxx      (Manifest)
+        <root>/tables/t-xxxxxx.sst           (immutable table files)
+        <root>/remix/x-xxxxxx.rmx            (immutable REMIX files)
+        <root>/wal.log                       (block-structured WAL)
+    """
+
+    def __init__(self, root: str, with_ckb: bool = True):
+        self.root = root
+        self.with_ckb = with_ckb
+        self.manifest = Manifest(root)
+        self.tables_dir = os.path.join(root, "tables")
+        self.remix_dir = os.path.join(root, "remix")
+        os.makedirs(self.tables_dir, exist_ok=True)
+        os.makedirs(self.remix_dir, exist_ok=True)
+        self.bytes_written = 0
+        self._next_id = 1 + max(
+            (
+                int(m.group(2))
+                for d in (self.tables_dir, self.remix_dir)
+                for f in os.listdir(d)
+                if (m := _FILE_RE.match(f))
+            ),
+            default=0,
+        )
+
+    def wal_path(self) -> str:
+        return os.path.join(self.root, "wal.log")
+
+    def table_path(self, name: str) -> str:
+        return os.path.join(self.tables_dir, name)
+
+    def remix_path(self, name: str) -> str:
+        return os.path.join(self.remix_dir, name)
+
+    def alloc_table_name(self) -> str:
+        name = f"t-{self._next_id:06d}.sst"
+        self._next_id += 1
+        return name
+
+    def alloc_remix_name(self) -> str:
+        name = f"x-{self._next_id:06d}.rmx"
+        self._next_id += 1
+        return name
+
+    def write_table(self, keys, vals, seq, tomb) -> str:
+        """Write one table file; returns its manifest-relative name."""
+        from repro.io.sstable import write_sstable
+
+        name = self.alloc_table_name()
+        self.bytes_written += write_sstable(
+            self.table_path(name), keys, vals, seq, tomb,
+            with_ckb=self.with_ckb,
+        )
+        return name
+
+    def write_remix(self, remix) -> str:
+        """Serialize one REMIX; returns its manifest-relative name."""
+        from repro.io.remix_io import dump_remix
+
+        name = self.alloc_remix_name()
+        self.bytes_written += dump_remix(remix, self.remix_path(name))
+        return name
+
+    def commit(self, state: dict) -> int:
+        return self.manifest.commit(state)
+
+    def load_state(self) -> dict | None:
+        return self.manifest.load()
+
+    def gc_orphans(self, live: set[str]) -> list[str]:
+        """Remove table/REMIX files not referenced by the committed state
+        (left behind by a flush that crashed before its commit)."""
+        removed = []
+        for d in (self.tables_dir, self.remix_dir):
+            for f in os.listdir(d):
+                if f.endswith(".tmp") or (
+                    _FILE_RE.match(f) and f not in live
+                ):
+                    os.remove(os.path.join(d, f))
+                    removed.append(f)
+        return removed

@@ -1,0 +1,197 @@
+"""On-disk SSTable files: columnar sections + per-block CRC32C + CKB.
+
+See :mod:`repro.io` for the byte-level layout diagram. Files are immutable:
+writers emit ``<path>.tmp`` and atomically rename, readers only ever see
+complete files. Section reads are lazy and individually checksummed — a
+reader that fetches only the CKB never touches (or validates) value bytes,
+which is what makes incremental REMIX rebuilds cheap (Snippet 1).
+"""
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+from repro.io.checksum import crc32c
+from repro.io.ckb import decode_ckb, encode_ckb
+
+MAGIC = b"RMIXSST1"
+FOOTER_MAGIC = b"RMIXFTR1"
+VERSION = 1
+FLAG_CKB = 1
+
+DEFAULT_BLOCK = 1 << 16  # 64 KB checksum granule
+
+_HEADER = struct.Struct("<8sHHHHQI12x")  # magic, ver, kw, vw, flags, n, blk
+_FOOTER_FIXED = struct.Struct("<6QII")  # 5 section offsets, ckb_len, nblk, blk
+_FOOTER_TAIL = struct.Struct("<II8s")  # footer_crc, footer_len, magic
+
+SECTIONS = ("keys", "vals", "seq", "tomb", "ckb")
+
+
+def write_sstable(
+    path: str,
+    keys: np.ndarray,
+    vals: np.ndarray,
+    seq: np.ndarray,
+    tomb: np.ndarray,
+    with_ckb: bool = True,
+    block_bytes: int = DEFAULT_BLOCK,
+) -> int:
+    """Write one table file atomically; returns bytes written.
+
+    ``keys``: (N, KW) uint32 sorted ascending (word 0 most significant);
+    ``vals``: (N, VW) uint32; ``seq``: (N,) uint32; ``tomb``: (N,) bool.
+    """
+    keys = np.ascontiguousarray(np.asarray(keys, np.uint32))
+    vals = np.ascontiguousarray(np.asarray(vals, np.uint32))
+    seq = np.ascontiguousarray(np.asarray(seq, np.uint32))
+    tomb = np.ascontiguousarray(np.asarray(tomb, bool))
+    n, kw = keys.shape
+    vw = vals.shape[1]
+    sections = [
+        keys.astype("<u4").tobytes(),
+        vals.astype("<u4").tobytes(),
+        seq.astype("<u4").tobytes(),
+        tomb.astype(np.uint8).tobytes(),
+    ]
+    flags = 0
+    if with_ckb:
+        sections.append(encode_ckb(keys))
+        flags |= FLAG_CKB
+    else:
+        sections.append(b"")
+    offs = []
+    pos = _HEADER.size
+    for s in sections:
+        offs.append(pos)
+        pos += len(s)
+    data = b"".join(sections)
+    crcs = [
+        crc32c(data[i : i + block_bytes])
+        for i in range(0, max(1, len(data)), block_bytes)
+    ]
+    footer = _FOOTER_FIXED.pack(
+        *offs, len(sections[4]), len(crcs), block_bytes
+    ) + np.asarray(crcs, "<u4").tobytes()
+    footer += _FOOTER_TAIL.pack(
+        crc32c(footer), len(footer) + _FOOTER_TAIL.size, FOOTER_MAGIC
+    )
+    header = _HEADER.pack(MAGIC, VERSION, kw, vw, flags, n, block_bytes)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(header)
+        f.write(data)
+        f.write(footer)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return _HEADER.size + len(data) + len(footer)
+
+
+class SSTableReader:
+    """Lazy, checksum-verifying reader for one table file.
+
+    Tracks per-section ``bytes_read`` so benchmarks can prove which parts
+    of the file a code path touched (e.g. CKB-based rebuild: vals == 0).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.bytes_read: dict[str, int] = {s: 0 for s in SECTIONS}
+        with open(path, "rb") as f:
+            hdr = f.read(_HEADER.size)
+            (magic, ver, self.kw, self.vw, self.flags, self.n, self.block_bytes
+             ) = _HEADER.unpack(hdr)
+            if magic != MAGIC or ver != VERSION:
+                raise ValueError(f"{path}: not an SSTable (v{VERSION}) file")
+            f.seek(-_FOOTER_TAIL.size, os.SEEK_END)
+            end = f.tell()
+            fcrc, flen, fmagic = _FOOTER_TAIL.unpack(f.read(_FOOTER_TAIL.size))
+            if fmagic != FOOTER_MAGIC:
+                raise ValueError(f"{path}: bad footer magic")
+            f.seek(end + _FOOTER_TAIL.size - flen)
+            body = f.read(flen - _FOOTER_TAIL.size)
+            if crc32c(body) != fcrc:
+                raise ValueError(f"{path}: footer checksum mismatch")
+            fixed = _FOOTER_FIXED.unpack_from(body, 0)
+            self._offs = dict(zip(SECTIONS, fixed[:5]))
+            self._ckb_len = fixed[5]
+            n_blocks, bb = fixed[6], fixed[7]
+            self._crcs = np.frombuffer(
+                body, "<u4", count=n_blocks, offset=_FOOTER_FIXED.size
+            )
+            self._data_start = _HEADER.size
+            self._data_end = self._offs["ckb"] + self._ckb_len
+            self.block_bytes = bb
+
+    @property
+    def has_ckb(self) -> bool:
+        return bool(self.flags & FLAG_CKB)
+
+    def _section_range(self, name: str) -> tuple[int, int]:
+        lens = dict(
+            keys=self.n * self.kw * 4,
+            vals=self.n * self.vw * 4,
+            seq=self.n * 4,
+            tomb=self.n,
+            ckb=self._ckb_len,
+        )
+        off = self._offs[name]
+        return off, off + lens[name]
+
+    def _read_checked(self, name: str) -> bytes:
+        """Read one section, verifying the CRC blocks that cover it."""
+        lo, hi = self._section_range(name)
+        bb = self.block_bytes
+        b0 = (lo - self._data_start) // bb
+        b1 = max(b0, (hi - self._data_start - 1) // bb) if hi > lo else b0
+        blo = self._data_start + b0 * bb
+        bhi = min(self._data_start + (b1 + 1) * bb, self._data_end)
+        with open(self.path, "rb") as f:
+            f.seek(blo)
+            buf = f.read(bhi - blo)
+        for bi in range(b0, b1 + 1):
+            if bi >= len(self._crcs):
+                break
+            s = bi * bb - (blo - self._data_start)
+            chunk = buf[s : s + bb]
+            if crc32c(chunk) != int(self._crcs[bi]):
+                raise ValueError(
+                    f"{self.path}: block {bi} checksum mismatch"
+                )
+        self.bytes_read[name] += hi - lo
+        return buf[lo - blo : hi - blo]
+
+    def read_keys(self) -> np.ndarray:
+        """(N, KW) uint32 from the keys section."""
+        raw = self._read_checked("keys")
+        return np.frombuffer(raw, "<u4").astype(np.uint32).reshape(
+            self.n, self.kw
+        )
+
+    def read_vals(self) -> np.ndarray:
+        raw = self._read_checked("vals")
+        return np.frombuffer(raw, "<u4").astype(np.uint32).reshape(
+            self.n, self.vw
+        )
+
+    def read_seq(self) -> np.ndarray:
+        return np.frombuffer(self._read_checked("seq"), "<u4").astype(
+            np.uint32
+        )
+
+    def read_tomb(self) -> np.ndarray:
+        return np.frombuffer(self._read_checked("tomb"), np.uint8).astype(bool)
+
+    def read_ckb_keys(self) -> np.ndarray | None:
+        """Decode the CKB trailer to (N, KW) uint32, or None if absent."""
+        if not self.has_ckb:
+            return None
+        return decode_ckb(self._read_checked("ckb"))
+
+    def verify(self) -> None:
+        """Validate every block checksum (full-file scrub)."""
+        for name in SECTIONS:
+            self._read_checked(name)

@@ -1,5 +1,8 @@
 """Property tests for the triangular-flash attention and grouped MoE."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,0 +1,286 @@
+"""Tests for the persistence layer: SSTables, CKBs, REMIX files, manifest
+commits, incremental rebuild, and RemixDB crash recovery."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import keys as CK
+from repro.core.remix import build_remix
+from repro.core.runs import make_run
+from repro.db.compaction import CompactionConfig
+from repro.db.partition import Table
+from repro.db.store import RemixDB, RemixDBConfig
+from repro.io.checksum import crc32c
+from repro.io.ckb import decode_ckb, encode_ckb
+from repro.io.manifest import Manifest, Storage
+from repro.io.rebuild import incremental_build_remix
+from repro.io.remix_io import dump_remix, load_remix
+from repro.io.sstable import SSTableReader, write_sstable
+
+
+def _table_arrays(rng, n=2000, keyspace=1 << 40, vw=2):
+    u = np.sort(rng.choice(keyspace, n, replace=False).astype(np.uint64))
+    keys = CK.pack_u64(u)
+    vals = rng.integers(0, 2**32, (n, vw), dtype=np.uint32)
+    seq = np.arange(1, n + 1, dtype=np.uint32)
+    tomb = rng.random(n) < 0.1
+    return keys, vals, seq, tomb
+
+
+def _assert_remix_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.anchors), np.asarray(b.anchors))
+    np.testing.assert_array_equal(np.asarray(a.cursors), np.asarray(b.cursors))
+    np.testing.assert_array_equal(
+        np.asarray(a.selectors), np.asarray(b.selectors)
+    )
+    assert int(np.asarray(a.n_entries)) == int(np.asarray(b.n_entries))
+    assert a.d == b.d
+
+
+def test_crc32c_vectors():
+    assert crc32c(b"") == 0
+    assert crc32c(b"123456789") == 0xE3069283  # RFC 3720 check value
+    # streaming == one-shot
+    assert crc32c(b"456789", crc32c(b"123")) == 0xE3069283
+
+
+def test_ckb_roundtrip_and_compression():
+    rng = np.random.default_rng(0)
+    keys, *_ = _table_arrays(rng, n=4000)
+    buf = encode_ckb(keys)
+    np.testing.assert_array_equal(decode_ckb(buf), keys)
+    # dense keys share long prefixes -> real compression
+    dense = CK.pack_u64(np.arange(10_000, dtype=np.uint64))
+    assert len(encode_ckb(dense)) < dense.nbytes * 0.6
+    # empty block
+    empty = CK.pack_u64(np.zeros(0, np.uint64))
+    assert decode_ckb(encode_ckb(empty)).shape == (0, 2)
+
+
+def test_sstable_roundtrip_and_checksums(tmp_path):
+    rng = np.random.default_rng(1)
+    keys, vals, seq, tomb = _table_arrays(rng)
+    p = str(tmp_path / "t.sst")
+    write_sstable(p, keys, vals, seq, tomb)
+    rd = SSTableReader(p)
+    assert rd.n == len(keys) and rd.kw == 2 and rd.vw == 2 and rd.has_ckb
+    np.testing.assert_array_equal(rd.read_keys(), keys)
+    np.testing.assert_array_equal(rd.read_vals(), vals)
+    np.testing.assert_array_equal(rd.read_seq(), seq)
+    np.testing.assert_array_equal(rd.read_tomb(), tomb)
+    np.testing.assert_array_equal(rd.read_ckb_keys(), keys)
+    rd.verify()
+    # single flipped byte in the data region is caught
+    with open(p, "r+b") as f:
+        f.seek(40 + len(keys) * 8 + 17)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(ValueError, match="checksum"):
+        SSTableReader(p).verify()
+
+
+def test_lazy_table_handle_reads_only_what_it_needs(tmp_path):
+    rng = np.random.default_rng(2)
+    keys, vals, seq, tomb = _table_arrays(rng)
+    p = str(tmp_path / "t.sst")
+    write_sstable(p, keys, vals, seq, tomb)
+    t = Table.from_file(p)
+    kw = t.key_words()  # served from the CKB
+    np.testing.assert_array_equal(kw, keys)
+    acct = t._rd().bytes_read
+    assert acct["ckb"] > 0 and acct["vals"] == 0 and acct["keys"] == 0
+    np.testing.assert_array_equal(t.vals, vals)  # full load still works
+    assert t._rd().bytes_read["vals"] == vals.nbytes
+
+
+def test_remix_file_roundtrip_matches_storage_bytes(tmp_path):
+    rng = np.random.default_rng(3)
+    runs = []
+    base = 1
+    for _ in range(3):
+        u = np.sort(rng.choice(4000, 700, replace=False).astype(np.uint64))
+        runs.append(
+            make_run(u, seq=np.arange(base, base + len(u), dtype=np.uint32))
+        )
+        base += len(u)
+    remix, _ = build_remix(runs, d=16)
+    p = str(tmp_path / "x.rmx")
+    n = dump_remix(remix, p)  # asserts payload == storage_bytes() internally
+    assert n > int(remix.storage_bytes())  # + header/crc overhead only
+    _assert_remix_equal(load_remix(p), remix)
+
+
+def test_incremental_rebuild_bit_identical():
+    rng = np.random.default_rng(4)
+    runs, base = [], 1
+    for _ in range(3):
+        u = np.sort(rng.choice(5000, 900, replace=False).astype(np.uint64))
+        runs.append(
+            make_run(u, seq=np.arange(base, base + len(u), dtype=np.uint32))
+        )
+        base += len(u)
+    old_remix, _ = build_remix(runs, d=16)
+    u_new = np.sort(rng.choice(5000, 800, replace=False).astype(np.uint64))
+    new = make_run(
+        u_new, seq=np.arange(base, base + len(u_new), dtype=np.uint32)
+    )
+    scratch, _ = build_remix(runs + [new], d=16)
+    inc = incremental_build_remix(
+        old_remix,
+        [np.asarray(r.keys) for r in runs],
+        [np.asarray(new.keys)],
+        [np.asarray(new.seq)],
+        d=16,
+    )
+    _assert_remix_equal(inc, scratch)
+
+
+def test_manifest_commit_versions(tmp_path):
+    m = Manifest(str(tmp_path))
+    assert m.load() is None and m.current_version() == 0
+    assert m.commit(dict(a=1)) == 1
+    assert m.commit(dict(a=2)) == 2
+    st = m.load()
+    assert st["a"] == 2 and st["version"] == 2
+    # only the latest manifest file is kept; CURRENT points at it
+    names = [f for f in os.listdir(tmp_path) if f.startswith("MANIFEST")]
+    assert names == ["MANIFEST-000002"]
+
+
+def _mkdb(data_dir, **kw):
+    return RemixDB(
+        RemixDBConfig(
+            memtable_entries=kw.pop("memtable_entries", 512),
+            compaction=CompactionConfig(table_cap=256, t_max=6),
+            data_dir=str(data_dir),
+            hot_threshold=kw.pop("hot_threshold", 255),
+            **kw,
+        )
+    )
+
+
+def test_reopen_identical_after_compaction_cycles(tmp_path):
+    db = _mkdb(tmp_path / "db")
+    rng = np.random.default_rng(5)
+    chunks = []
+    for _ in range(4):  # >= 3 flush/compaction cycles
+        keys = rng.choice(100_000, size=600, replace=False).astype(np.uint64)
+        vals = np.stack([keys & 0xFFFFFFFF, keys >> 32], 1).astype(np.uint32)
+        db.put_batch(keys, vals)
+        db.flush()
+        chunks.append(keys)
+    kinds = {k for st in db.compaction_log for k in st["kinds"]}
+    assert "minor" in kinds  # incremental-rebuild path exercised
+    dead = int(chunks[0][0])
+    db.delete(dead)
+    db.close()
+    probe = np.concatenate(chunks + [np.array([100_001], np.uint64)])
+    f0, v0 = db.get_batch(probe)
+    k0, vv0 = db.scan(0, 500)
+
+    db2 = RemixDB.open(str(tmp_path / "db"))
+    f1, v1 = db2.get_batch(probe)
+    k1, vv1 = db2.scan(0, 500)
+    np.testing.assert_array_equal(f0, f1)
+    np.testing.assert_array_equal(v0[f0], v1[f1])
+    np.testing.assert_array_equal(k0, k1)
+    np.testing.assert_array_equal(vv0, vv1)
+    assert db2.get(dead) is None  # tombstone survives reopen
+
+
+def test_crash_mid_flush_recovers_from_wal(tmp_path, monkeypatch):
+    db = _mkdb(tmp_path / "db", memtable_entries=1 << 30)
+    k1 = np.arange(0, 1000, dtype=np.uint64)
+    db.put_batch(k1, np.stack([k1 & 0xFFFFFFFF, k1 >> 32], 1).astype(np.uint32))
+    db.flush()  # committed version 1
+    k2 = np.arange(1000, 2000, dtype=np.uint64)
+    db.put_batch(k2, np.stack([k2 & 0xFFFFFFFF, k2 >> 32], 1).astype(np.uint32))
+    db.wal.sync()  # records durable; memtable not yet flushed
+
+    # power loss after tables/remix are written but before the commit
+    monkeypatch.setattr(
+        Storage, "commit",
+        lambda self, state: (_ for _ in ()).throw(RuntimeError("power loss")),
+    )
+    with pytest.raises(RuntimeError):
+        db.flush()
+    monkeypatch.undo()
+
+    db2 = RemixDB.open(str(tmp_path / "db"))
+    f, v = db2.get_batch(np.arange(0, 2000, dtype=np.uint64))
+    assert f.all()
+    np.testing.assert_array_equal(v[:, 0], np.arange(2000, dtype=np.uint32))
+    kk, _ = db2.scan(0, 2000)
+    np.testing.assert_array_equal(kk, np.arange(2000, dtype=np.uint64))
+    # the crashed flush's uncommitted files were collected as orphans
+    live = {
+        n for pe in db2.storage.load_state()["partitions"]
+        for n in pe["tables"]
+    }
+    assert set(os.listdir(db2.storage.tables_dir)) == live
+
+
+def test_wal_tail_recovery_without_close(tmp_path):
+    db = _mkdb(tmp_path / "db", memtable_entries=1 << 30)
+    k = np.arange(500, dtype=np.uint64)
+    db.put_batch(k, np.zeros((500, 2), np.uint32))
+    db.flush()  # checkpoint
+    for i in range(300):  # post-checkpoint appends (no commit follows)
+        db.put(10_000 + i, [i, 0])
+    db.wal.sync()  # blocks hit disk; manifest never sees them
+
+    db2 = RemixDB.open(str(tmp_path / "db"))
+    f, v = db2.get_batch(np.arange(10_000, 10_300, dtype=np.uint64))
+    assert f.all()
+    np.testing.assert_array_equal(v[:, 0], np.arange(300, dtype=np.uint32))
+    f, _ = db2.get_batch(k)
+    assert f.all()
+    assert db2.seq == db.seq
+
+
+def test_crash_before_first_commit_recovers_wal(tmp_path):
+    """Acknowledged puts survive a crash that happens before any manifest
+    exists (fresh directory, no flush yet)."""
+    db = _mkdb(tmp_path / "db", memtable_entries=1 << 30)
+    k = np.arange(500, dtype=np.uint64)
+    db.put_batch(k, np.stack([k & 0xFFFFFFFF, k >> 32], 1).astype(np.uint32))
+    db.wal.sync()  # durable; no flush, no commit, hard crash
+
+    db2 = RemixDB.open(str(tmp_path / "db"))
+    f, v = db2.get_batch(k)
+    assert f.all()
+    np.testing.assert_array_equal(v[:, 0], np.arange(500, dtype=np.uint32))
+    assert db2.seq == db.seq
+
+
+def test_superseded_files_reclaimed_at_commit(tmp_path):
+    """Old REMIX/table files are deleted as soon as a commit supersedes
+    them, not only at the next open()."""
+    db = _mkdb(tmp_path / "db")
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        keys = rng.choice(100_000, size=600, replace=False).astype(np.uint64)
+        db.put_batch(keys, np.zeros((600, 2), np.uint32))
+        db.flush()
+    state = db.storage.load_state()
+    live_tables = {n for pe in state["partitions"] for n in pe["tables"]}
+    live_remix = {pe["remix"] for pe in state["partitions"] if pe["remix"]}
+    assert set(os.listdir(db.storage.tables_dir)) == live_tables
+    assert set(os.listdir(db.storage.remix_dir)) == live_remix
+
+
+def test_partition_build_kinds(tmp_path):
+    """Minor compactions rebuild incrementally; splits fall back to scratch."""
+    db = _mkdb(tmp_path / "db", memtable_entries=400)
+    rng = np.random.default_rng(6)
+    seen = set()
+    for _ in range(8):
+        keys = rng.choice(50_000, size=400, replace=False).astype(np.uint64)
+        db.put_batch(keys, np.zeros((400, 2), np.uint32))
+        db.flush()
+        seen.update(p.last_build_kind for p in db.partitions)
+    assert "incremental" in seen
+    found, _ = db.get_batch(keys[:100])
+    assert found.all()

@@ -8,6 +8,9 @@ Invariants checked on arbitrary run sets:
   I5  cursor offsets equal the per-run consumed-entry counts at group heads
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
