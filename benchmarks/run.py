@@ -19,6 +19,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        cache_bench,
         fig11_queries,
         fig13_groupsize,
         fig14_16_stores,
@@ -37,6 +38,7 @@ def main() -> None:
         "fig17": fig17_ycsb.run,
         "kernels": kernels_bench.run,
         "rebuild": rebuild_bench.run,
+        "cache": cache_bench.run,
     }
     if args.only:
         names = args.only.split(",")

@@ -123,6 +123,48 @@ class RunSet:
         )
 
 
+def partial_runset(
+    ranges: Sequence[tuple[int, int]],
+    fetch_rows,
+    kw: int,
+    vw: int,
+    with_seq: bool = False,
+) -> tuple[RunSet, np.ndarray]:
+    """Assemble a host-side RunSet covering only per-run row slices.
+
+    The incremental-materialization primitive for cold-start range
+    queries: instead of loading whole tables, the caller names one
+    contiguous row range per run (the rows a REMIX scan window touches)
+    and ``fetch_rows(run, section, lo, hi)`` pulls exactly those rows —
+    backed by block-granular, cache-shared SSTable reads.
+
+    ``ranges``: [lo, hi) absolute row range per run (R entries; empty
+    ranges allowed). Returns ``(runset, row0)`` with numpy (host) leaves:
+    row ``i`` of run ``r`` in the runset is absolute row ``row0[r] + i``
+    of that run. ``seq`` is fetched only ``with_seq`` — scans don't need
+    it (selector newest bits already encode version order) and skipping
+    it avoids touching those blocks.
+    """
+    r = len(ranges)
+    lens = np.array([max(0, hi - lo) for lo, hi in ranges], np.int32)
+    row0 = np.array([lo for lo, _ in ranges], np.int32)
+    nmax = max(1, int(lens.max()) if r else 1)
+    keys = np.full((r, nmax, kw), K.UINT32_MAX, np.uint32)
+    vals = np.zeros((r, nmax, vw), np.uint32)
+    seq = np.zeros((r, nmax), np.uint32)
+    tomb = np.zeros((r, nmax), bool)
+    for i, (lo, hi) in enumerate(ranges):
+        m = lens[i]
+        if m <= 0:
+            continue
+        keys[i, :m] = fetch_rows(i, "keys", lo, hi)
+        vals[i, :m] = fetch_rows(i, "vals", lo, hi)
+        tomb[i, :m] = fetch_rows(i, "tomb", lo, hi)
+        if with_seq:
+            seq[i, :m] = fetch_rows(i, "seq", lo, hi)
+    return RunSet(keys=keys, vals=vals, seq=seq, tomb=tomb, lens=lens), row0
+
+
 def stack_runs(runs: Sequence[Run]) -> RunSet:
     assert len(runs) >= 1
     kw, vw = runs[0].kw, runs[0].vw

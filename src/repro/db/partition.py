@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.core import keys as CK
 from repro.core.remix import Remix, build_remix
-from repro.core.runs import Run, RunSet, make_run
+from repro.core.runs import Run, RunSet, make_run, partial_runset
+from repro.core.view import NEWEST_BIT, PLACEHOLDER
 
 KEY_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 
@@ -28,8 +29,6 @@ def _pow2(n: int, lo: int = 1) -> int:
 def _pad_index(remix: Remix, runset: RunSet, d: int) -> tuple[Remix, RunSet]:
     """Pad (G, R, Nmax) to power-of-two buckets; query semantics unchanged
     (pad groups are all-placeholder with +inf anchors, pad runs are empty)."""
-    from repro.core.view import PLACEHOLDER
-
     g2 = _pow2(remix.g, 4)
     r2 = _pow2(remix.r, 1)
     n2 = _pow2(runset.nmax, 64)
@@ -95,17 +94,88 @@ class Table:
         self._seq, self._tomb = seq, tomb
         self.path = path
         self._reader = None
+        self._cache = None
+        self._ckb = None
+        self._n: int | None = None if keys is None else len(keys)
 
     @classmethod
     def from_file(cls, path: str) -> "Table":
         return cls(path=path)
 
+    def __repr__(self) -> str:
+        # must not force-load a lazy handle: report only what is resident
+        if self.resident:
+            return f"Table(n={len(self._keys)}, resident=True)"
+        n = "?" if self._reader is None else self._reader.n
+        return f"Table(path={self.path!r}, n={n}, resident=False)"
+
+    @property
+    def resident(self) -> bool:
+        """Whether the column arrays are fully loaded in memory."""
+        return self._keys is not None
+
+    def attach_cache(self, cache) -> None:
+        """Route this handle's block reads through a shared BlockCache."""
+        self._cache = cache
+        if self._reader is not None:
+            self._reader.attach_cache(cache)
+
     def _rd(self):
         if self._reader is None:
             from repro.io.sstable import SSTableReader
 
-            self._reader = SSTableReader(self.path)
+            self._reader = SSTableReader(self.path, cache=self._cache)
         return self._reader
+
+    # ---- block-granular access (cold read path) ----
+    def read_block(self, section: str, idx: int) -> bytes:
+        """``idx``-th checksum granule overlapping ``section`` (cached)."""
+        rd = self._rd()
+        return rd.read_block(rd.section_block0(section) + idx)
+
+    def rows(self, section: str, lo: int, hi: int) -> np.ndarray:
+        """Rows [lo, hi) of one columnar section via partial block reads."""
+        return self._rd().section_rows(section, lo, hi)
+
+    def ckb(self):
+        """Restart-point CKB reader over cached block reads (or None)."""
+        if self._ckb is None:
+            rd = self._rd()
+            if not rd.has_ckb:
+                return None
+            from repro.io.ckb import CKBReader
+
+            self._ckb = CKBReader(
+                rd._ckb_len,
+                lambda lo, hi: rd.read_section_bytes("ckb", lo, hi),
+            )
+        return self._ckb
+
+    def key_at(self, row: int) -> np.ndarray:
+        """(KW,) uint32 key words at ``row`` without loading the section."""
+        ckb = self.ckb()
+        if ckb is not None:
+            return ckb.key_at(row)
+        return self.rows("keys", row, row + 1)[0]
+
+    def seek_row(self, key_words: np.ndarray, lo: int, hi: int) -> int:
+        """Lower bound of ``key_words`` within rows [lo, hi).
+
+        Prefers the CKB restart-point binary search; tables without a CKB
+        fall back to probing key rows (still block-granular).
+        """
+        ckb = self.ckb()
+        if ckb is not None:
+            return ckb.seek(key_words, lo, hi)
+        q = CK.unpack_u64(np.asarray(key_words, np.uint32)[None, :])[0]
+        while lo < hi:
+            mid = (lo + hi) // 2
+            kmid = CK.unpack_u64(self.rows("keys", mid, mid + 1))[0]
+            if kmid < q:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
 
     @property
     def keys(self) -> np.ndarray:
@@ -133,9 +203,9 @@ class Table:
 
     @property
     def n(self) -> int:
-        if self._keys is not None:
-            return len(self._keys)
-        return self._rd().n
+        if self._n is None:  # header-only read; no section is loaded
+            self._n = self._rd().n
+        return self._n
 
     @property
     def vw(self) -> int:
@@ -204,6 +274,18 @@ class Partition:
         self._built_tables: list[Table] = []
         self.remix_name: str | None = None  # manifest name when persisted
         self.last_build_kind = "none"  # none | scratch | incremental | reuse
+        # cold read path: host-side view of the (preloaded) REMIX + counters
+        self._host: dict | None = None
+        self.cold_gets = 0
+        self.cold_scans = 0
+
+    def __repr__(self) -> str:
+        # introspection must not force-load lazy table handles
+        return (
+            f"Partition(lo={self.lo}, tables={len(self.tables)}, "
+            f"resident={sum(t.resident for t in self.tables)}, "
+            f"built={self.last_build_kind})"
+        )
 
     def invalidate(self):
         """Drop the padded query cache; the last built REMIX is kept as the
@@ -217,6 +299,175 @@ class Partition:
         self._built_remix = remix
         self._built_tables = list(self.tables)
         self.remix_bytes = int(remix.storage_bytes())
+
+    # ---------------- cold read path (block-granular, no table loads) ----
+    def cold_ready(self) -> bool:
+        """True when queries can be served straight off the on-disk REMIX
+        + block cache, without materializing the device RunSet (the state
+        right after ``RemixDB.open``: REMIX deserialized, tables lazy)."""
+        return (
+            self._remix is None
+            and self._built_remix is not None
+            and bool(self.tables)
+            and len(self._built_tables) == len(self.tables)
+            and all(a is b for a, b in zip(self._built_tables, self.tables))
+            and all(t.path is not None and not t.resident for t in self.tables)
+        )
+
+    def cold_disk_bytes(self) -> int:
+        """Physical bytes cold reads have pulled from this partition."""
+        return sum(
+            t._reader.disk_bytes_read
+            for t in self.tables
+            if t._reader is not None
+        )
+
+    def should_promote(self, fraction: float = 0.5) -> bool:
+        """Once cold reads have fetched a sizable fraction of the data
+        region, building the device-resident RunSet pays for itself."""
+        total = sum(t._rd().data_bytes() for t in self.tables)  # header-only
+        return self.cold_disk_bytes() >= fraction * max(1, total)
+
+    def _host_index(self) -> dict:
+        """Host numpy view of the built REMIX (anchors as u64 for search)."""
+        rm = self._built_remix
+        if self._host is None or self._host["remix"] is not rm:
+            anchors = np.asarray(rm.anchors)
+            self._host = dict(
+                remix=rm,
+                anch64=CK.unpack_u64(anchors),
+                cursors=np.asarray(rm.cursors),
+                selectors=np.asarray(rm.selectors),
+                d=rm.d,
+                n_slots=rm.n_slots,
+            )
+        return self._host
+
+    def _group_rows(self, hx: dict, g: int) -> tuple[np.ndarray, np.ndarray]:
+        """Per-run row ranges [cur, nxt) covered by group ``g``."""
+        cur = hx["cursors"][g].astype(np.int64)
+        if g + 1 < hx["cursors"].shape[0]:
+            nxt = hx["cursors"][g + 1].astype(np.int64)
+        else:
+            nxt = np.array([t.n for t in self.tables], np.int64)
+        return cur, nxt
+
+    def cold_get(self, key: int) -> tuple[bool, np.ndarray | None]:
+        """Point lookup from the on-disk REMIX without loading any table.
+
+        Anchors binary search on the host, then one *bounded* CKB
+        restart-point seek per run — the group's cursor offsets restrict
+        each seek to at most D rows, so each run contributes O(1) block
+        reads — and finally at most one tomb byte and one value row are
+        fetched from the run the selector names (§3.2 adapted to
+        block-granular I/O). Returns (found, value row)."""
+        hx = self._host_index()
+        self.cold_gets += 1
+        d, sels = hx["d"], hx["selectors"]
+        g = max(
+            int(np.searchsorted(hx["anch64"], np.uint64(key), side="right"))
+            - 1,
+            0,
+        )
+        cur, nxt = self._group_rows(hx, g)
+        qw = CK.pack_u64(np.array([key], np.uint64))[0]
+        rows = [
+            t.seek_row(qw, int(cur[r]), int(nxt[r]))
+            for r, t in enumerate(self.tables)
+        ]
+        s = int(sum(rows[r] - int(cur[r]) for r in range(len(rows))))
+        pos = g * d + s
+        if s >= d or pos >= hx["n_slots"]:
+            return False, None
+        sel = int(sels[pos])
+        if sel == PLACEHOLDER or not (sel & NEWEST_BIT):
+            return False, None
+        run = sel & 0x7F
+        row = rows[run]
+        t = self.tables[run]
+        if not np.array_equal(t.key_at(row), qw):
+            return False, None
+        if bool(t.rows("tomb", row, row + 1)[0]):
+            return False, None
+        return True, t.rows("vals", row, row + 1)[0]
+
+    def cold_scan(self, start: int, width: int):
+        """Range scan over a ``width``-slot view window without whole-table
+        loads: seek as in :meth:`cold_get`, walk the selector stream
+        (comparison-free next, §3.3) to find the touched per-run row
+        ranges, then materialize only those ranges via
+        :func:`repro.core.runs.partial_runset`. The window covers exactly
+        ``width`` view slots from the seek position — placeholders, old
+        versions and tombstones consume budget — matching the device
+        path's ``gather_view`` window bit-for-bit, so promotion never
+        changes scan results. Returns (keys (M,) u64, vals (M, VW),
+        more) — live entries in ascending order, M ≤ width, and whether
+        view slots remain beyond the window (so an all-invalid window is
+        distinguishable from an exhausted partition)."""
+        hx = self._host_index()
+        self.cold_scans += 1
+        d, sels, n_slots = hx["d"], hx["selectors"], hx["n_slots"]
+        g = max(
+            int(np.searchsorted(hx["anch64"], np.uint64(start), side="right"))
+            - 1,
+            0,
+        )
+        cur, nxt = self._group_rows(hx, g)
+        qw = CK.pack_u64(np.array([start], np.uint64))[0]
+        nextrow = np.array(
+            [
+                t.seek_row(qw, int(cur[r]), int(nxt[r]))
+                for r, t in enumerate(self.tables)
+            ],
+            np.int64,
+        )
+        row0 = nextrow.copy()
+        pos = g * d + int(np.sum(nextrow - cur))
+        # device-seek parity (_ingroup_vector): landing on a trailing
+        # placeholder means every real entry of the group is < start, so
+        # the true lower bound is the next group's head — the window must
+        # not waste budget on the placeholder tail. The row pointers are
+        # already cursors[g+1] in that case (all group entries consumed).
+        if pos < min(n_slots, (g + 1) * d) and int(sels[pos]) == PLACEHOLDER:
+            pos = (g + 1) * d
+        pos = min(pos, n_slots)
+        emit: list[tuple[int, int]] = []  # (run, absolute row), view order
+        stop = min(n_slots, pos + width)  # slot budget == device window
+        while pos < stop:
+            sel = int(sels[pos])
+            pos += 1
+            if sel == PLACEHOLDER:
+                continue
+            run = sel & 0x7F
+            row = int(nextrow[run])
+            nextrow[run] += 1
+            if sel & NEWEST_BIT:
+                emit.append((run, row))
+        vw = self.tables[0].vw if self.tables else 2
+        more = stop < n_slots
+        if not emit:
+            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), more
+        kw = self.tables[0]._rd().kw
+        ranges = [
+            (int(row0[r]), int(nextrow[r])) for r in range(len(self.tables))
+        ]
+        rs, r0 = partial_runset(
+            ranges,
+            lambda r, sec, lo, hi: self.tables[r].rows(sec, lo, hi),
+            kw=kw,
+            vw=vw,
+        )
+        out_k: list[int] = []
+        out_v: list[np.ndarray] = []
+        for run, row in emit:
+            i = row - int(r0[run])
+            if rs.tomb[run, i]:
+                continue
+            out_k.append(int(CK.unpack_u64(rs.keys[run, i][None, :])[0]))
+            out_v.append(rs.vals[run, i])
+        if not out_k:
+            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), more
+        return np.array(out_k, np.uint64), np.stack(out_v), more
 
     @property
     def n_entries(self) -> int:

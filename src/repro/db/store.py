@@ -52,6 +52,17 @@ class RemixDBConfig:
     # and commit a manifest; RemixDB.open(dir) recovers the store from it
     data_dir: str | None = None
     ckb: bool = True  # append Compressed Keys Blocks to new table files
+    # block cache budget for cold reads (shared across all partitions of
+    # the store; pass a BlockCache via ``block_cache`` to share it across
+    # stores, e.g. from serve.KVServeEngine)
+    cache_bytes: int = 64 << 20
+    block_cache: object | None = dataclasses.field(default=None, repr=False)
+    # serve recovered partitions via block-granular cold reads until
+    # promotion, instead of loading whole tables on first query
+    cold_reads: bool = True
+    # build the device RunSet once cold reads fetched this fraction of a
+    # partition's data region
+    promote_fraction: float = 0.5
 
 
 
@@ -78,11 +89,19 @@ class RemixDB:
         self._ingroup = mode
         self.mem = MemTable(vw=self.cfg.vw)
         self.storage = None
+        self.block_cache = None
         state = None
         if self.cfg.data_dir is not None:
+            from repro.io.blockcache import BlockCache
             from repro.io.manifest import Storage
 
             self.storage = Storage(self.cfg.data_dir, with_ckb=self.cfg.ckb)
+            # explicit None check: an empty BlockCache is falsy (len == 0)
+            self.block_cache = (
+                self.cfg.block_cache
+                if self.cfg.block_cache is not None
+                else BlockCache(self.cfg.cache_bytes)
+            )
             state = self.storage.load_state()
             wal_path = self.storage.wal_path()
         else:
@@ -92,6 +111,9 @@ class RemixDB:
         self.wal = WAL(wal_path, vw=self.cfg.vw)
         self.partitions: list[Partition] = [Partition(lo=0, d=self.cfg.d)]
         self.seq = 1
+        # physical-read bytes of table handles retired by compaction, so
+        # disk_bytes_read() is monotonic across table replacement
+        self._retired_disk_bytes = 0
         # write-amplification accounting (fig 16)
         self.user_bytes = 0
         self.table_bytes_written = 0
@@ -126,13 +148,22 @@ class RemixDB:
             raise ValueError(
                 f"data dir has vw={state['vw']}, config has vw={self.cfg.vw}"
             )
+        # adopt the persisted group size: the on-disk REMIXes were built
+        # with it and the cold path serves them directly — keeping a
+        # mismatched cfg.d would make cold and promoted query windows
+        # cover different slot counts (vw, by contrast, changes the value
+        # API shape, so a mismatch there is an error)
+        d_disk = int(state.get("d", self.cfg.d))
+        if d_disk != self.cfg.d:
+            self.cfg = dataclasses.replace(self.cfg, d=d_disk)
         live: set[str] = set()
         parts: list[Partition] = []
         for pe in state["partitions"]:
-            tables = [
-                Table.from_file(self.storage.table_path(nm))
-                for nm in pe["tables"]
-            ]
+            tables = []
+            for nm in pe["tables"]:
+                t = Table.from_file(self.storage.table_path(nm))
+                t.attach_cache(self.block_cache)
+                tables.append(t)
             live.update(pe["tables"])
             p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
             if pe.get("remix"):
@@ -264,7 +295,11 @@ class RemixDB:
             else:
                 new_parts.append(p)
         new_parts.sort(key=lambda p: p.lo)
+        live_before = sum(p.cold_disk_bytes() for p in self.partitions)
         self.partitions = new_parts
+        self._retired_disk_bytes += max(
+            0, live_before - sum(p.cold_disk_bytes() for p in new_parts)
+        )
         # WAL GC: only carried/hot keys remain live in the log (§4.3).
         # In persistent mode freed blocks stay quarantined until the new
         # mapping table is committed with the manifest: a crash in between
@@ -294,11 +329,27 @@ class RemixDB:
             return {}
         return dict(ingroup=self._ingroup)
 
+    def _cold_ok(self, p: Partition) -> bool:
+        """Serve this partition via block-granular cold reads?
+
+        True only while the recovered on-disk REMIX still matches the
+        table list and cold reads haven't yet pulled enough blocks to
+        justify building the device RunSet (promotion)."""
+        return (
+            self.cfg.cold_reads
+            and self.block_cache is not None
+            and p.cold_ready()
+            and not p.should_promote(self.cfg.promote_fraction)
+        )
+
     def get(self, key: int):
         e = self.mem.get(int(key))
         if e is not None:
             return None if e.tomb else e.val
         p = self.partitions[self._route(int(key))]
+        if self._cold_ok(p):
+            found, val = p.cold_get(int(key))
+            return val if found else None
         remix, runset = p.index()
         qk = jnp.asarray(CK.pack_u64(np.array([key], np.uint64)))
         found, val = self._query_mod().get(remix, runset, qk, **self._qkw())
@@ -325,7 +376,15 @@ class RemixDB:
             )
             for pi in np.unique(pidx):
                 sel = rest[pidx == pi]
-                remix, runset = self.partitions[pi].index()
+                p = self.partitions[pi]
+                if self._cold_ok(p):
+                    for qi in sel:
+                        f, v = p.cold_get(int(keys[qi]))
+                        found[qi] = f
+                        if f:
+                            vals[qi] = v
+                    continue
+                remix, runset = p.index()
                 kq = keys[sel]
                 pad = _pow2pad(len(kq))
                 kq = np.pad(kq, (0, pad - len(kq)))
@@ -341,7 +400,8 @@ class RemixDB:
         out_v: list[np.ndarray] = []
         pi = self._route(int(start_key))
         lo = int(start_key)
-        width = max(8, n + n // 2)
+        base_width = max(8, n + n // 2)
+        width = base_width
         while len(out_k) < n and pi < len(self.partitions):
             p = self.partitions[pi]
             hi = (
@@ -349,13 +409,26 @@ class RemixDB:
                 if pi + 1 < len(self.partitions)
                 else 1 << 64
             )
-            remix, runset = p.index()
-            qk = jnp.asarray(CK.pack_u64(np.array([lo], np.uint64)))
-            keys, vals, valid, _ = self._query_mod().scan(
-                remix, runset, qk, width=width, **self._qkw()
-            )
-            kk = CK.unpack_u64(np.asarray(keys)[0][np.asarray(valid)[0]])
-            vv = np.asarray(vals)[0][np.asarray(valid)[0]]
+            if self._cold_ok(p):
+                kk, vv, more = p.cold_scan(lo, width)
+            else:
+                remix, runset = p.index()
+                qk = jnp.asarray(CK.pack_u64(np.array([lo], np.uint64)))
+                keys, vals, valid, pos = self._query_mod().scan(
+                    remix, runset, qk, width=width, **self._qkw()
+                )
+                kk = CK.unpack_u64(np.asarray(keys)[0][np.asarray(valid)[0]])
+                vv = np.asarray(vals)[0][np.asarray(valid)[0]]
+                more = int(np.asarray(pos)[0]) + width < remix.n_slots
+            if len(kk) == 0 and more:
+                # every slot in the window was a tombstone/old version but
+                # the view has more: widen and retry — advancing to the
+                # next partition here would silently drop its live tail.
+                # (On the device path each new width jit-compiles once;
+                # widths are powers of two of base_width, so the compile
+                # set stays O(log max-tombstone-run) process-wide.)
+                width *= 2
+                continue
             got_in_range = 0
             for j in range(len(kk)):
                 if int(kk[j]) >= hi:
@@ -367,8 +440,10 @@ class RemixDB:
                 # nothing (more) in this partition's range: advance partition
                 pi += 1
                 lo = self.partitions[pi].lo if pi < len(self.partitions) else 0
+                width = base_width  # widening was partition-local
             else:
                 lo = int(kk[got_in_range - 1]) + 1
+                width = base_width  # widening was window-local too
         # overlay MemTable entries in range
         merged: dict[int, np.ndarray | None] = {}
         for k, v in zip(out_k, out_v):
@@ -403,7 +478,34 @@ class RemixDB:
         width = n + max(8, n // 2)
         for pi in np.unique(pidx):
             sel = np.flatnonzero(pidx == pi)
-            remix, runset = self.partitions[pi].index()
+            p = self.partitions[pi]
+            hi = (
+                self.partitions[pi + 1].lo
+                if pi + 1 < len(self.partitions)
+                else 1 << 64
+            )
+            def emit_row(qi, kk):
+                """Clip one query's window to the partition — shared by
+                the cold and device branches so promotion never changes
+                results. Any under-full row falls back to the sequential
+                scan: the fixed window alone can't distinguish "partition
+                tail reached" from "window swallowed by a tombstone run
+                or a partition boundary", and scan() handles both."""
+                kk = kk[kk < hi][:n]
+                out_k[qi, : len(kk)] = kk
+                out_m[qi, : len(kk)] = True
+                if len(kk) < n:
+                    kk2, _ = self.scan(int(starts[qi]), n)
+                    out_k[qi, : len(kk2)] = kk2[:n]
+                    out_m[qi] = False
+                    out_m[qi, : len(kk2)] = True
+
+            if self._cold_ok(p):
+                for qi in sel:
+                    kk, _, _ = p.cold_scan(int(starts[qi]), width)
+                    emit_row(qi, kk)
+                continue
+            remix, runset = p.index()
             sq = starts[sel]
             pad = _pow2pad(len(sq))
             sq = np.pad(sq, (0, pad - len(sq)))
@@ -413,21 +515,8 @@ class RemixDB:
             )
             keys = CK.unpack_u64(np.asarray(keys))[: len(sel)]
             valid = np.asarray(valid)[: len(sel)]
-            hi = (
-                self.partitions[pi + 1].lo
-                if pi + 1 < len(self.partitions)
-                else 1 << 64
-            )
             for row, qi in enumerate(sel):
-                kk = keys[row][valid[row]]
-                kk = kk[kk < hi][:n]
-                out_k[qi, : len(kk)] = kk
-                out_m[qi, : len(kk)] = True
-                if len(kk) < n and pi + 1 < len(self.partitions):
-                    kk2, _ = self.scan(int(starts[qi]), n)  # boundary fallback
-                    out_k[qi, : len(kk2)] = kk2[:n]
-                    out_m[qi] = False
-                    out_m[qi, : len(kk2)] = True
+                emit_row(qi, keys[row][valid[row]])
         # memtable overlay (host merge) only if buffered entries exist
         if len(self.mem):
             for qi in range(q):
@@ -442,15 +531,41 @@ class RemixDB:
         total = self.table_bytes_written + self.wal.bytes_written
         return total / max(1, self.user_bytes)
 
+    def disk_bytes_read(self) -> int:
+        """Physical table-file bytes read so far (cache hits excluded).
+
+        Monotonic: counts from handles retired by compaction are folded
+        into ``_retired_disk_bytes`` when their partition list is swapped.
+        """
+        return self._retired_disk_bytes + sum(
+            p.cold_disk_bytes() for p in self.partitions
+        )
+
     def stats(self) -> dict:
-        return dict(
+        """Store counters. Introspection-safe: never force-loads a lazy
+        table handle (entries come from cached file headers) and never
+        builds a partition index."""
+        out = dict(
             partitions=len(self.partitions),
             tables=sum(len(p.tables) for p in self.partitions),
             entries=sum(p.n_entries for p in self.partitions),
+            resident_tables=sum(
+                t.resident for p in self.partitions for t in p.tables
+            ),
             memtable=len(self.mem),
             wa=self.write_amplification(),
             wal_blocks=self.wal.used_blocks(),
+            # all physical table-file reads, not only cold-path ones
+            # (whole-table loads and rebuilds count too)
+            disk_bytes_read=self.disk_bytes_read(),
+            cold=dict(
+                gets=sum(p.cold_gets for p in self.partitions),
+                scans=sum(p.cold_scans for p in self.partitions),
+            ),
         )
+        if self.block_cache is not None:
+            out["cache"] = self.block_cache.stats()
+        return out
 
     def recover_memtable(self) -> MemTable:
         """Rebuild the MemTable from the WAL's live virtual log (§4.3)."""

@@ -4,55 +4,32 @@ This package is the storage layer proper: it knows about bytes, files and
 checksums, and nothing about the LSM-tree above it (``repro.db`` imports
 ``repro.io``, never the other way around).
 
-Table-file layout (``io.sstable``)::
+Modules:
 
-    +----------------------------------------------------------------+
-    | header (40 B)   magic | version | kw | vw | flags | n | blksz  |
-    +----------------------------------------------------------------+
-    | keys  section   n * kw * 4 B   uint32 LE words, word 0 most sig|
-    | vals  section   n * vw * 4 B   uint32 LE payload               |
-    | seq   section   n * 4 B        uint32 sequence numbers         |
-    | tomb  section   n * 1 B        uint8 tombstone flags           |
-    +----------------------------------------------------------------+
-    | CKB   section   prefix-compressed sorted keys (optional)       |
-    +----------------------------------------------------------------+
-    | footer          section offsets | per-block CRC32C table |     |
-    |                 footer CRC | footer length | magic             |
-    +----------------------------------------------------------------+
+- ``io.sstable``    immutable table files: columnar key/value/seq/tomb
+  sections, per-64KB-block CRC32C, optional Compressed Keys Block
+  trailer; block-granular verified reads (``SSTableReader.read_block`` /
+  ``section_rows``).
+- ``io.ckb``        prefix-compressed sorted key streams with restart
+  points; ``CKBReader`` gives random access (``key_at``) and bounded
+  lower-bound ``seek`` without full decodes.
+- ``io.blockcache`` the shared, bytes-budgeted LRU ``BlockCache`` over
+  verified granules, shared across partitions (and stores).
+- ``io.remix_io``   REMIX index (de)serialization; payload length is
+  asserted equal to ``Remix.storage_bytes()`` (§3.4).
+- ``io.rebuild``    incremental REMIX rebuild from the old selector
+  stream + the tables' CKBs — zero value bytes read.
+- ``io.manifest``   versioned registry with atomic rename commits +
+  orphan GC.
+- ``io.checksum``   CRC32C.
 
-The data region (everything between header and footer) is covered by
-CRC32C checksums computed over fixed-size blocks (default 64 KB); readers
-verify exactly the blocks overlapping the section they fetch, so a
-CKB-only read never touches (or validates) value bytes.
-
-The *Compressed Keys Block* trailer re-encodes all keys of the table in
-sorted order with per-key shared-prefix truncation (restart points every
-16 keys). It is the only part of a table file a REMIX rebuild needs:
-``io.rebuild.incremental_build_remix`` merges the surviving tables' CKB
-key streams with the old REMIX's selector stream and never reads a value
-block (Snippet 1's 2x write-throughput optimization).
-
-REMIX index files (``io.remix_io``) serialize anchors | cursors |
-selectors as one contiguous little-endian payload whose byte length
-equals ``Remix.storage_bytes()`` exactly (checked on write), so the
-paper's §3.4 space accounting is validated against real files, and the
-payload can be mapped straight into numpy arrays.
-
-Manifest commit protocol (``io.manifest``)::
-
-    MANIFEST-<v>.tmp  --write+fsync-->  MANIFEST-<v>   (rename, atomic)
-    CURRENT.tmp       --write+fsync-->  CURRENT        (rename, atomic)
-
-A crash at any point leaves either the old or the new version readable:
-table/REMIX files are immutable once written (also tmp+rename), and files
-not referenced by CURRENT's manifest are orphans removed on next open.
-Recovery (``RemixDB.open``) loads the manifest's partitions as
-lazily-loadable table handles, restores the WAL mapping table, scans for
-WAL blocks written after the last commit (1-bit epoch flip, §4.3), and
-replays the live log into a fresh MemTable.
+The byte-level layout of every file format lives in the versioned spec
+``docs/FORMAT.md`` (executed by CI so it cannot drift from this code);
+``docs/ARCHITECTURE.md`` has the write/read/recovery data-flow diagrams.
 """
+from repro.io.blockcache import BlockCache  # noqa: F401
 from repro.io.checksum import crc32c  # noqa: F401
-from repro.io.ckb import decode_ckb, encode_ckb  # noqa: F401
+from repro.io.ckb import CKBReader, decode_ckb, encode_ckb  # noqa: F401
 from repro.io.manifest import Manifest, Storage  # noqa: F401
 from repro.io.rebuild import (  # noqa: F401
     decode_selector_order,

@@ -1,0 +1,89 @@
+"""Shared LRU cache of checksum-verified file blocks.
+
+One :class:`BlockCache` instance is shared by every lazy table handle of a
+store (and, via :class:`repro.serve.engine.KVServeEngine`, across stores):
+the cache key is ``(file identity, block index)``, so partitions compete
+for one bytes-budgeted pool instead of each hoarding private copies.
+Cached payloads are the *verified* 64 KB checksum granules of SSTable
+data regions — a hit skips both the disk read and the CRC32C check, which
+is safe because table files are immutable and readers bind the file's
+inode + mtime into the key (``SSTableReader._cache_key``): a file *name*
+can be reused by a later ``Storage`` (ids restart at 1 + the highest
+surviving file), but a reused name never resolves to stale blocks.
+
+Capacity is a byte budget, not an entry count: eviction pops
+least-recently-used granules until the budget holds. Hit/miss/eviction
+counters feed ``RemixDB.stats()["cache"]``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Hashable
+
+DEFAULT_CAPACITY = 64 << 20  # 64 MB
+
+
+class BlockCache:
+    """Bytes-budgeted LRU over immutable, already-verified file blocks."""
+
+    def __init__(self, capacity_bytes: int = DEFAULT_CAPACITY):
+        if capacity_bytes <= 0:
+            raise ValueError("cache capacity must be positive")
+        self.capacity_bytes = int(capacity_bytes)
+        self._blocks: OrderedDict[Hashable, bytes] = OrderedDict()
+        self.cached_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def get(self, key: Hashable) -> bytes | None:
+        """Cached payload for ``key`` (marks it most-recently-used)."""
+        data = self._blocks.get(key)
+        if data is None:
+            self.misses += 1
+            return None
+        self._blocks.move_to_end(key)
+        self.hits += 1
+        return data
+
+    def put(self, key: Hashable, data: bytes) -> None:
+        """Insert ``data``; evicts LRU entries to stay within budget.
+
+        Payloads larger than the whole budget are served but not cached.
+        """
+        old = self._blocks.pop(key, None)
+        if old is not None:
+            self.cached_bytes -= len(old)
+        if len(data) > self.capacity_bytes:
+            return
+        self._blocks[key] = data
+        self.cached_bytes += len(data)
+        while self.cached_bytes > self.capacity_bytes:
+            _, victim = self._blocks.popitem(last=False)
+            self.cached_bytes -= len(victim)
+            self.evictions += 1
+
+    def get_or_load(self, key: Hashable, loader: Callable[[], bytes]) -> bytes:
+        """``get`` with a miss-path ``loader()`` whose result is cached."""
+        data = self.get(key)
+        if data is None:
+            data = loader()
+            self.put(key, data)
+        return data
+
+    def clear(self) -> None:
+        self._blocks.clear()
+        self.cached_bytes = 0
+
+    def stats(self) -> dict:
+        return dict(
+            hits=self.hits,
+            misses=self.misses,
+            evictions=self.evictions,
+            entries=len(self._blocks),
+            cached_bytes=self.cached_bytes,
+            capacity_bytes=self.capacity_bytes,
+        )

@@ -93,13 +93,26 @@ def write_sstable(
 class SSTableReader:
     """Lazy, checksum-verifying reader for one table file.
 
-    Tracks per-section ``bytes_read`` so benchmarks can prove which parts
-    of the file a code path touched (e.g. CKB-based rebuild: vals == 0).
+    All data-region access goes through :meth:`read_block`, one checksum
+    granule (default 64 KB) at a time: a granule is read from disk, CRC-
+    verified, and (when a :class:`repro.io.blockcache.BlockCache` is
+    attached) cached, so repeated queries touching the same blocks pay no
+    further I/O or verification. Tracks per-section logical ``bytes_read``
+    plus physical ``disk_bytes_read`` (cache hits don't count) so
+    benchmarks can prove which parts of the file a code path touched.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, cache=None):
         self.path = path
+        self._cache = cache
         self.bytes_read: dict[str, int] = {s: 0 for s in SECTIONS}
+        self.disk_bytes_read = 0
+        # cache-key namespace: path alone is not a safe identity (Storage
+        # ids restart at 1+max(surviving files), so a name can be reused
+        # after the highest-id tables are deleted) — bind the inode and
+        # mtime captured at open so a reused name can't hit stale blocks
+        st = os.stat(path)
+        self._cache_key = (path, st.st_ino, st.st_mtime_ns)
         with open(path, "rb") as f:
             hdr = f.read(_HEADER.size)
             (magic, ver, self.kw, self.vw, self.flags, self.n, self.block_bytes
@@ -130,6 +143,19 @@ class SSTableReader:
     def has_ckb(self) -> bool:
         return bool(self.flags & FLAG_CKB)
 
+    @property
+    def n_blocks(self) -> int:
+        """Number of checksum granules covering the data region."""
+        return len(self._crcs)
+
+    def data_bytes(self) -> int:
+        """Size of the data region (all sections, without header/footer)."""
+        return self._data_end - self._data_start
+
+    def attach_cache(self, cache) -> None:
+        """Share a :class:`BlockCache`; subsequent block reads go via it."""
+        self._cache = cache
+
     def _section_range(self, name: str) -> tuple[int, int]:
         lens = dict(
             keys=self.n * self.kw * 4,
@@ -141,28 +167,85 @@ class SSTableReader:
         off = self._offs[name]
         return off, off + lens[name]
 
+    def section_block0(self, name: str) -> int:
+        """Granule index of the first block overlapping section ``name``."""
+        lo, _ = self._section_range(name)
+        return (lo - self._data_start) // self.block_bytes
+
+    def _load_block(self, idx: int, f) -> bytes:
+        """Read granule ``idx`` from ``f`` and verify its CRC32C."""
+        bb = self.block_bytes
+        lo = self._data_start + idx * bb
+        hi = min(lo + bb, self._data_end)
+        f.seek(lo)
+        chunk = f.read(hi - lo)
+        if crc32c(chunk) != int(self._crcs[idx]):
+            raise ValueError(f"{self.path}: block {idx} checksum mismatch")
+        self.disk_bytes_read += hi - lo
+        return chunk
+
+    def read_block(self, idx: int) -> bytes:
+        """One verified checksum granule of the data region (cached)."""
+        if not 0 <= idx < len(self._crcs):
+            raise IndexError(f"block {idx} out of range [0, {len(self._crcs)})")
+
+        def load() -> bytes:
+            with open(self.path, "rb") as f:
+                return self._load_block(idx, f)
+
+        if self._cache is None:
+            return load()
+        return self._cache.get_or_load((self._cache_key, idx), load)
+
+    def read_range(self, lo: int, hi: int) -> bytes:
+        """Bytes [lo, hi) of the file (data region), block-granular+verified.
+
+        Opens the file at most once per call: a whole-section read costs
+        one open + one sequential read per uncached granule, not one
+        open/close cycle per 64 KB.
+        """
+        if hi <= lo:
+            return b""
+        bb = self.block_bytes
+        b0 = (lo - self._data_start) // bb
+        b1 = (hi - self._data_start - 1) // bb
+        parts = []
+        f = None
+        try:
+            for bi in range(b0, b1 + 1):
+                chunk = (
+                    self._cache.get((self._cache_key, bi))
+                    if self._cache is not None
+                    else None
+                )
+                if chunk is None:
+                    if f is None:
+                        f = open(self.path, "rb")
+                    chunk = self._load_block(bi, f)
+                    if self._cache is not None:
+                        self._cache.put((self._cache_key, bi), chunk)
+                parts.append(chunk)
+        finally:
+            if f is not None:
+                f.close()
+        buf = parts[0] if len(parts) == 1 else b"".join(parts)
+        base = self._data_start + b0 * bb
+        return buf[lo - base : hi - base]
+
+    def read_section_bytes(self, name: str, lo: int, hi: int) -> bytes:
+        """Bytes [lo, hi) *relative to section ``name``* (partial read)."""
+        slo, shi = self._section_range(name)
+        lo, hi = slo + lo, min(slo + hi, shi)
+        buf = self.read_range(lo, hi)
+        self.bytes_read[name] += max(0, hi - lo)
+        return buf
+
     def _read_checked(self, name: str) -> bytes:
         """Read one section, verifying the CRC blocks that cover it."""
         lo, hi = self._section_range(name)
-        bb = self.block_bytes
-        b0 = (lo - self._data_start) // bb
-        b1 = max(b0, (hi - self._data_start - 1) // bb) if hi > lo else b0
-        blo = self._data_start + b0 * bb
-        bhi = min(self._data_start + (b1 + 1) * bb, self._data_end)
-        with open(self.path, "rb") as f:
-            f.seek(blo)
-            buf = f.read(bhi - blo)
-        for bi in range(b0, b1 + 1):
-            if bi >= len(self._crcs):
-                break
-            s = bi * bb - (blo - self._data_start)
-            chunk = buf[s : s + bb]
-            if crc32c(chunk) != int(self._crcs[bi]):
-                raise ValueError(
-                    f"{self.path}: block {bi} checksum mismatch"
-                )
+        buf = self.read_range(lo, hi)
         self.bytes_read[name] += hi - lo
-        return buf[lo - blo : hi - blo]
+        return buf
 
     def read_keys(self) -> np.ndarray:
         """(N, KW) uint32 from the keys section."""
@@ -190,6 +273,34 @@ class SSTableReader:
         if not self.has_ckb:
             return None
         return decode_ckb(self._read_checked("ckb"))
+
+    def row_bytes(self, name: str) -> int:
+        """Fixed row width (bytes) of a columnar section."""
+        return dict(keys=self.kw * 4, vals=self.vw * 4, seq=4, tomb=1)[name]
+
+    def section_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
+        """Rows [lo, hi) of a columnar section, via block-granular reads.
+
+        Only the checksum granules overlapping the requested rows are
+        fetched (and, with a cache attached, retained) — the partial-load
+        primitive behind cold-start queries. Returns the typed array:
+        ``keys`` (M, KW) uint32, ``vals`` (M, VW) uint32, ``seq`` (M,)
+        uint32, ``tomb`` (M,) bool.
+        """
+        lo, hi = max(0, lo), min(hi, self.n)
+        rb = self.row_bytes(name)
+        raw = self.read_section_bytes(name, lo * rb, hi * rb)
+        if name == "keys":
+            return np.frombuffer(raw, "<u4").astype(np.uint32).reshape(
+                -1, self.kw
+            )
+        if name == "vals":
+            return np.frombuffer(raw, "<u4").astype(np.uint32).reshape(
+                -1, self.vw
+            )
+        if name == "seq":
+            return np.frombuffer(raw, "<u4").astype(np.uint32)
+        return np.frombuffer(raw, np.uint8).astype(bool)
 
     def verify(self) -> None:
         """Validate every block checksum (full-file scrub)."""

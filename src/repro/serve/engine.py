@@ -1,4 +1,13 @@
-"""Batched serving engine with a REMIX-indexed prefix cache.
+"""Serving engines: the LLM batch engine and the KV-store front-end.
+
+:class:`ServeEngine` drives the model serving pipeline (prefix cache +
+prefill + decode). :class:`KVServeEngine` is the storage-side analogue: it
+fronts one or more persistent :class:`repro.db.store.RemixDB` shards with
+a **single block cache shared across every partition of every shard**, so
+cold-start queries on any shard warm the same bytes-budgeted pool and the
+operator gets one hit/miss/eviction view of the whole serving node.
+
+Batched serving engine with a REMIX-indexed prefix cache.
 
 Pipeline per request batch: longest-prefix match (REMIX batched lookup) →
 copy cached KV pages into the decode cache → prefill the uncached suffix →
@@ -97,3 +106,107 @@ class ServeEngine:
             self.prefix.register(full, kc, vc)
         self.stats.decoded_tokens += len(out)
         return np.array(out, np.int32)
+
+
+class KVServeEngine:
+    """Range-sharded RemixDB serving front with one shared block cache.
+
+    ``shards`` maps inclusive lower key bounds to store data directories
+    (or existing :class:`RemixDB` instances); every store is opened with
+    the *same* :class:`repro.io.blockcache.BlockCache`, so the byte
+    budget — and the hit/miss accounting — spans all partitions of all
+    shards instead of fragmenting per store. Point and range queries are
+    routed by key range, mirroring ``RemixDB._route`` one level up.
+    """
+
+    def __init__(
+        self,
+        shards: list[tuple[int, object]],
+        cache_bytes: int = 64 << 20,
+        config=None,
+    ):
+        from repro.db.store import RemixDB, RemixDBConfig
+        from repro.io.blockcache import BlockCache
+
+        if not shards:
+            raise ValueError("KVServeEngine needs at least one shard")
+        self.cache = BlockCache(cache_bytes)
+        self.lows: list[int] = []
+        self.shards: list[RemixDB] = []
+        for lo, db in sorted(shards, key=lambda s: s[0]):
+            if not isinstance(db, RemixDB):
+                cfg = dataclasses.replace(
+                    config or RemixDBConfig(),
+                    data_dir=str(db),
+                    block_cache=self.cache,
+                )
+                db = RemixDB(cfg)
+            elif db.storage is not None:
+                # adopt a pre-opened store into the shared pool: swap its
+                # private cache out of every table handle (already-cached
+                # blocks stay in the old pool and simply age out)
+                db.block_cache = self.cache
+                for p in db.partitions:
+                    for t in p.tables:
+                        t.attach_cache(self.cache)
+            self.lows.append(int(lo))
+            self.shards.append(db)
+
+    def _route(self, key: int) -> "object":
+        import bisect
+
+        return self.shards[max(0, bisect.bisect_right(self.lows, key) - 1)]
+
+    def get(self, key: int):
+        return self._route(int(key)).get(int(key))
+
+    def get_batch(self, keys):
+        keys = np.asarray(keys, np.uint64)
+        found = np.zeros(len(keys), bool)
+        vals = np.zeros((len(keys), self.shards[0].cfg.vw), np.uint32)
+        lows = np.asarray(self.lows, np.uint64)
+        sid = np.maximum(np.searchsorted(lows, keys, side="right") - 1, 0)
+        for s in np.unique(sid):
+            m = sid == s
+            f, v = self.shards[s].get_batch(keys[m])
+            found[m] = f
+            vals[m] = v
+        return found, vals
+
+    def scan(self, start_key: int, n: int):
+        """Cross-shard range scan: drain shards in key order until full."""
+        import bisect
+
+        out_k: list[np.ndarray] = []
+        out_v: list[np.ndarray] = []
+        got = 0
+        si = max(0, bisect.bisect_right(self.lows, int(start_key)) - 1)
+        lo = int(start_key)
+        while got < n and si < len(self.shards):
+            kk, vv = self.shards[si].scan(lo, n - got)
+            out_k.append(kk)
+            out_v.append(vv)
+            got += len(kk)
+            si += 1
+            if si < len(self.shards):
+                lo = self.lows[si]
+        if not out_k:
+            return (
+                np.zeros(0, np.uint64),
+                np.zeros((0, self.shards[0].cfg.vw), np.uint32),
+            )
+        return np.concatenate(out_k), np.concatenate(out_v)
+
+    def stats(self) -> dict:
+        """Aggregated serving stats + the shared cache's counters."""
+        per = [db.stats() for db in self.shards]
+        return dict(
+            shards=len(self.shards),
+            cache=self.cache.stats(),
+            disk_bytes_read=sum(s["disk_bytes_read"] for s in per),
+            cold=dict(
+                gets=sum(s["cold"]["gets"] for s in per),
+                scans=sum(s["cold"]["scans"] for s in per),
+            ),
+            stores=per,
+        )

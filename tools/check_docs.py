@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""Execute every ```python fenced block in docs/*.md.
+
+The docs job in CI runs this so FORMAT.md / ARCHITECTURE.md snippets
+cannot drift from the code they document: each block is executed in its
+own namespace (``PYTHONPATH=src`` supplied by the caller); any exception
+fails the check. Non-runnable listings in the docs use ```text fences.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import traceback
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def blocks(md: str):
+    for m in FENCE.finditer(md):
+        yield md[: m.start()].count("\n") + 2, m.group(1)
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    failures = 0
+    total = 0
+    for doc in sorted((root / "docs").glob("*.md")):
+        for line, code in blocks(doc.read_text()):
+            total += 1
+            label = f"{doc.relative_to(root)}:{line}"
+            try:
+                exec(compile(code, label, "exec"), {"__name__": "__docs__"})
+                print(f"ok   {label}")
+            except Exception:
+                failures += 1
+                print(f"FAIL {label}")
+                traceback.print_exc()
+    print(f"{total - failures}/{total} doc snippets passed")
+    return 1 if failures or not total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
