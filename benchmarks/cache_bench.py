@@ -39,15 +39,21 @@ D = 32
 MAX_COLD_FRACTION = 0.10  # acceptance bar for a cold point query
 
 
-def build_store(root: str, seed: int = 0) -> np.ndarray:
+def build_store(
+    root: str,
+    seed: int = 0,
+    r_tables: int = R_TABLES,
+    n_per_table: int = N_PER_TABLE,
+    d: int = D,
+) -> np.ndarray:
     """A committed single-partition store on disk; returns its key domain."""
     rng = np.random.default_rng(seed)
-    total = R_TABLES * N_PER_TABLE
+    total = r_tables * n_per_table
     domain = np.arange(1, total + 1, dtype=np.uint64) * 64
-    owner = rng.integers(0, R_TABLES, total)
+    owner = rng.integers(0, r_tables, total)
     storage = Storage(root)
     names, runs, seqbase = [], [], 1
-    for i in range(R_TABLES):
+    for i in range(r_tables):
         kk = domain[owner == i]
         run = make_run(
             kk, seq=np.arange(seqbase, seqbase + len(kk), dtype=np.uint32)
@@ -60,12 +66,12 @@ def build_store(root: str, seed: int = 0) -> np.ndarray:
                 np.asarray(run.seq), np.asarray(run.tomb),
             )
         )
-    remix, _ = build_remix(runs, d=D)
+    remix, _ = build_remix(runs, d=d)
     xname = storage.write_remix(remix)
     wal = WAL(storage.wal_path())
     storage.commit(
         dict(
-            seq=seqbase, vw=2, d=D,
+            seq=seqbase, vw=2, d=d,
             partitions=[dict(lo=0, tables=names, remix=xname)],
             wal=wal.save_state(),
         )

@@ -19,6 +19,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        batch_bench,
         cache_bench,
         fig11_queries,
         fig13_groupsize,
@@ -39,6 +40,8 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "rebuild": rebuild_bench.run,
         "cache": cache_bench.run,
+        # also emits results/BENCH_queries.json (the perf trajectory file)
+        "batch": batch_bench.run,
     }
     if args.only:
         names = args.only.split(",")

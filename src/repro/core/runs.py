@@ -123,46 +123,123 @@ class RunSet:
         )
 
 
-def partial_runset(
-    ranges: Sequence[tuple[int, int]],
-    fetch_rows,
-    kw: int,
-    vw: int,
-    with_seq: bool = False,
-) -> tuple[RunSet, np.ndarray]:
-    """Assemble a host-side RunSet covering only per-run row slices.
+def merge_ranges_np(
+    los: np.ndarray, his: np.ndarray, gap: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized [lo, hi) range coalescing: sort, drop empties, fuse
+    overlaps and gaps of at most ``gap`` rows. The planning step before
+    a batched fetch — each merged range becomes one contiguous read, so
+    a query batch touching interleaved windows never fetches a row (or
+    the block containing it) twice. Returns (mlos, mhis) arrays."""
+    los = np.asarray(los, np.int64)
+    his = np.asarray(his, np.int64)
+    live = his > los
+    los, his = los[live], his[live]
+    if len(los) == 0:
+        return los, his
+    order = np.argsort(los, kind="stable")
+    los, his = los[order], his[order]
+    hmax = np.maximum.accumulate(his)
+    head = np.empty(len(los), bool)
+    head[0] = True
+    head[1:] = los[1:] > hmax[:-1] + gap
+    starts = np.flatnonzero(head)
+    return los[starts], np.maximum.reduceat(his, starts)
 
-    The incremental-materialization primitive for cold-start range
-    queries: instead of loading whole tables, the caller names one
-    contiguous row range per run (the rows a REMIX scan window touches)
-    and ``fetch_rows(run, section, lo, hi)`` pulls exactly those rows —
-    backed by block-granular, cache-shared SSTable reads.
 
-    ``ranges``: [lo, hi) absolute row range per run (R entries; empty
-    ranges allowed). Returns ``(runset, row0)`` with numpy (host) leaves:
-    row ``i`` of run ``r`` in the runset is absolute row ``row0[r] + i``
-    of that run. ``seq`` is fetched only ``with_seq`` — scans don't need
-    it (selector newest bits already encode version order) and skipping
-    it avoids touching those blocks.
+def merge_ranges(
+    ranges: Sequence[tuple[int, int]], gap: int = 0
+) -> list[tuple[int, int]]:
+    """List-of-tuples convenience wrapper around :func:`merge_ranges_np`."""
+    if not ranges:
+        return []
+    arr = np.asarray(ranges, np.int64).reshape(-1, 2)
+    mlo, mhi = merge_ranges_np(arr[:, 0], arr[:, 1], gap=gap)
+    return list(zip(mlo.tolist(), mhi.tolist()))
+
+
+def ranges_to_rows(los: np.ndarray, his: np.ndarray) -> np.ndarray:
+    """Expand disjoint sorted [lo, hi) ranges into one flat ascending row
+    array — the vectorized equivalent of concatenating per-range
+    ``np.arange`` calls."""
+    los = np.asarray(los, np.int64)
+    his = np.asarray(his, np.int64)
+    lens = his - los
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    start_of = np.repeat(np.cumsum(lens) - lens, lens)
+    return np.arange(total, dtype=np.int64) - start_of + np.repeat(los, lens)
+
+
+@dataclasses.dataclass
+class RowWindow:
+    """Host rows of one run covering a coalesced set of row ranges.
+
+    The cold-scan materialization primitive: instead of loading whole
+    tables, a scan names the row ranges its window emits — a scalar scan
+    one contiguous range per run, a query batch many interleaved ones —
+    ``from_ranges``/``from_scattered`` fuse them (``merge_ranges``) and
+    fetch each merged range once, and :meth:`gather` then answers any
+    (absolute row) subset with a vectorized lookup. ``keys`` are stored
+    unpacked (u64) since scan callers compare/emit u64 keys.
     """
-    r = len(ranges)
-    lens = np.array([max(0, hi - lo) for lo, hi in ranges], np.int32)
-    row0 = np.array([lo for lo, _ in ranges], np.int32)
-    nmax = max(1, int(lens.max()) if r else 1)
-    keys = np.full((r, nmax, kw), K.UINT32_MAX, np.uint32)
-    vals = np.zeros((r, nmax, vw), np.uint32)
-    seq = np.zeros((r, nmax), np.uint32)
-    tomb = np.zeros((r, nmax), bool)
-    for i, (lo, hi) in enumerate(ranges):
-        m = lens[i]
-        if m <= 0:
-            continue
-        keys[i, :m] = fetch_rows(i, "keys", lo, hi)
-        vals[i, :m] = fetch_rows(i, "vals", lo, hi)
-        tomb[i, :m] = fetch_rows(i, "tomb", lo, hi)
-        if with_seq:
-            seq[i, :m] = fetch_rows(i, "seq", lo, hi)
-    return RunSet(keys=keys, vals=vals, seq=seq, tomb=tomb, lens=lens), row0
+
+    rows: np.ndarray  # (M,) int64 absolute rows, sorted ascending
+    keys: np.ndarray  # (M,) uint64
+    vals: np.ndarray  # (M, VW) uint32
+    tomb: np.ndarray  # (M,) bool
+
+    @classmethod
+    def from_ranges(cls, ranges, fetch_rows, gap: int = 0) -> "RowWindow":
+        """``fetch_rows(section, lo, hi)`` pulls rows of one section."""
+        merged = merge_ranges(ranges, gap=gap)
+        rows, keys, vals, tomb = [], [], [], []
+        for lo, hi in merged:
+            rows.append(np.arange(lo, hi, dtype=np.int64))
+            keys.append(K.unpack_u64(fetch_rows("keys", lo, hi)))
+            vals.append(fetch_rows("vals", lo, hi))
+            tomb.append(fetch_rows("tomb", lo, hi))
+        if not rows:
+            return cls(
+                rows=np.zeros(0, np.int64),
+                keys=np.zeros(0, np.uint64),
+                vals=np.zeros((0, 1), np.uint32),
+                tomb=np.zeros(0, bool),
+            )
+        return cls(
+            rows=np.concatenate(rows),
+            keys=np.concatenate(keys),
+            vals=np.concatenate(vals),
+            tomb=np.concatenate(tomb),
+        )
+
+    @classmethod
+    def from_scattered(cls, ranges, fetch_scattered, gap: int = 0
+                       ) -> "RowWindow":
+        """Like :meth:`from_ranges` but with one scattered fetch per
+        section for the whole merged range set —
+        ``fetch_scattered(section, rows)`` pulls arbitrary rows with
+        block-level dedupe (``SSTableReader.section_rows_scattered``).
+        The batch-path constructor: three fetches total instead of three
+        per merged range."""
+        merged = merge_ranges(ranges, gap=gap)
+        if not merged:
+            return cls.from_ranges([], None)
+        arr = np.asarray(merged, np.int64)
+        rows = ranges_to_rows(arr[:, 0], arr[:, 1])
+        return cls(
+            rows=rows,
+            keys=K.unpack_u64(fetch_scattered("keys", rows)),
+            vals=fetch_scattered("vals", rows),
+            tomb=fetch_scattered("tomb", rows),
+        )
+
+    def gather(self, want: np.ndarray):
+        """(keys u64, vals, tomb) at absolute rows ``want`` (all of which
+        must lie inside the fetched ranges)."""
+        idx = np.searchsorted(self.rows, np.asarray(want, np.int64))
+        return self.keys[idx], self.vals[idx], self.tomb[idx]
 
 
 def stack_runs(runs: Sequence[Run]) -> RunSet:

@@ -13,7 +13,14 @@ import numpy as np
 
 from repro.core import keys as CK
 from repro.core.remix import Remix, build_remix
-from repro.core.runs import Run, RunSet, make_run, partial_runset
+from repro.core.runs import (
+    Run,
+    RunSet,
+    RowWindow,
+    make_run,
+    merge_ranges_np,
+    ranges_to_rows,
+)
 from repro.core.view import NEWEST_BIT, PLACEHOLDER
 
 KEY_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
@@ -87,20 +94,22 @@ class Table:
         seq: np.ndarray | None = None,  # (N,) uint32
         tomb: np.ndarray | None = None,  # (N,) bool
         path: str | None = None,
+        cache_mode: str = "copy",
     ):
         if keys is None and path is None:
             raise ValueError("Table needs in-memory arrays or a file path")
         self._keys, self._vals = keys, vals
         self._seq, self._tomb = seq, tomb
         self.path = path
+        self.cache_mode = cache_mode
         self._reader = None
         self._cache = None
         self._ckb = None
         self._n: int | None = None if keys is None else len(keys)
 
     @classmethod
-    def from_file(cls, path: str) -> "Table":
-        return cls(path=path)
+    def from_file(cls, path: str, cache_mode: str = "copy") -> "Table":
+        return cls(path=path, cache_mode=cache_mode)
 
     def __repr__(self) -> str:
         # must not force-load a lazy handle: report only what is resident
@@ -124,7 +133,9 @@ class Table:
         if self._reader is None:
             from repro.io.sstable import SSTableReader
 
-            self._reader = SSTableReader(self.path, cache=self._cache)
+            self._reader = SSTableReader(
+                self.path, cache=self._cache, mode=self.cache_mode
+            )
         return self._reader
 
     # ---- block-granular access (cold read path) ----
@@ -176,6 +187,57 @@ class Table:
             else:
                 hi = mid
         return lo
+
+    # ---- batched access (cold batch query path) ----
+    def rows_scattered(self, section: str, rows) -> np.ndarray:
+        """Arbitrary rows of one section; each touched granule fetched
+        once (see ``SSTableReader.section_rows_scattered``)."""
+        return self._rd().section_rows_scattered(section, rows)
+
+    def keys_u64_rows(self, rows) -> np.ndarray:
+        """(M,) uint64 keys at the given rows, via scattered block reads."""
+        return CK.unpack_u64(self.rows_scattered("keys", rows))
+
+    def prefetch_rows(self, section: str, lo: int, hi: int) -> None:
+        """Issue cache loads for the granules covering rows [lo, hi)."""
+        rd = self._rd()
+        for bi in rd.section_row_blocks(section, lo, hi):
+            rd.prefetch_block(bi)
+
+    def seek_rows_batch(self, qs: np.ndarray, los, his) -> np.ndarray:
+        """Lower bounds of ``qs`` (Q,) u64 within per-query row ranges.
+
+        The batched counterpart of :meth:`seek_row`, same results, no
+        per-query binary search: the CKB's restart keys narrow every
+        query to one restart interval in a single vectorized pass
+        (:meth:`repro.io.ckb.CKBReader.narrow_batch`), the narrowed
+        fixed-width key rows are fetched with ranges merged across the
+        whole batch (each granule once), and one ``np.searchsorted``
+        over the concatenated rows resolves every query. Clipping the
+        global candidate row into each query's narrowed range is exact
+        because keys ascend with row number.
+        """
+        qs = np.asarray(qs, np.uint64)
+        los = np.maximum(np.asarray(los, np.int64), 0)
+        his = np.minimum(np.asarray(his, np.int64), self.n)
+        out = his.copy()
+        act = his > los
+        if not act.any():
+            return out
+        nlo, nhi = los.copy(), his.copy()
+        ckb = self.ckb()
+        if ckb is not None and ckb.kb == 8:
+            nlo[act], nhi[act] = ckb.narrow_batch(qs[act], los[act], his[act])
+        mlo, mhi = merge_ranges_np(nlo[act], nhi[act])
+        rows_cat = ranges_to_rows(mlo, mhi)
+        keys_cat = self.keys_u64_rows(rows_cat)  # one scattered fetch
+        idx = np.searchsorted(keys_cat, qs, side="left")
+        hit = idx < len(rows_cat)
+        cand = np.where(
+            hit, rows_cat[np.minimum(idx, len(rows_cat) - 1)],
+            np.iinfo(np.int64).max,
+        )
+        return np.where(act, np.clip(cand, nlo, nhi), his)
 
     @property
     def keys(self) -> np.ndarray:
@@ -352,6 +414,79 @@ class Partition:
             nxt = np.array([t.n for t in self.tables], np.int64)
         return cur, nxt
 
+    def _group_bounds_batch(self, hx: dict, keys: np.ndarray):
+        """Vectorized anchors search + cursor gather for a key batch.
+
+        Returns (g (Q,), cur (Q, R), nxt (Q, R)) — the batched analogue
+        of one scalar searchsorted + :meth:`_group_rows` per key.
+        """
+        g = np.maximum(
+            np.searchsorted(hx["anch64"], keys, side="right") - 1, 0
+        )
+        cursors = hx["cursors"]
+        gcount = cursors.shape[0]
+        ns = np.array([t.n for t in self.tables], np.int64)
+        cur = cursors[g].astype(np.int64)
+        nxt = np.where(
+            (g + 1 < gcount)[:, None],
+            cursors[np.minimum(g + 1, gcount - 1)].astype(np.int64),
+            ns[None, :],
+        )
+        return g, cur, nxt
+
+    @staticmethod
+    def _gather_emit(er, erow, windows, vw: int):
+        """Emit live (key, value) rows for one walked window.
+
+        ``er``/``erow`` are the emitted runs/absolute rows in view order;
+        ``windows[r]`` answers run ``r``'s rows (``RowWindow.gather``).
+        Shared by the scalar and batched scan paths so both stay
+        bit-identical by construction: gather per run, scatter back into
+        view order, drop tombstones.
+        """
+        kk = np.empty(len(er), np.uint64)
+        vv = np.empty((len(er), vw), np.uint32)
+        dead = np.zeros(len(er), bool)
+        for r in np.unique(er):
+            m = er == r
+            kk[m], vv[m], dead[m] = windows[r].gather(erow[m])
+        live = ~dead
+        return kk[live], vv[live]
+
+    def _walk_window(self, hx: dict, g: int, cur, nextrow, width: int):
+        """Vectorized selector walk over one query's view window.
+
+        Replaces the slot-by-slot Python loop: the whole window's
+        selectors are classified at once and each run's occurrences get
+        consecutive rows via one cumulative count per run. Mutates
+        ``nextrow`` to the post-window per-run row pointers (exactly as
+        the sequential walk would). Returns ``(pos, stop, valid, win,
+        rows_abs, newest)``: window slot bounds, the per-slot
+        non-placeholder mask, raw selector values, absolute rows
+        assigned per slot, and the newest-version emission mask.
+        """
+        d, sels, n_slots = hx["d"], hx["selectors"], hx["n_slots"]
+        pos = g * d + int(np.sum(nextrow - cur))
+        # device-seek parity (_ingroup_vector): landing on a trailing
+        # placeholder means every real entry of the group is < start, so
+        # the true lower bound is the next group's head — the window must
+        # not waste budget on the placeholder tail.
+        if pos < min(n_slots, (g + 1) * d) and int(sels[pos]) == PLACEHOLDER:
+            pos = (g + 1) * d
+        pos = min(pos, n_slots)
+        stop = min(n_slots, pos + width)
+        win = sels[pos:stop].astype(np.int64)
+        valid = win != PLACEHOLDER
+        rows_abs = np.zeros(len(win), np.int64)
+        for r in range(len(self.tables)):
+            m = valid & ((win & 0x7F) == r)
+            c = int(np.count_nonzero(m))
+            if c:
+                rows_abs[m] = int(nextrow[r]) + np.arange(c)
+                nextrow[r] += c
+        newest = valid & ((win & NEWEST_BIT) != 0)
+        return pos, stop, valid, win, rows_abs, newest
+
     def cold_get(self, key: int) -> tuple[bool, np.ndarray | None]:
         """Point lookup from the on-disk REMIX without loading any table.
 
@@ -391,22 +526,84 @@ class Partition:
             return False, None
         return True, t.rows("vals", row, row + 1)[0]
 
-    def cold_scan(self, start: int, width: int):
+    def cold_get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized point lookups off the on-disk REMIX.
+
+        The batched counterpart of :meth:`cold_get`, bit-identical per
+        key, with the per-key Python work replaced by whole-batch array
+        ops: one vectorized anchors binary search, one grouped
+        :meth:`Table.seek_rows_batch` per run (restart-narrowed,
+        range-merged), a vectorized selector resolve, and finally
+        key-check/tombstone/value fetches grouped per run with all
+        (file, block) granules deduplicated — each granule a batch
+        touches is read exactly once. Returns (found (Q,), vals (Q, VW)).
+        """
+        keys = np.asarray(keys, np.uint64)
+        q = len(keys)
+        vw = self.tables[0].vw if self.tables else 2
+        found = np.zeros(q, bool)
+        vals = np.zeros((q, vw), np.uint32)
+        if q == 0 or not self.tables:
+            return found, vals
+        hx = self._host_index()
+        self.cold_gets += q
+        d, sels, n_slots = hx["d"], hx["selectors"], hx["n_slots"]
+        nrun = len(self.tables)
+        g, cur, nxt = self._group_bounds_batch(hx, keys)
+        rows = np.empty((q, nrun), np.int64)
+        for r, t in enumerate(self.tables):
+            rows[:, r] = t.seek_rows_batch(keys, cur[:, r], nxt[:, r])
+        s = (rows - cur).sum(axis=1)
+        pos = g * d + s
+        ok = (s < d) & (pos < n_slots)
+        sel = np.where(
+            ok, sels[np.minimum(pos, n_slots - 1)].astype(np.int64),
+            PLACEHOLDER,
+        )
+        ok &= (sel != PLACEHOLDER) & ((sel & NEWEST_BIT) != 0)
+        run = np.where(ok, sel & 0x7F, 0)
+        row = rows[np.arange(q), np.minimum(run, nrun - 1)]
+        for r in np.unique(run[ok]):
+            t = self.tables[r]
+            m = ok & (run == r)
+            rr = row[m]
+            match = t.keys_u64_rows(rr) == keys[m]
+            qi = np.flatnonzero(m)[match]
+            rv = rr[match]
+            if not len(qi):
+                continue
+            live = ~t.rows_scattered("tomb", rv)
+            found[qi] = live
+            if live.any():
+                vals[qi[live]] = t.rows_scattered("vals", rv[live])
+        return found, vals
+
+    def cold_scan(self, start: int, width: int, prefetch_depth: int = 0):
         """Range scan over a ``width``-slot view window without whole-table
         loads: seek as in :meth:`cold_get`, walk the selector stream
         (comparison-free next, §3.3) to find the touched per-run row
-        ranges, then materialize only those ranges via
-        :func:`repro.core.runs.partial_runset`. The window covers exactly
-        ``width`` view slots from the seek position — placeholders, old
-        versions and tombstones consume budget — matching the device
-        path's ``gather_view`` window bit-for-bit, so promotion never
-        changes scan results. Returns (keys (M,) u64, vals (M, VW),
-        more) — live entries in ascending order, M ≤ width, and whether
-        view slots remain beyond the window (so an all-invalid window is
-        distinguishable from an exhausted partition)."""
+        ranges, then materialize only the emitted row spans per run. The
+        window covers exactly ``width`` view slots from the seek
+        position — placeholders, old versions and tombstones consume
+        budget — matching the device path's ``gather_view`` window
+        bit-for-bit, so promotion never changes scan results.
+
+        With ``prefetch_depth > 0`` the materialization is pipelined per
+        selector group (paper Fig 10): while group *i*'s rows are being
+        fetched and emitted, the value/tomb blocks of groups
+        ``i+1 .. i+depth`` — already known exactly from the decoded
+        selector stream — are issued into the block cache, so a demand
+        read behind the emitter always finds its granule resident. The
+        prefetched block set equals the eager path's demand set (the
+        stream names precisely which rows each group touches), so
+        pipelining never reads a block the eager path would not.
+
+        Returns (keys (M,) u64, vals (M, VW), more) — live entries in
+        ascending order, M ≤ width, and whether view slots remain beyond
+        the window (so an all-invalid window is distinguishable from an
+        exhausted partition)."""
         hx = self._host_index()
         self.cold_scans += 1
-        d, sels, n_slots = hx["d"], hx["selectors"], hx["n_slots"]
         g = max(
             int(np.searchsorted(hx["anch64"], np.uint64(start), side="right"))
             - 1,
@@ -421,53 +618,127 @@ class Partition:
             ],
             np.int64,
         )
-        row0 = nextrow.copy()
-        pos = g * d + int(np.sum(nextrow - cur))
-        # device-seek parity (_ingroup_vector): landing on a trailing
-        # placeholder means every real entry of the group is < start, so
-        # the true lower bound is the next group's head — the window must
-        # not waste budget on the placeholder tail. The row pointers are
-        # already cursors[g+1] in that case (all group entries consumed).
-        if pos < min(n_slots, (g + 1) * d) and int(sels[pos]) == PLACEHOLDER:
-            pos = (g + 1) * d
-        pos = min(pos, n_slots)
-        emit: list[tuple[int, int]] = []  # (run, absolute row), view order
-        stop = min(n_slots, pos + width)  # slot budget == device window
-        while pos < stop:
-            sel = int(sels[pos])
-            pos += 1
-            if sel == PLACEHOLDER:
-                continue
-            run = sel & 0x7F
-            row = int(nextrow[run])
-            nextrow[run] += 1
-            if sel & NEWEST_BIT:
-                emit.append((run, row))
-        vw = self.tables[0].vw if self.tables else 2
-        more = stop < n_slots
-        if not emit:
-            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), more
-        kw = self.tables[0]._rd().kw
-        ranges = [
-            (int(row0[r]), int(nextrow[r])) for r in range(len(self.tables))
-        ]
-        rs, r0 = partial_runset(
-            ranges,
-            lambda r, sec, lo, hi: self.tables[r].rows(sec, lo, hi),
-            kw=kw,
-            vw=vw,
+        pos, stop, valid, win, rows_abs, newest = self._walk_window(
+            hx, g, cur, nextrow, width
         )
-        out_k: list[int] = []
-        out_v: list[np.ndarray] = []
-        for run, row in emit:
-            i = row - int(r0[run])
-            if rs.tomb[run, i]:
-                continue
-            out_k.append(int(CK.unpack_u64(rs.keys[run, i][None, :])[0]))
-            out_v.append(rs.vals[run, i])
-        if not out_k:
+        vw = self.tables[0].vw if self.tables else 2
+        more = stop < hx["n_slots"]
+        if not bool(newest.any()):
             return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), more
-        return np.array(out_k, np.uint64), np.stack(out_v), more
+        kk, vv = self._emit_window(
+            pos, stop, win, rows_abs, newest, prefetch_depth, vw, hx["d"]
+        )
+        return kk, vv, more
+
+    def _emit_window(
+        self, pos, stop, win, rows_abs, newest, depth, vw, d
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize and emit one walked window, group-pipelined.
+
+        The window's emitted slots are split into selector-group chunks
+        (one chunk — the whole window — when ``depth == 0``, i.e. the
+        eager path). Per chunk and run, the emitted row span is fetched
+        as one coalesced range; with ``depth > 0`` the *next* chunks'
+        value/tomb granules are issued to the cache first.
+        """
+        runsel = win & 0x7F
+        slots = np.arange(pos, stop)
+        if depth > 0:
+            bounds = (
+                [pos]
+                + list(range((pos // d + 1) * d, stop, d))
+                + [stop]
+            )
+        else:
+            bounds = [pos, stop]
+        nrun = len(self.tables)
+        chunk_ranges: list[list[tuple[int, int]]] = []
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            inb = (slots >= a) & (slots < b) & newest
+            rng = []
+            for r in range(nrun):
+                rr = rows_abs[inb & (runsel == r)]
+                rng.append((int(rr[0]), int(rr[-1]) + 1) if len(rr) else (0, 0))
+            chunk_ranges.append(rng)
+        ks_out: list[np.ndarray] = []
+        vs_out: list[np.ndarray] = []
+        for ci, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
+            for cj in range(ci + 1, min(ci + 1 + depth, len(chunk_ranges))):
+                for r in range(nrun):
+                    lo2, hi2 = chunk_ranges[cj][r]
+                    if hi2 > lo2:
+                        self.tables[r].prefetch_rows("vals", lo2, hi2)
+                        self.tables[r].prefetch_rows("tomb", lo2, hi2)
+            inb = (slots >= a) & (slots < b) & newest
+            if not inb.any():
+                continue
+            er, erow = runsel[inb], rows_abs[inb]
+            wnds = {
+                r: RowWindow.from_ranges(
+                    [chunk_ranges[ci][r]],
+                    lambda sec, x, y, t=self.tables[r]: t.rows(sec, x, y),
+                )
+                for r in np.unique(er)
+            }
+            kk, vv = self._gather_emit(er, erow, wnds, vw)
+            ks_out.append(kk)
+            vs_out.append(vv)
+        if not ks_out:
+            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32)
+        return np.concatenate(ks_out), np.concatenate(vs_out)
+
+    def cold_scan_batch(self, starts, width: int) -> list[tuple]:
+        """Batched :meth:`cold_scan`: one vectorized anchors search and
+        one grouped per-run seek for the whole batch, then per-query
+        selector walks whose touched row spans are **coalesced per run**
+        (``merge_ranges``) before fetching — interleaved scan windows
+        share granules, and each touched (file, block) granule is read
+        at most once for the batch. Returns a list of per-query
+        ``(keys, vals, more)`` triples, bit-identical to cold_scan.
+
+        (No prefetch pipeline here: the batch path already fetches every
+        window's blocks in one coalesced pass up front, which strictly
+        dominates group-ahead prefetching.)"""
+        starts = np.asarray(starts, np.uint64)
+        q = len(starts)
+        vw = self.tables[0].vw if self.tables else 2
+        empty = (np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), False)
+        if q == 0 or not self.tables:
+            return [empty] * q
+        hx = self._host_index()
+        self.cold_scans += q
+        n_slots = hx["n_slots"]
+        nrun = len(self.tables)
+        g, cur, nxt = self._group_bounds_batch(hx, starts)
+        nextrow = np.empty((q, nrun), np.int64)
+        for r, t in enumerate(self.tables):
+            nextrow[:, r] = t.seek_rows_batch(starts, cur[:, r], nxt[:, r])
+        walks = []
+        ranges_by_run: list[list[tuple[int, int]]] = [[] for _ in range(nrun)]
+        for i in range(q):
+            pos, stop, valid, win, rows_abs, newest = self._walk_window(
+                hx, int(g[i]), cur[i], nextrow[i], width
+            )
+            er = (win & 0x7F)[newest]
+            erow = rows_abs[newest]
+            for r in np.unique(er):
+                rr = erow[er == r]
+                ranges_by_run[r].append((int(rr[0]), int(rr[-1]) + 1))
+            walks.append((er, erow, stop < n_slots))
+        windows = [
+            RowWindow.from_scattered(
+                ranges_by_run[r], self.tables[r].rows_scattered
+            )
+            for r in range(nrun)
+        ]
+        out = []
+        for er, erow, more in walks:
+            if er.size == 0:
+                out.append((empty[0], empty[1], more))
+                continue
+            kk, vv = self._gather_emit(er, erow, windows, vw)
+            out.append((kk, vv, more))
+        return out
 
     @property
     def n_entries(self) -> int:

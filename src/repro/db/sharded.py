@@ -32,6 +32,21 @@ def shard_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(mesh.axis_names)
 
 
+def route_host(lows, keys) -> np.ndarray:
+    """Host-side range routing: owner index per key.
+
+    ``lows`` are the sorted inclusive lower bounds of the ranges (the
+    first covers everything below it too); one vectorized searchsorted
+    routes a whole batch. This is the single routing primitive shared by
+    ``RemixDB`` (partition routing in ``flush``/``get_batch``/
+    ``scan_batch``) and ``serve.KVServeEngine`` (shard routing), so a
+    sharded batch is split with the same arithmetic at every level.
+    """
+    lows = np.asarray(lows, np.uint64)
+    keys = np.asarray(keys, np.uint64)
+    return np.maximum(np.searchsorted(lows, keys, side="right") - 1, 0)
+
+
 def abstract_state(cfg, n_shards: int):
     """ShapeDtypeStructs for the sharded store state (dry-run inputs)."""
     r, n, kw, vw, d = (

@@ -31,6 +31,7 @@ from repro.db.compaction import (
 )
 from repro.db.memtable import MemTable
 from repro.db.partition import Partition, Table
+from repro.db.sharded import route_host
 from repro.db.wal import WAL
 
 
@@ -63,6 +64,20 @@ class RemixDBConfig:
     # build the device RunSet once cold reads fetched this fraction of a
     # partition's data region
     promote_fraction: float = 0.5
+    # cold-scan pipelining (paper Fig 10): while one selector group's
+    # rows are emitted, issue the next `prefetch_depth` groups'
+    # value/tomb blocks into the cache; 0 = eager (fetch on demand).
+    # Never reads a block the eager path would not (the selector stream
+    # names exactly which rows each group touches).
+    prefetch_depth: int = 1
+    # block-read mode for lazy table handles: "copy" reads each verified
+    # granule into heap bytes; "mmap" maps the file once and serves
+    # zero-copy memoryview slices after a single checksum pass
+    cache_mode: str = "copy"
+    # WAL durability: "block" (default) group-commits — fsync whenever a
+    # full 4 KB block is written; "always" fsyncs every put; "none" only
+    # fsyncs on explicit sync()/close()
+    sync_policy: str = "block"
 
 
 
@@ -87,6 +102,13 @@ class RemixDB:
                 f"ingroup must be 'auto', 'binary' or 'vector', got {mode!r}"
             )
         self._ingroup = mode
+        if self.cfg.cache_mode not in ("copy", "mmap"):
+            raise ValueError(
+                f"cache_mode must be 'copy' or 'mmap', "
+                f"got {self.cfg.cache_mode!r}"
+            )
+        if self.cfg.prefetch_depth < 0:
+            raise ValueError("prefetch_depth must be >= 0")
         self.mem = MemTable(vw=self.cfg.vw)
         self.storage = None
         self.block_cache = None
@@ -108,7 +130,8 @@ class RemixDB:
             wal_dir = self.cfg.wal_dir or tempfile.mkdtemp(prefix="remixdb-")
             os.makedirs(wal_dir, exist_ok=True)
             wal_path = os.path.join(wal_dir, "wal.log")
-        self.wal = WAL(wal_path, vw=self.cfg.vw)
+        self.wal = WAL(wal_path, vw=self.cfg.vw,
+                       sync_policy=self.cfg.sync_policy)
         self.partitions: list[Partition] = [Partition(lo=0, d=self.cfg.d)]
         self.seq = 1
         # physical-read bytes of table handles retired by compaction, so
@@ -161,7 +184,10 @@ class RemixDB:
         for pe in state["partitions"]:
             tables = []
             for nm in pe["tables"]:
-                t = Table.from_file(self.storage.table_path(nm))
+                t = Table.from_file(
+                    self.storage.table_path(nm),
+                    cache_mode=self.cfg.cache_mode,
+                )
                 t.attach_cache(self.block_cache)
                 tables.append(t)
             live.update(pe["tables"])
@@ -270,10 +296,7 @@ class RemixDB:
             keys[~hot], vals[~hot], seq[~hot], tomb[~hot],
         )
         # route new data to partitions
-        los = np.array([p.lo for p in self.partitions], np.uint64)
-        pidx = np.maximum(
-            np.searchsorted(los, keys, side="right") - 1, 0
-        )
+        pidx = route_host([p.lo for p in self.partitions], keys)
         plans: list[Plan] = []
         for i, p in enumerate(self.partitions):
             m = pidx == i
@@ -370,19 +393,14 @@ class RemixDB:
                 rest.append(i)
         if rest:
             rest = np.array(rest)
-            los = np.array([p.lo for p in self.partitions], np.uint64)
-            pidx = np.maximum(
-                np.searchsorted(los, keys[rest], side="right") - 1, 0
-            )
+            pidx = route_host([p.lo for p in self.partitions], keys[rest])
             for pi in np.unique(pidx):
                 sel = rest[pidx == pi]
                 p = self.partitions[pi]
                 if self._cold_ok(p):
-                    for qi in sel:
-                        f, v = p.cold_get(int(keys[qi]))
-                        found[qi] = f
-                        if f:
-                            vals[qi] = v
+                    f, v = p.cold_get_batch(keys[sel])
+                    found[sel] = f
+                    vals[sel[f]] = v[f]
                     continue
                 remix, runset = p.index()
                 kq = keys[sel]
@@ -410,7 +428,9 @@ class RemixDB:
                 else 1 << 64
             )
             if self._cold_ok(p):
-                kk, vv, more = p.cold_scan(lo, width)
+                kk, vv, more = p.cold_scan(
+                    lo, width, prefetch_depth=self.cfg.prefetch_depth
+                )
             else:
                 remix, runset = p.index()
                 qk = jnp.asarray(CK.pack_u64(np.array([lo], np.uint64)))
@@ -473,8 +493,7 @@ class RemixDB:
         q = len(starts)
         out_k = np.zeros((q, n), np.uint64)
         out_m = np.zeros((q, n), bool)
-        los = np.array([p.lo for p in self.partitions], np.uint64)
-        pidx = np.maximum(np.searchsorted(los, starts, side="right") - 1, 0)
+        pidx = route_host([p.lo for p in self.partitions], starts)
         width = n + max(8, n // 2)
         for pi in np.unique(pidx):
             sel = np.flatnonzero(pidx == pi)
@@ -501,8 +520,9 @@ class RemixDB:
                     out_m[qi, : len(kk2)] = True
 
             if self._cold_ok(p):
-                for qi in sel:
-                    kk, _, _ = p.cold_scan(int(starts[qi]), width)
+                for qi, (kk, _, _) in zip(
+                    sel, p.cold_scan_batch(starts[sel], width)
+                ):
                     emit_row(qi, kk)
                 continue
             remix, runset = p.index()

@@ -11,6 +11,20 @@ from stale *unwritten* blocks, exactly as in the paper.
 
 Record format inside a block (fixed width): key u64 | seq u32 | flags u32 |
 VW*u32 value. Records never span blocks.
+
+Durability is a policy knob (``sync_policy``), mirroring the usual LSM
+WAL options:
+
+- ``"block"`` (default): group commit — records buffer in memory until a
+  4 KB block fills, and the block write is fsynced immediately. A crash
+  loses at most one partial block of un-flushed appends; an explicit
+  ``sync()`` (or ``close()``) flushes and fsyncs the tail.
+- ``"always"``: every append is flushed and fsynced before returning —
+  per-put durability at the cost of one (possibly near-empty) block per
+  record until GC repacks them.
+- ``"none"``: blocks are written when full but only fsynced by an
+  explicit ``sync()``/``close()`` — fastest, loses the OS write-back
+  window on power failure.
 """
 from __future__ import annotations
 
@@ -49,9 +63,23 @@ class VirtualLog:
 
 
 class WAL:
-    def __init__(self, path: str, vw: int = 2, capacity_blocks: int = 1 << 20):
+    SYNC_POLICIES = ("none", "block", "always")
+
+    def __init__(
+        self,
+        path: str,
+        vw: int = 2,
+        capacity_blocks: int = 1 << 20,
+        sync_policy: str = "block",
+    ):
+        if sync_policy not in self.SYNC_POLICIES:
+            raise ValueError(
+                f"sync_policy must be one of {self.SYNC_POLICIES}, "
+                f"got {sync_policy!r}"
+            )
         self.path = path
         self.vw = vw
+        self.sync_policy = sync_policy
         self.rec_size = _rec_size(vw)
         self.recs_per_block = (BLOCK - HDR) // self.rec_size
         self.capacity_blocks = capacity_blocks
@@ -73,14 +101,26 @@ class WAL:
     # ---------- append path ----------
     def append(self, key: int, seq: int, tomb: bool, val: np.ndarray):
         self._pending.append((key, seq, int(tomb), np.asarray(val, np.uint32)))
-        if len(self._pending) >= self.recs_per_block:
+        if self.sync_policy == "always":
             self._flush_pending()
+            self._fsync()
+        elif len(self._pending) >= self.recs_per_block:
+            self._flush_pending()
+            if self.sync_policy == "block":
+                self._fsync()
 
     def append_batch(self, keys, seqs, tombs, vals):
         for k, s, t, v in zip(keys, seqs, tombs, vals):
             self._pending.append((int(k), int(s), int(t), v))
+        flushed = False
         while len(self._pending) >= self.recs_per_block:
             self._flush_pending()
+            flushed = True
+        if self.sync_policy == "always":
+            self._flush_pending()
+            flushed = True
+        if flushed and self.sync_policy in ("block", "always"):
+            self._fsync()
 
     def _alloc_block(self) -> int:
         if self.free:
@@ -92,6 +132,8 @@ class WAL:
         return phys
 
     def _flush_pending(self):
+        if not self._pending:
+            return
         n = min(len(self._pending), self.recs_per_block)
         recs, self._pending = self._pending[:n], self._pending[n:]
         phys = self._alloc_block()
@@ -113,15 +155,19 @@ class WAL:
                      bitmap=(1 << n) - 1)
         )
 
+    def _fsync(self):
+        """fsync the log file if blocks were written since the last one."""
+        if self._dirty:
+            with open(self.path, "rb") as f:
+                os.fsync(f.fileno())
+            self._dirty = False
+
     def sync(self):
         """Flush buffered records to blocks and fsync them to disk: after
         sync() returns, everything appended so far survives power loss."""
         while self._pending:
             self._flush_pending()
-        if self._dirty:
-            with open(self.path, "rb") as f:
-                os.fsync(f.fileno())
-            self._dirty = False
+        self._fsync()
 
     # ---------- read / recovery path ----------
     def _read_block(self, phys: int):

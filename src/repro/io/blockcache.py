@@ -14,6 +14,21 @@ surviving file), but a reused name never resolves to stale blocks.
 Capacity is a byte budget, not an entry count: eviction pops
 least-recently-used granules until the budget holds. Hit/miss/eviction
 counters feed ``RemixDB.stats()["cache"]``.
+
+Payloads are any immutable bytes-like object. In ``cache_mode="copy"``
+(the default) they are heap ``bytes``; in ``cache_mode="mmap"``
+(:class:`repro.io.sstable.SSTableReader`) they are zero-copy
+``memoryview`` slices of the table file's mapping — the budget then
+bounds *verified mapped* bytes rather than heap copies, and an eviction
+merely drops the view (a later access re-serves the same pages without
+another checksum pass).
+
+Prefetch accounting (paper Fig 10 pipeline): blocks inserted through
+:meth:`prefetch` are tagged until their first ``get``. A tagged block
+served to a reader counts as a *prefetch hit*; a tagged block evicted
+(or cleared) before anyone read it counts as *prefetch waste*. The
+counters surface in ``stats()`` so cold-scan pipelining can prove it
+fetches no block the eager path would not have fetched.
 """
 from __future__ import annotations
 
@@ -35,6 +50,10 @@ class BlockCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._prefetched: set[Hashable] = set()
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
+        self.prefetch_waste = 0
 
     def __len__(self) -> int:
         return len(self._blocks)
@@ -47,6 +66,9 @@ class BlockCache:
             return None
         self._blocks.move_to_end(key)
         self.hits += 1
+        if key in self._prefetched:
+            self._prefetched.discard(key)
+            self.prefetch_hits += 1
         return data
 
     def put(self, key: Hashable, data: bytes) -> None:
@@ -62,9 +84,12 @@ class BlockCache:
         self._blocks[key] = data
         self.cached_bytes += len(data)
         while self.cached_bytes > self.capacity_bytes:
-            _, victim = self._blocks.popitem(last=False)
+            vkey, victim = self._blocks.popitem(last=False)
             self.cached_bytes -= len(victim)
             self.evictions += 1
+            if vkey in self._prefetched:
+                self._prefetched.discard(vkey)
+                self.prefetch_waste += 1
 
     def get_or_load(self, key: Hashable, loader: Callable[[], bytes]) -> bytes:
         """``get`` with a miss-path ``loader()`` whose result is cached."""
@@ -74,9 +99,28 @@ class BlockCache:
             self.put(key, data)
         return data
 
+    def prefetch(self, key: Hashable, loader: Callable[[], bytes]) -> None:
+        """Load ``key`` into the cache ahead of demand (Fig 10 pipeline).
+
+        No-op when the block is already resident (the demand path — or an
+        earlier prefetch — won the race). A prefetched block stays tagged
+        until its first :meth:`get`; see the module docstring for how the
+        hit/waste counters resolve. Prefetch loads do not count as misses:
+        ``misses`` keeps meaning "demand reads that had to touch disk".
+        """
+        if key in self._blocks:
+            return
+        data = loader()
+        self.put(key, data)
+        if key in self._blocks:  # may be budget-rejected (oversized payload)
+            self._prefetched.add(key)
+            self.prefetch_issued += 1
+
     def clear(self) -> None:
         self._blocks.clear()
         self.cached_bytes = 0
+        self.prefetch_waste += len(self._prefetched)
+        self._prefetched.clear()
 
     def stats(self) -> dict:
         return dict(
@@ -86,4 +130,7 @@ class BlockCache:
             entries=len(self._blocks),
             cached_bytes=self.cached_bytes,
             capacity_bytes=self.capacity_bytes,
+            prefetch_issued=self.prefetch_issued,
+            prefetch_hits=self.prefetch_hits,
+            prefetch_waste=self.prefetch_waste,
         )

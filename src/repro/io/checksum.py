@@ -2,8 +2,11 @@
 
 Pure-Python slicing-by-8 over numpy-precomputed tables: no dependency on a
 native crc32c wheel (the container has none), ~8 bytes of input per Python
-loop iteration. Matches the RFC 3720 reference (crc32c(b"123456789") ==
-0xE3069283).
+loop iteration. The hot loop indexes plain Python lists and iterates a
+``tolist()``-ed u64 view of the input — both several times faster than
+numpy scalar indexing, which matters because every cold-read cache miss
+checksums a 64 KB granule. Matches the RFC 3720 reference
+(crc32c(b"123456789") == 0xE3069283).
 """
 from __future__ import annotations
 
@@ -24,7 +27,9 @@ def _make_tables() -> np.ndarray:
 
 
 _T = _make_tables()
-_T0, _T1, _T2, _T3, _T4, _T5, _T6, _T7 = (_T[i] for i in range(8))
+# plain lists: CPython list indexing is ~5x cheaper than numpy scalar
+# indexing, and the loop below does 8 lookups per input word
+_T0, _T1, _T2, _T3, _T4, _T5, _T6, _T7 = (_T[i].tolist() for i in range(8))
 
 
 def crc32c(data: bytes | bytearray | memoryview, crc: int = 0) -> int:
@@ -33,18 +38,19 @@ def crc32c(data: bytes | bytearray | memoryview, crc: int = 0) -> int:
     mv = memoryview(data).cast("B")
     n = len(mv)
     n8 = n & ~7
-    for i in range(0, n8, 8):
-        w = int.from_bytes(mv[i : i + 8], "little") ^ crc
-        crc = int(
-            _T7[w & 0xFF]
-            ^ _T6[(w >> 8) & 0xFF]
-            ^ _T5[(w >> 16) & 0xFF]
-            ^ _T4[(w >> 24) & 0xFF]
-            ^ _T3[(w >> 32) & 0xFF]
-            ^ _T2[(w >> 40) & 0xFF]
-            ^ _T1[(w >> 48) & 0xFF]
-            ^ _T0[(w >> 56) & 0xFF]
-        )
+    if n8:
+        for w in np.frombuffer(mv[:n8], "<u8").tolist():
+            w ^= crc
+            crc = (
+                _T7[w & 0xFF]
+                ^ _T6[(w >> 8) & 0xFF]
+                ^ _T5[(w >> 16) & 0xFF]
+                ^ _T4[(w >> 24) & 0xFF]
+                ^ _T3[(w >> 32) & 0xFF]
+                ^ _T2[(w >> 40) & 0xFF]
+                ^ _T1[(w >> 48) & 0xFF]
+                ^ _T0[(w >> 56) & 0xFF]
+            )
     for i in range(n8, n):
-        crc = int(_T0[(crc ^ mv[i]) & 0xFF]) ^ (crc >> 8)
+        crc = _T0[(crc ^ mv[i]) & 0xFF] ^ (crc >> 8)
     return crc ^ 0xFFFFFFFF

@@ -79,8 +79,16 @@ class CKBReader:
       - :meth:`seek` lower-bounds a query key within a row range by
         binary-searching the restart keys covering the range, then
         walking one restart interval — the point-lookup primitive that
-        replaces full-section decodes on the cold read path.
+        replaces full-section decodes on the cold read path;
+      - :meth:`narrow_batch` is the batched variant of the restart
+        search: restart keys are materialized chunk-wise into a uint64
+        array (vectorized extraction — restart entries are
+        self-contained, so no sequential walk) and a whole query batch
+        is narrowed to one restart interval each with a single
+        ``np.searchsorted``.
     """
+
+    RESTART_CHUNK = 512  # restart keys materialized per span fetch
 
     def __init__(self, length: int, fetch):
         self.length = int(length)
@@ -96,10 +104,14 @@ class CKBReader:
         self.kb = kb
         self.interval = interval
         (self.n_restarts,) = struct.unpack(
-            "<I", fetch(self.length - 4, self.length)
+            "<I", bytes(fetch(self.length - 4, self.length))
         )
         self._entries_end = self.length - 4 - 4 * self.n_restarts
         self._restarts: np.ndarray | None = None
+        # chunk-wise materialized restart keys (only for 8-byte keys):
+        # value + validity, filled by _ensure_restart_chunks
+        self._rk64: np.ndarray | None = None
+        self._rk_valid: np.ndarray | None = None
 
     @classmethod
     def from_bytes(cls, buf: bytes | memoryview) -> "CKBReader":
@@ -151,7 +163,67 @@ class CKBReader:
         offs = self._restart_offsets()
         lo = int(offs[j])
         raw = self._fetch(lo, lo + 2 + self.kb)
-        return raw[2 : 2 + raw[1]]
+        return bytes(raw[2 : 2 + raw[1]])
+
+    def _ensure_restart_chunks(self, chunks) -> None:
+        """Materialize restart keys for the given chunk ids as uint64.
+
+        A chunk's restart entries live contiguously in the entry stream;
+        one span fetch (block-granular, cached) plus a vectorized numpy
+        gather extracts every restart key of the chunk — no per-key
+        Python walk, because restart entries are self-contained
+        (``shared == 0``). Requires ``kb == 8``.
+        """
+        if self._rk64 is None:
+            self._rk64 = np.zeros(self.n_restarts, np.uint64)
+            self._rk_valid = np.zeros(self.n_restarts, bool)
+        offs = self._restart_offsets()
+        c = self.RESTART_CHUNK
+        for ci in chunks:
+            a, b = ci * c, min((ci + 1) * c, self.n_restarts)
+            if a >= b or self._rk_valid[a]:
+                continue
+            lo = int(offs[a])
+            hi = int(offs[b - 1]) + 2 + self.kb
+            raw = np.frombuffer(
+                self._fetch(lo, hi), np.uint8, count=hi - lo
+            )
+            rel = (offs[a:b].astype(np.int64) - lo)[:, None]
+            kb8 = raw[rel + 2 + np.arange(self.kb)]  # (m, 8) big-endian
+            self._rk64[a:b] = kb8.copy().view(">u8").ravel()
+            self._rk_valid[a:b] = True
+
+    def narrow_batch(
+        self, qs: np.ndarray, los: np.ndarray, his: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Narrow each query's row range to one restart interval.
+
+        ``qs`` (Q,) uint64 queries, ``los``/``his`` their per-query row
+        ranges (non-empty, within the run). Returns ``(nlo, nhi)`` such
+        that the lower bound of ``qs[i]`` within ``[los[i], his[i])``
+        provably lies in ``[nlo[i], nhi[i]]`` — with ``nhi[i]`` itself
+        the answer when every key of the narrowed interval is smaller
+        than the query. One vectorized rightmost-restart-``<=`` search
+        replaces Q binary searches; only the restart chunks the batch
+        touches are materialized (and they are memoized across batches).
+        """
+        ii = self.interval
+        ja = los // ii
+        jb = np.minimum((his - 1) // ii, self.n_restarts - 1)
+        c = self.RESTART_CHUNK
+        if int((jb // c - ja // c).max(initial=0)) > 1:
+            chunks = range(int(ja.min()) // c, int(jb.max()) // c + 1)
+        else:
+            chunks = np.unique(np.concatenate([ja // c, jb // c]))
+        self._ensure_restart_chunks(chunks)
+        # global rightmost decoded restart with key <= q, clipped per
+        # query to [ja, jb]: clipping is exact because every restart of
+        # [ja, jb] is decoded and restart keys ascend with j
+        js = np.flatnonzero(self._rk_valid)
+        idx = np.searchsorted(self._rk64[js], qs, side="right") - 1
+        cand = js[np.maximum(idx, 0)]
+        j = np.clip(cand, ja, jb)
+        return np.maximum(los, j * ii), np.minimum(his, (j + 1) * ii)
 
     def seek(self, key: np.ndarray, lo: int = 0, hi: int | None = None) -> int:
         """Lower bound of ``key`` within rows [lo, hi): first row whose key

@@ -5,9 +5,19 @@ writers emit ``<path>.tmp`` and atomically rename, readers only ever see
 complete files. Section reads are lazy and individually checksummed — a
 reader that fetches only the CKB never touches (or validates) value bytes,
 which is what makes incremental REMIX rebuilds cheap (Snippet 1).
+
+Two read modes (``SSTableReader(mode=...)``):
+
+- ``"copy"`` (default): each checksum granule is read into a heap
+  ``bytes`` object, verified, and cached;
+- ``"mmap"``: the file is mapped once; a granule is CRC-verified on first
+  touch and after that served as a zero-copy ``memoryview`` slice of the
+  mapping — the block cache then holds views, not copies, and a contiguous
+  multi-block :meth:`SSTableReader.read_range` costs no join.
 """
 from __future__ import annotations
 
+import mmap
 import os
 import struct
 
@@ -102,9 +112,14 @@ class SSTableReader:
     benchmarks can prove which parts of the file a code path touched.
     """
 
-    def __init__(self, path: str, cache=None):
+    def __init__(self, path: str, cache=None, mode: str = "copy"):
+        if mode not in ("copy", "mmap"):
+            raise ValueError(f"mode must be 'copy' or 'mmap', got {mode!r}")
         self.path = path
+        self.mode = mode
         self._cache = cache
+        self._mm: mmap.mmap | None = None
+        self._verified: set[int] | None = set() if mode == "mmap" else None
         self.bytes_read: dict[str, int] = {s: 0 for s in SECTIONS}
         self.disk_bytes_read = 0
         # cache-key namespace: path alone is not a safe identity (Storage
@@ -138,6 +153,9 @@ class SSTableReader:
             self._data_start = _HEADER.size
             self._data_end = self._offs["ckb"] + self._ckb_len
             self.block_bytes = bb
+        if mode == "mmap":
+            with open(path, "rb") as f:
+                self._mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
 
     @property
     def has_ckb(self) -> bool:
@@ -184,18 +202,61 @@ class SSTableReader:
         self.disk_bytes_read += hi - lo
         return chunk
 
-    def read_block(self, idx: int) -> bytes:
-        """One verified checksum granule of the data region (cached)."""
-        if not 0 <= idx < len(self._crcs):
-            raise IndexError(f"block {idx} out of range [0, {len(self._crcs)})")
+    def _mmap_block(self, idx: int) -> memoryview:
+        """Granule ``idx`` as a zero-copy view of the mapping.
+
+        The CRC is checked (and ``disk_bytes_read`` charged — the page
+        faults happen here) only on the reader's *first* touch of the
+        granule; afterwards the same pages are re-served without another
+        pass, even if the block cache evicted the view in between.
+        """
+        bb = self.block_bytes
+        lo = self._data_start + idx * bb
+        hi = min(lo + bb, self._data_end)
+        view = memoryview(self._mm)[lo:hi]
+        if idx not in self._verified:
+            if crc32c(view) != int(self._crcs[idx]):
+                raise ValueError(f"{self.path}: block {idx} checksum mismatch")
+            self._verified.add(idx)
+            self.disk_bytes_read += hi - lo
+        return view
+
+    def _block_loader(self, idx: int):
+        """Miss-path loader for granule ``idx`` in the current mode."""
+        if self.mode == "mmap":
+            return lambda: self._mmap_block(idx)
 
         def load() -> bytes:
             with open(self.path, "rb") as f:
                 return self._load_block(idx, f)
 
+        return load
+
+    def read_block(self, idx: int) -> bytes:
+        """One verified checksum granule of the data region (cached)."""
+        if not 0 <= idx < len(self._crcs):
+            raise IndexError(f"block {idx} out of range [0, {len(self._crcs)})")
         if self._cache is None:
-            return load()
-        return self._cache.get_or_load((self._cache_key, idx), load)
+            return self._block_loader(idx)()
+        # open-coded get_or_load: the hit path (by far the common case on
+        # batched reads) must not pay a loader-closure allocation
+        data = self._cache.get((self._cache_key, idx))
+        if data is None:
+            data = self._block_loader(idx)()
+            self._cache.put((self._cache_key, idx), data)
+        return data
+
+    def prefetch_block(self, idx: int) -> None:
+        """Pull granule ``idx`` into the shared cache ahead of demand.
+
+        The pipelining primitive behind cold-scan value-block prefetch:
+        a no-op without a cache (nothing would retain the block) or when
+        the block is already resident. Loads issued here are tagged by
+        the cache so ``stats()['cache']`` can report hit/waste counts.
+        """
+        if self._cache is None or not 0 <= idx < len(self._crcs):
+            return
+        self._cache.prefetch((self._cache_key, idx), self._block_loader(idx))
 
     def read_range(self, lo: int, hi: int) -> bytes:
         """Bytes [lo, hi) of the file (data region), block-granular+verified.
@@ -209,6 +270,17 @@ class SSTableReader:
         bb = self.block_bytes
         b0 = (lo - self._data_start) // bb
         b1 = (hi - self._data_start - 1) // bb
+        if self.mode == "mmap":
+            # verify (and cache) covering granules, then hand out one
+            # contiguous zero-copy view — no per-block join even when the
+            # range straddles granule boundaries
+            for bi in range(b0, b1 + 1):
+                if self._cache is None:
+                    self._mmap_block(bi)
+                elif self._cache.get((self._cache_key, bi)) is None:
+                    self._cache.put((self._cache_key, bi),
+                                    self._mmap_block(bi))
+            return memoryview(self._mm)[lo:hi]
         parts = []
         f = None
         try:
@@ -290,17 +362,80 @@ class SSTableReader:
         lo, hi = max(0, lo), min(hi, self.n)
         rb = self.row_bytes(name)
         raw = self.read_section_bytes(name, lo * rb, hi * rb)
+        return self._typed_rows(
+            name, np.frombuffer(raw, np.uint8).reshape(-1, rb)
+        )
+
+    def _typed_rows(self, name: str, out: np.ndarray) -> np.ndarray:
+        """(M, row_bytes) uint8 → the section's typed row array.
+
+        Dtype reinterpretation only — no copy (the result may be a
+        read-only view of a cached block buffer; row readers never
+        mutate in place).
+        """
         if name == "keys":
-            return np.frombuffer(raw, "<u4").astype(np.uint32).reshape(
-                -1, self.kw
-            )
+            return out.view("<u4").reshape(-1, self.kw)
         if name == "vals":
-            return np.frombuffer(raw, "<u4").astype(np.uint32).reshape(
-                -1, self.vw
-            )
+            return out.view("<u4").reshape(-1, self.vw)
         if name == "seq":
-            return np.frombuffer(raw, "<u4").astype(np.uint32)
-        return np.frombuffer(raw, np.uint8).astype(bool)
+            return out.view("<u4").ravel()
+        return out.ravel().astype(bool)
+
+    def section_row_blocks(self, name: str, lo: int, hi: int) -> range:
+        """Granule indices covering rows [lo, hi) of section ``name``.
+
+        The prefetch planning primitive: a cold-scan pipeline maps the
+        next group's row ranges to block ids here and issues
+        :meth:`prefetch_block` for each, without reading anything yet.
+        """
+        lo, hi = max(0, lo), min(hi, self.n)
+        if hi <= lo:
+            return range(0)
+        rb = self.row_bytes(name)
+        slo, _ = self._section_range(name)
+        bb = self.block_bytes
+        b0 = (slo + lo * rb - self._data_start) // bb
+        b1 = (slo + hi * rb - 1 - self._data_start) // bb
+        return range(b0, b1 + 1)
+
+    def section_rows_scattered(self, name: str, rows) -> np.ndarray:
+        """Arbitrary rows of a columnar section, one block fetch per
+        touched granule.
+
+        The batched-read primitive: ``rows`` (M,) int — any order,
+        duplicates allowed — are mapped to checksum granules, the set of
+        distinct granules is fetched exactly once each (through the
+        cache), and the rows are scattered out of the block buffers with
+        a vectorized gather. Returns the typed array in ``rows`` order,
+        like :meth:`section_rows`.
+        """
+        rows = np.asarray(rows, np.int64)
+        rb = self.row_bytes(name)
+        if rows.size == 0:
+            return self._typed_rows(name, np.zeros((0, rb), np.uint8))
+        if rows.min() < 0 or rows.max() >= self.n:
+            raise IndexError(f"rows out of range [0, {self.n})")
+        slo, _ = self._section_range(name)
+        bb = self.block_bytes
+        starts = slo + rows * rb - self._data_start  # data-region offsets
+        b0 = starts // bb
+        b1 = (starts + rb - 1) // bb
+        bufs = {
+            int(bi): np.frombuffer(self.read_block(int(bi)), np.uint8)
+            for bi in np.unique(np.concatenate([b0, b1]))
+        }
+        out = np.empty((len(rows), rb), np.uint8)
+        within = b0 == b1
+        for bi in np.unique(b0[within]):
+            m = within & (b0 == bi)
+            off = starts[m] - int(bi) * bb
+            out[m] = bufs[int(bi)][off[:, None] + np.arange(rb)]
+        for i in np.flatnonzero(~within):  # granule-straddling rows
+            head = bufs[int(b0[i])][int(starts[i] - b0[i] * bb):]
+            out[i, : len(head)] = head
+            out[i, len(head):] = bufs[int(b1[i])][: rb - len(head)]
+        self.bytes_read[name] += len(rows) * rb
+        return self._typed_rows(name, out)
 
     def verify(self) -> None:
         """Validate every block checksum (full-file scrub)."""

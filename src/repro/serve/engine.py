@@ -18,6 +18,7 @@ view instead of rebuilding it".
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 
 import numpy as np
@@ -26,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.db.sharded import route_host
 from repro.models import model as M
 from repro.models.kvcache import PrefixCache
 
@@ -153,19 +155,24 @@ class KVServeEngine:
             self.shards.append(db)
 
     def _route(self, key: int) -> "object":
-        import bisect
-
         return self.shards[max(0, bisect.bisect_right(self.lows, key) - 1)]
 
     def get(self, key: int):
-        return self._route(int(key)).get(int(key))
+        """Point lookup, routed through the batched path: a scalar get is
+        a batch of one, so cold shards answer it with the same vectorized
+        ``cold_get_batch`` machinery (and the same block accounting) as a
+        256-key batch."""
+        found, vals = self.get_batch(np.array([int(key)], np.uint64))
+        return vals[0] if bool(found[0]) else None
 
     def get_batch(self, keys):
+        """Batched point lookups: one vectorized ``RemixDB.get_batch``
+        call per touched shard — a sharded batch costs O(shards) batched
+        calls, never O(keys) scalar gets."""
         keys = np.asarray(keys, np.uint64)
         found = np.zeros(len(keys), bool)
         vals = np.zeros((len(keys), self.shards[0].cfg.vw), np.uint32)
-        lows = np.asarray(self.lows, np.uint64)
-        sid = np.maximum(np.searchsorted(lows, keys, side="right") - 1, 0)
+        sid = route_host(self.lows, keys)
         for s in np.unique(sid):
             m = sid == s
             f, v = self.shards[s].get_batch(keys[m])
@@ -175,8 +182,6 @@ class KVServeEngine:
 
     def scan(self, start_key: int, n: int):
         """Cross-shard range scan: drain shards in key order until full."""
-        import bisect
-
         out_k: list[np.ndarray] = []
         out_v: list[np.ndarray] = []
         got = 0

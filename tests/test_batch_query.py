@@ -1,0 +1,371 @@
+"""Batched query engine tests: batched-vs-scalar equivalence (gets,
+scans, tombstone-heavy and cross-partition batches), prefetch-pipeline
+parity, mmap cache mode, batched CKB narrowing, and the WAL sync_policy
+knob."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import keys as CK
+from repro.core.remix import build_remix
+from repro.core.runs import (
+    RowWindow,
+    make_run,
+    merge_ranges,
+    ranges_to_rows,
+)
+from repro.db.store import RemixDB, RemixDBConfig
+from repro.db.wal import WAL
+from repro.io.ckb import CKBReader, encode_ckb
+from repro.io.manifest import Storage
+
+D = 16
+NEVER_PROMOTE = 1e9
+
+
+def _build_store(root, n_tables=4, n_per_table=1500, tomb_every=3, seed=0,
+                 partitions=1):
+    """A committed on-disk store with tombstones; returns (domain, dead).
+
+    ``partitions`` > 1 splits the key domain into equal ranges, each with
+    its own table set + REMIX, to exercise cross-partition batches.
+    """
+    rng = np.random.default_rng(seed)
+    total = n_tables * n_per_table
+    domain = np.arange(1, total + 1, dtype=np.uint64) * 16
+    owner = rng.integers(0, n_tables, total)
+    dead = np.zeros(total, bool)
+    dead[::tomb_every] = True  # tombstone-heavy: every 3rd key deleted
+    storage = Storage(root)
+    parts = []
+    bounds = np.linspace(0, total, partitions + 1).astype(int)
+    for pi in range(partitions):
+        sl = slice(bounds[pi], bounds[pi + 1])
+        pk, po, pd = domain[sl], owner[sl], dead[sl]
+        names, runs, seqbase = [], [], 1
+        for i in range(n_tables):
+            m = po == i
+            kk = pk[m]
+            run = make_run(
+                kk,
+                seq=np.arange(seqbase, seqbase + len(kk), dtype=np.uint32),
+                tomb=pd[m],
+            )
+            seqbase += len(kk)
+            runs.append(run)
+            names.append(
+                storage.write_table(
+                    np.asarray(run.keys), np.asarray(run.vals),
+                    np.asarray(run.seq), np.asarray(run.tomb),
+                )
+            )
+        remix, _ = build_remix(runs, d=D)
+        parts.append(
+            dict(lo=0 if pi == 0 else int(pk[0]), tables=names,
+                 remix=storage.write_remix(remix))
+        )
+    wal = WAL(storage.wal_path())
+    storage.commit(
+        dict(seq=10 * total, vw=2, d=D, partitions=parts,
+             wal=wal.save_state())
+    )
+    return domain, dead
+
+
+def _probes(domain, rng, q):
+    """Hits, misses and off-by-one keys mixed into one batch."""
+    hits = rng.choice(domain, q // 2, replace=False).astype(np.uint64)
+    miss = rng.choice(domain, q - q // 2, replace=False).astype(np.uint64) + 1
+    out = np.concatenate([hits, miss])
+    rng.shuffle(out)
+    return out
+
+
+def _cfg(**kw):
+    kw.setdefault("promote_fraction", NEVER_PROMOTE)
+    return RemixDBConfig(**kw)
+
+
+# ---------------------------------------------------------------- gets
+@pytest.mark.parametrize("cache_mode", ["copy", "mmap"])
+def test_cold_get_batch_matches_scalar_and_device(tmp_path, cache_mode):
+    root = str(tmp_path / "db")
+    domain, dead = _build_store(root)
+    rng = np.random.default_rng(1)
+    probe = _probes(domain, rng, 128)
+
+    db_b = RemixDB.open(root, _cfg(cache_mode=cache_mode))
+    db_s = RemixDB.open(root, _cfg())
+    assert all(p.cold_ready() for p in db_b.partitions)
+    f_b, v_b = db_b.get_batch(probe)
+    f_s = np.zeros(len(probe), bool)
+    v_s = np.zeros((len(probe), 2), np.uint32)
+    for i, k in enumerate(probe.tolist()):
+        got, val = db_s.partitions[0].cold_get(k)
+        f_s[i] = got
+        if got:
+            v_s[i] = val
+    np.testing.assert_array_equal(f_b, f_s)
+    np.testing.assert_array_equal(v_b[f_b], v_s[f_s])
+    # promoted device path agrees bit-for-bit
+    db_d = RemixDB.open(root, _cfg(cold_reads=False))
+    f_d, v_d = db_d.get_batch(probe)
+    np.testing.assert_array_equal(f_b, f_d)
+    np.testing.assert_array_equal(v_b[f_b], v_d[f_d])
+    # tombstoned keys really came back not-found
+    key_dead = dict(zip(domain.tolist(), dead.tolist()))
+    for i, k in enumerate(probe.tolist()):
+        if k in key_dead:
+            assert bool(f_b[i]) == (not key_dead[k])
+
+
+def test_cold_get_batch_coalesces_block_fetches(tmp_path):
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root)
+    db = RemixDB.open(root, _cfg())
+    rng = np.random.default_rng(2)
+    db.get_batch(_probes(domain, rng, 128))
+    c = db.stats()["cache"]
+    # every distinct granule the batch touched was loaded exactly once
+    assert c["evictions"] == 0
+    assert c["misses"] == c["entries"]
+
+
+def test_cross_partition_batches(tmp_path):
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root, partitions=3)
+    rng = np.random.default_rng(3)
+    probe = _probes(domain, rng, 96)
+    db = RemixDB.open(root, _cfg())
+    assert len(db.partitions) == 3
+    assert all(p.cold_ready() for p in db.partitions)
+    f_b, v_b = db.get_batch(probe)
+    db_s = RemixDB.open(root, _cfg())
+    for i, k in enumerate(probe.tolist()):
+        v = db_s.get(k)
+        assert bool(f_b[i]) == (v is not None)
+        if v is not None:
+            np.testing.assert_array_equal(v_b[i], v)
+    # batched scans crossing the partition boundaries
+    starts = np.array(
+        [domain[0], domain[len(domain) // 3 - 2], domain[-40]], np.uint64
+    )
+    kk, mm = db.scan_batch(starts, 30)
+    for row, s in enumerate(starts):
+        ref, _ = db_s.scan(int(s), 30)
+        np.testing.assert_array_equal(kk[row][mm[row]], ref)
+
+
+# ---------------------------------------------------------------- scans
+@pytest.mark.parametrize("width", [7, 40, 200])
+def test_cold_scan_batch_matches_scalar(tmp_path, width):
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root)
+    rng = np.random.default_rng(4)
+    starts = np.concatenate(
+        [rng.choice(domain, 24).astype(np.uint64),
+         [domain[0] - 1, domain[-1], domain[-1] + 5]]
+    )
+    db_b = RemixDB.open(root, _cfg())
+    db_s = RemixDB.open(root, _cfg())
+    outs = db_b.partitions[0].cold_scan_batch(starts, width)
+    for s, (kk, vv, more) in zip(starts.tolist(), outs):
+        k_ref, v_ref, m_ref = db_s.partitions[0].cold_scan(s, width)
+        np.testing.assert_array_equal(kk, k_ref)
+        np.testing.assert_array_equal(vv, v_ref)
+        assert more == m_ref
+
+
+def test_prefetch_scan_parity_and_counters(tmp_path):
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root, n_per_table=4000)
+    rng = np.random.default_rng(5)
+    starts = rng.choice(domain, 8).astype(np.uint64)
+    db_e = RemixDB.open(root, _cfg(prefetch_depth=0))
+    db_p = RemixDB.open(root, _cfg(prefetch_depth=2))
+    for s in starts.tolist():
+        ke, ve = db_e.scan(s, 60)
+        kp, vp = db_p.scan(s, 60)
+        np.testing.assert_array_equal(ke, kp)
+        np.testing.assert_array_equal(ve, vp)
+    # the pipeline read no block the eager path did not
+    assert db_p.disk_bytes_read() <= db_e.disk_bytes_read()
+    c = db_p.stats()["cache"]
+    assert c["prefetch_issued"] > 0
+    assert c["prefetch_hits"] + c["prefetch_waste"] <= c["prefetch_issued"]
+    assert c["prefetch_hits"] > 0
+
+
+def test_scan_batch_equals_sequential_after_promotion(tmp_path):
+    """Promotion mid-life must not change batched results."""
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root)
+    starts = np.array([domain[10], domain[500], domain[-30]], np.uint64)
+    cold_k, cold_m = RemixDB.open(root, _cfg()).scan_batch(starts, 20)
+    dev = RemixDB.open(root, _cfg(cold_reads=False))
+    dev_k, dev_m = dev.scan_batch(starts, 20)
+    np.testing.assert_array_equal(cold_k[cold_m], dev_k[dev_m])
+    np.testing.assert_array_equal(cold_m, dev_m)
+
+
+# ------------------------------------------------- batched CKB narrowing
+def test_ckb_narrow_batch_brackets_lower_bound():
+    rng = np.random.default_rng(6)
+    u = np.sort(rng.choice(1 << 40, 5000, replace=False).astype(np.uint64))
+    rd = CKBReader.from_bytes(encode_ckb(CK.pack_u64(u)))
+    qs = np.concatenate([u[::13], u[::17] + 1, [0, u[-1] + 9]]).astype(
+        np.uint64
+    )
+    los = np.zeros(len(qs), np.int64)
+    his = np.full(len(qs), rd.n, np.int64)
+    nlo, nhi = rd.narrow_batch(qs, los, his)
+    assert np.all(nlo >= los) and np.all(nhi <= his)
+    assert np.all(nhi - nlo <= rd.interval)
+    for q, a, b in zip(qs.tolist(), nlo.tolist(), nhi.tolist()):
+        want = int(np.searchsorted(u, q, side="left"))
+        assert a <= want <= b  # nhi itself is the answer when all < q
+
+
+def test_seek_rows_batch_matches_scalar_seek(tmp_path):
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root, n_tables=2, n_per_table=3000)
+    db = RemixDB.open(root, _cfg())
+    t = db.partitions[0].tables[0]
+    u = CK.unpack_u64(t.key_words())
+    rng = np.random.default_rng(7)
+    qs = np.concatenate(
+        [rng.choice(u, 40).astype(np.uint64), rng.choice(u, 40) + 1,
+         [0, u[-1] + 3]]
+    ).astype(np.uint64)
+    los = rng.integers(0, t.n // 2, len(qs)).astype(np.int64)
+    his = los + rng.integers(1, 3 * D, len(qs)).astype(np.int64)
+    got = t.seek_rows_batch(qs, los, his)
+    for i, q in enumerate(qs.tolist()):
+        qw = CK.pack_u64(np.array([q], np.uint64))[0]
+        assert got[i] == t.seek_row(qw, int(los[i]), int(his[i]))
+
+
+# ------------------------------------------------------- range utilities
+def test_merge_ranges_and_ranges_to_rows():
+    assert merge_ranges([(5, 9), (0, 3), (8, 12), (20, 20)]) == [
+        (0, 3), (5, 12),
+    ]
+    assert merge_ranges([(0, 3), (4, 6)], gap=1) == [(0, 6)]
+    rows = ranges_to_rows(np.array([0, 5]), np.array([3, 7]))
+    np.testing.assert_array_equal(rows, [0, 1, 2, 5, 6])
+    assert len(ranges_to_rows(np.zeros(0), np.zeros(0))) == 0
+
+
+def test_row_window_gather():
+    calls = []
+
+    def fetch(section, rows):
+        calls.append(section)
+        if section == "keys":
+            return CK.pack_u64(rows.astype(np.uint64) * 10)
+        if section == "vals":
+            return np.stack([rows, rows], axis=1).astype(np.uint32)
+        return rows % 2 == 0
+
+    w = RowWindow.from_scattered([(2, 5), (4, 8), (30, 31)], fetch)
+    assert calls == ["keys", "vals", "tomb"]  # one fetch per section
+    kk, vv, tb = w.gather(np.array([3, 30, 7]))
+    np.testing.assert_array_equal(kk, [30, 300, 70])
+    np.testing.assert_array_equal(vv[:, 0], [3, 30, 7])
+    np.testing.assert_array_equal(tb, [False, True, False])
+
+
+# ----------------------------------------------------------- sync_policy
+def test_wal_sync_policy_knob(tmp_path):
+    n = 400  # > 2 full blocks (170 records fit one 4 KB block at vw=2)
+    for pol, min_blocks in (("none", 2), ("block", 2), ("always", n)):
+        w = WAL(str(tmp_path / f"{pol}.log"), sync_policy=pol)
+        for i in range(n):
+            w.append(i, i + 1, False, np.zeros(2, np.uint32))
+        assert w.used_blocks() >= min_blocks
+        # replay sees every record regardless of policy
+        assert len(list(w.replay())) == n
+    with pytest.raises(ValueError):
+        WAL(str(tmp_path / "bad.log"), sync_policy="sometimes")
+
+
+def test_store_sync_policy_always_is_durable_without_close(tmp_path):
+    root = str(tmp_path / "db")
+    db = RemixDB.open(root, RemixDBConfig(sync_policy="always"))
+    db.put(7, [1, 2])
+    db.put(9, [3, 4])
+    # no close(), no sync(): reopen must still replay both puts
+    db2 = RemixDB.open(root, RemixDBConfig())
+    np.testing.assert_array_equal(db2.get(7), [1, 2])
+    np.testing.assert_array_equal(db2.get(9), [3, 4])
+
+
+def test_store_rejects_bad_knobs(tmp_path):
+    with pytest.raises(ValueError):
+        RemixDB(RemixDBConfig(cache_mode="zero-copy"))
+    with pytest.raises(ValueError):
+        RemixDB(RemixDBConfig(prefetch_depth=-1))
+    with pytest.raises(ValueError):
+        RemixDB.open(str(tmp_path / "db"), RemixDBConfig(sync_policy="x"))
+
+
+# -------------------------------------------------- serving front routing
+def test_serve_engine_get_routes_through_batch(tmp_path):
+    from repro.serve.engine import KVServeEngine
+
+    roots = []
+    for i, lo in enumerate([0, 1 << 20]):
+        root = str(tmp_path / f"s{i}")
+        db = RemixDB.open(root, RemixDBConfig())
+        base = lo + 100
+        for k in range(base, base + 50):
+            db.put(k, [k & 0xFFFF, 1])
+        db.flush()
+        db.close()
+        roots.append((lo, root))
+    eng = KVServeEngine(roots, config=_cfg())
+    np.testing.assert_array_equal(eng.get(105), [105 & 0xFFFF, 1])
+    assert eng.get(55) is None
+    keys = np.array([105, (1 << 20) + 120, 55], np.uint64)
+    found, vals = eng.get_batch(keys)
+    np.testing.assert_array_equal(found, [True, True, False])
+    np.testing.assert_array_equal(vals[1], [((1 << 20) + 120) & 0xFFFF, 1])
+    # one shared cache across shards sees the traffic
+    assert eng.stats()["cache"]["hits"] + eng.stats()["cache"]["misses"] > 0
+
+
+# ------------------------------------------------------ property testing
+def test_batched_equals_scalar_property(tmp_path):
+    """Hypothesis sweep: random batches against the scalar cold path."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    root = str(tmp_path / "db")
+    domain, _ = _build_store(root, n_tables=3, n_per_table=600)
+    db_b = RemixDB.open(root, _cfg())
+    db_s = RemixDB.open(root, _cfg())
+    p_b, p_s = db_b.partitions[0], db_s.partitions[0]
+    hi = int(domain[-1]) + 32
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        keys=st.lists(st.integers(0, hi), min_size=1, max_size=40),
+        width=st.integers(1, 64),
+    )
+    def check(keys, width):
+        ks = np.array(keys, np.uint64)
+        f_b, v_b = p_b.cold_get_batch(ks)
+        for i, k in enumerate(keys):
+            got, val = p_s.cold_get(k)
+            assert bool(f_b[i]) == got
+            if got:
+                np.testing.assert_array_equal(v_b[i], val)
+        outs = p_b.cold_scan_batch(ks[:4], width)
+        for s, (kk, vv, more) in zip(ks[:4].tolist(), outs):
+            k_ref, v_ref, m_ref = p_s.cold_scan(s, width)
+            np.testing.assert_array_equal(kk, k_ref)
+            np.testing.assert_array_equal(vv, v_ref)
+            assert more == m_ref
+
+    check()
