@@ -21,6 +21,7 @@ def main() -> None:
     from benchmarks import (
         batch_bench,
         cache_bench,
+        cursor_bench,
         fig11_queries,
         fig13_groupsize,
         fig14_16_stores,
@@ -42,6 +43,8 @@ def main() -> None:
         "cache": cache_bench.run,
         # also emits results/BENCH_queries.json (the perf trajectory file)
         "batch": batch_bench.run,
+        # streaming cursor vs re-seeking scans (results/BENCH_cursor.json)
+        "cursor": cursor_bench.run,
     }
     if args.only:
         names = args.only.split(",")

@@ -5,6 +5,10 @@ paper becomes an integer *view position*: because the sorted view is
 persisted, any position can be decoded to (run, in-run index) with the
 group's cursor offsets + selector occurrence counts, so `next` is position+1
 — comparison-free, exactly the paper's claim, and gather-friendly on TPU.
+This is what makes :class:`repro.db.cursor.RemixCursor` cheap: `seek` runs
+once, the position is plain host state, and every later window is a pure
+:func:`gather_view` decode (`peek`/`next`/`skip` are position arithmetic —
+no key comparison ever re-runs).
 
 Two in-group search modes (paper §3.2 / Fig 11 "full" vs "partial"):
   - ``vector``: decode all D slots, compare in parallel (VPU-native; on TPU
@@ -155,7 +159,13 @@ def scan(
 
 @partial(jax.jit, static_argnames=("width",))
 def gather_view(remix: Remix, runset: RunSet, pos: jnp.ndarray, width: int):
-    """Decode ``width`` view slots starting at each ``pos`` (comparison-free)."""
+    """Decode ``width`` view slots starting at each ``pos`` (comparison-free).
+
+    The cursor window primitive: ``pos`` may come from :func:`seek` *or*
+    from a previous window's ``pos + width`` — positions are stable host
+    integers, so streaming readers (``db.cursor()``) chain windows
+    without ever re-seeking. Slots past ``n_slots`` (or in padded
+    groups) simply decode as invalid."""
     d = remix.d
     q = pos.shape[0]
     ng = (width + d - 1) // d + 1

@@ -191,22 +191,27 @@ class RowWindow:
     tomb: np.ndarray  # (M,) bool
 
     @classmethod
+    def empty(cls, vw: int = 1) -> "RowWindow":
+        """A window covering no rows (``gather`` must not be called)."""
+        return cls(
+            rows=np.zeros(0, np.int64),
+            keys=np.zeros(0, np.uint64),
+            vals=np.zeros((0, vw), np.uint32),
+            tomb=np.zeros(0, bool),
+        )
+
+    @classmethod
     def from_ranges(cls, ranges, fetch_rows, gap: int = 0) -> "RowWindow":
         """``fetch_rows(section, lo, hi)`` pulls rows of one section."""
         merged = merge_ranges(ranges, gap=gap)
+        if not merged:
+            return cls.empty()
         rows, keys, vals, tomb = [], [], [], []
         for lo, hi in merged:
             rows.append(np.arange(lo, hi, dtype=np.int64))
             keys.append(K.unpack_u64(fetch_rows("keys", lo, hi)))
             vals.append(fetch_rows("vals", lo, hi))
             tomb.append(fetch_rows("tomb", lo, hi))
-        if not rows:
-            return cls(
-                rows=np.zeros(0, np.int64),
-                keys=np.zeros(0, np.uint64),
-                vals=np.zeros((0, 1), np.uint32),
-                tomb=np.zeros(0, bool),
-            )
         return cls(
             rows=np.concatenate(rows),
             keys=np.concatenate(keys),
@@ -225,7 +230,7 @@ class RowWindow:
         per merged range."""
         merged = merge_ranges(ranges, gap=gap)
         if not merged:
-            return cls.from_ranges([], None)
+            return cls.empty()
         arr = np.asarray(merged, np.int64)
         rows = ranges_to_rows(arr[:, 0], arr[:, 1])
         return cls(

@@ -4,8 +4,12 @@
   - wal:        4 KB-block write-ahead log with virtual logs + GC (§4.3)
   - partition:  key-range partition = table files + one REMIX
   - compaction: abort / minor / major / split procedures (§4.2)
+  - version:    immutable refcounted Versions + pinned Snapshots (MVCC)
+  - cursor:     RemixCursor — §3.2 seek/peek/next/skip over a snapshot
   - store:      the RemixDB public API
   - sstable:    baseline SSTable metadata (block index + bloom filters)
   - baseline:   LevelDB-like leveled / tiered comparison stores
 """
+from repro.db.cursor import RemixCursor  # noqa: F401
 from repro.db.store import RemixDB, RemixDBConfig  # noqa: F401
+from repro.db.version import Snapshot, Version, VersionSet  # noqa: F401

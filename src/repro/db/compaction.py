@@ -83,6 +83,10 @@ def apply_abort_budget(plans: list[Plan], cfg: CompactionConfig) -> None:
 @dataclasses.dataclass
 class ExecResult:
     bytes_written: int = 0
+    # copy-on-write output: the partition(s) replacing the input in the
+    # *next* Version. None only for noop/abort (input partition reused
+    # as-is). The input partition is never mutated — readers pinning the
+    # old Version keep a stable view.
     new_partitions: list[Partition] | None = None
     carried: Table | None = None  # aborted new data (stays in MemTable/WAL)
 
@@ -108,19 +112,18 @@ def execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
     if plan.kind == "abort":
         return ExecResult(carried=plan.new)
     if plan.kind == "minor":
-        written = 0
         outs = chunk_table(plan.new, cfg.table_cap)
         _persist_tables(outs, storage)
-        for t in outs:
-            p.tables.append(t)
-            written += t.bytes()
-        p.invalidate()
-        # rebuild REMIX now (incrementally: tables were only appended);
-        # its size counts toward WA
-        p.index()
+        written = sum(t.bytes() for t in outs)
+        # tables were only appended: the clone inherits the built REMIX
+        # so index() rebuilds incrementally; its size counts toward WA
+        p2 = p.clone_with_tables(list(p.tables) + outs, carry_built=True)
+        p2.index()
         if storage is not None:
-            p.persist_index(storage)
-        return ExecResult(bytes_written=written + p.remix_bytes)
+            p2.persist_index(storage)
+        return ExecResult(
+            bytes_written=written + p2.remix_bytes, new_partitions=[p2]
+        )
     if plan.kind == "major":
         order = np.argsort([t.n for t in p.tables])
         chosen = [p.tables[i] for i in order[: plan.major_inputs]]
@@ -128,13 +131,14 @@ def execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
         merged = merge_tables(chosen + [plan.new])
         outs = chunk_table(merged, cfg.table_cap)
         _persist_tables(outs, storage)
-        p.tables = keep + outs
-        p.invalidate()
-        p.index()
+        p2 = p.clone_with_tables(keep + outs)  # table set changed: scratch
+        p2.index()
         if storage is not None:
-            p.persist_index(storage)
+            p2.persist_index(storage)
         written = sum(t.bytes() for t in outs)
-        return ExecResult(bytes_written=written + p.remix_bytes)
+        return ExecResult(
+            bytes_written=written + p2.remix_bytes, new_partitions=[p2]
+        )
     if plan.kind == "split":
         # full merge (tombstones can be dropped: whole partition rewritten)
         merged = merge_tables(p.tables + [plan.new], drop_tombs=True)

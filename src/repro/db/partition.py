@@ -1,9 +1,16 @@
 """Key-range partitions: table files + one REMIX per partition (paper §4).
 
-Tables are host numpy arrays (the "files"); the partition lazily builds its
-REMIX + stacked RunSet (jnp, device-resident) when first queried after a
-change — compaction invalidates the cache, mirroring the paper's "new
-version of the partition includes ... a new REMIX file".
+Tables are host numpy arrays (the "files") or lazy on-disk handles; the
+partition lazily builds its REMIX + stacked RunSet (jnp, device-resident)
+when first queried. Partitions are *logically immutable* once published
+in a :class:`repro.db.version.Version`: compaction never mutates a live
+partition's table list — it derives a successor via
+:meth:`Partition.clone_with_tables` (sharing unchanged table handles and
+the built REMIX as the incremental-rebuild base), mirroring the paper's
+"new version of the partition includes ... a new REMIX file" with the old
+version still servable by pinned readers. The query caches (``index()``,
+host view) are benign fills shared across versions — they never change
+query results, only where they are answered from.
 """
 from __future__ import annotations
 
@@ -147,6 +154,10 @@ class Table:
     def rows(self, section: str, lo: int, hi: int) -> np.ndarray:
         """Rows [lo, hi) of one columnar section via partial block reads."""
         return self._rd().section_rows(section, lo, hi)
+
+    def rows_resident(self, section: str, lo: int, hi: int) -> bool:
+        """Side-effect-free probe: rows [lo, hi) servable without I/O."""
+        return self._rd().section_rows_resident(section, lo, hi)
 
     def ckb(self):
         """Restart-point CKB reader over cached block reads (or None)."""
@@ -340,6 +351,10 @@ class Partition:
         self._host: dict | None = None
         self.cold_gets = 0
         self.cold_scans = 0
+        # workload statistics for the promotion decision: logical row
+        # bytes served by cold reads (counted on cache hits too, unlike
+        # the physical ``cold_disk_bytes``)
+        self.cold_served_rows = 0
 
     def __repr__(self) -> str:
         # introspection must not force-load lazy table handles
@@ -349,11 +364,26 @@ class Partition:
             f"built={self.last_build_kind})"
         )
 
-    def invalidate(self):
-        """Drop the padded query cache; the last built REMIX is kept as the
-        base for an incremental rebuild."""
-        self._remix = None
-        self._runset = None
+    def clone_with_tables(self, tables: list[Table],
+                          carry_built: bool = False) -> "Partition":
+        """Copy-on-write successor over a new table list.
+
+        The compaction primitive of the Version architecture: the clone
+        shares unchanged :class:`Table` handles (and with ``carry_built``
+        the last built REMIX, so a minor compaction that only appended
+        tables rebuilds incrementally) while this partition — possibly
+        still pinned by older Versions — keeps serving its exact old
+        view. Cold-read workload counters carry over so promotion
+        decisions survive the version edge.
+        """
+        p2 = Partition(lo=self.lo, tables=list(tables), d=self.d)
+        if carry_built:
+            p2._built_remix = self._built_remix
+            p2._built_tables = list(self._built_tables)
+        p2.cold_gets = self.cold_gets
+        p2.cold_scans = self.cold_scans
+        p2.cold_served_rows = self.cold_served_rows
+        return p2
 
     def preload_index(self, remix: Remix):
         """Adopt a deserialized REMIX for the current table list (recovery
@@ -384,11 +414,46 @@ class Partition:
             if t._reader is not None
         )
 
-    def should_promote(self, fraction: float = 0.5) -> bool:
-        """Once cold reads have fetched a sizable fraction of the data
-        region, building the device-resident RunSet pays for itself."""
+    def _row_bytes(self) -> int:
+        """Logical bytes per served row (matches ``Table.bytes()``)."""
+        vw = self.tables[0].vw if self.tables else 2
+        return 8 + 4 * vw + 5
+
+    def promotion_inputs(self, fraction: float = 0.5) -> dict:
+        """Observed-workload inputs of the promotion decision.
+
+        Two counters, both compared against the same ``fraction`` of the
+        partition's data bytes:
+
+        - ``disk_bytes`` — physical bytes cold reads pulled (cache hits
+          excluded): the original pay-as-you-go signal.
+        - ``served_bytes`` — logical row bytes cold queries *touched*,
+          hits included. Once the block cache absorbs a hot partition's
+          working set the disk counter stalls, so a byte-fraction rule
+          alone would never promote it no matter how much traffic it
+          serves; the served counter keeps observing the workload.
+        """
         total = sum(t._rd().data_bytes() for t in self.tables)  # header-only
-        return self.cold_disk_bytes() >= fraction * max(1, total)
+        disk = self.cold_disk_bytes()
+        served = self.cold_served_rows * self._row_bytes()
+        threshold = int(fraction * max(1, total))
+        return dict(
+            lo=self.lo,
+            data_bytes=int(total),
+            disk_bytes=int(disk),
+            served_bytes=int(served),
+            cold_gets=int(self.cold_gets),
+            cold_scans=int(self.cold_scans),
+            threshold_bytes=threshold,
+            promote=bool(disk >= threshold or served >= threshold),
+        )
+
+    def should_promote(self, fraction: float = 0.5) -> bool:
+        """Build the device RunSet once the observed cold workload — the
+        physical bytes it pulled *or* the logical bytes it served out of
+        the cache — reaches ``fraction`` of the data region (see
+        :meth:`promotion_inputs` for the two counters)."""
+        return self.promotion_inputs(fraction)["promote"]
 
     def _host_index(self) -> dict:
         """Host numpy view of the built REMIX (anchors as u64 for search)."""
@@ -453,18 +518,9 @@ class Partition:
         live = ~dead
         return kk[live], vv[live]
 
-    def _walk_window(self, hx: dict, g: int, cur, nextrow, width: int):
-        """Vectorized selector walk over one query's view window.
-
-        Replaces the slot-by-slot Python loop: the whole window's
-        selectors are classified at once and each run's occurrences get
-        consecutive rows via one cumulative count per run. Mutates
-        ``nextrow`` to the post-window per-run row pointers (exactly as
-        the sequential walk would). Returns ``(pos, stop, valid, win,
-        rows_abs, newest)``: window slot bounds, the per-slot
-        non-placeholder mask, raw selector values, absolute rows
-        assigned per slot, and the newest-version emission mask.
-        """
+    def _seek_slot(self, hx: dict, g: int, cur, nextrow) -> int:
+        """View position implied by the per-run seek results of group
+        ``g`` (with the device-parity placeholder hop)."""
         d, sels, n_slots = hx["d"], hx["selectors"], hx["n_slots"]
         pos = g * d + int(np.sum(nextrow - cur))
         # device-seek parity (_ingroup_vector): landing on a trailing
@@ -473,7 +529,24 @@ class Partition:
         # not waste budget on the placeholder tail.
         if pos < min(n_slots, (g + 1) * d) and int(sels[pos]) == PLACEHOLDER:
             pos = (g + 1) * d
-        pos = min(pos, n_slots)
+        return min(pos, n_slots)
+
+    def _walk_from(self, hx: dict, pos: int, nextrow, width: int):
+        """Vectorized selector walk of ``width`` view slots from ``pos``.
+
+        Replaces the slot-by-slot Python loop: the whole window's
+        selectors are classified at once and each run's occurrences get
+        consecutive rows via one cumulative count per run. Requires
+        ``nextrow`` to hold each run's next absolute row at ``pos`` —
+        which is exactly what a seek produces and what this walk leaves
+        behind, so windows chain without re-seeking (the cursor's
+        comparison-free ``next``, §3.3). Mutates ``nextrow`` to the
+        post-window pointers. Returns ``(pos, stop, valid, win,
+        rows_abs, newest)``: window slot bounds, the per-slot
+        non-placeholder mask, raw selector values, absolute rows
+        assigned per slot, and the newest-version emission mask.
+        """
+        sels, n_slots = hx["selectors"], hx["n_slots"]
         stop = min(n_slots, pos + width)
         win = sels[pos:stop].astype(np.int64)
         valid = win != PLACEHOLDER
@@ -487,6 +560,11 @@ class Partition:
         newest = valid & ((win & NEWEST_BIT) != 0)
         return pos, stop, valid, win, rows_abs, newest
 
+    def _walk_window(self, hx: dict, g: int, cur, nextrow, width: int):
+        """Seek-position + selector walk in one step (scan entry point)."""
+        pos = self._seek_slot(hx, g, cur, nextrow)
+        return self._walk_from(hx, pos, nextrow, width)
+
     def cold_get(self, key: int) -> tuple[bool, np.ndarray | None]:
         """Point lookup from the on-disk REMIX without loading any table.
 
@@ -498,6 +576,7 @@ class Partition:
         block-granular I/O). Returns (found, value row)."""
         hx = self._host_index()
         self.cold_gets += 1
+        self.cold_served_rows += 1
         d, sels = hx["d"], hx["selectors"]
         g = max(
             int(np.searchsorted(hx["anch64"], np.uint64(key), side="right"))
@@ -547,6 +626,7 @@ class Partition:
             return found, vals
         hx = self._host_index()
         self.cold_gets += q
+        self.cold_served_rows += q
         d, sels, n_slots = hx["d"], hx["selectors"], hx["n_slots"]
         nrun = len(self.tables)
         g, cur, nxt = self._group_bounds_batch(hx, keys)
@@ -602,33 +682,10 @@ class Partition:
         ascending order, M ≤ width, and whether view slots remain beyond
         the window (so an all-invalid window is distinguishable from an
         exhausted partition)."""
-        hx = self._host_index()
-        self.cold_scans += 1
-        g = max(
-            int(np.searchsorted(hx["anch64"], np.uint64(start), side="right"))
-            - 1,
-            0,
+        state = self.cold_cursor_seek(start)
+        return self.cold_cursor_window(
+            state, width, prefetch_depth=prefetch_depth
         )
-        cur, nxt = self._group_rows(hx, g)
-        qw = CK.pack_u64(np.array([start], np.uint64))[0]
-        nextrow = np.array(
-            [
-                t.seek_row(qw, int(cur[r]), int(nxt[r]))
-                for r, t in enumerate(self.tables)
-            ],
-            np.int64,
-        )
-        pos, stop, valid, win, rows_abs, newest = self._walk_window(
-            hx, g, cur, nextrow, width
-        )
-        vw = self.tables[0].vw if self.tables else 2
-        more = stop < hx["n_slots"]
-        if not bool(newest.any()):
-            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), more
-        kk, vv = self._emit_window(
-            pos, stop, win, rows_abs, newest, prefetch_depth, vw, hx["d"]
-        )
-        return kk, vv, more
 
     def _emit_window(
         self, pos, stop, win, rows_abs, newest, depth, vw, d
@@ -643,13 +700,16 @@ class Partition:
         """
         runsel = win & 0x7F
         slots = np.arange(pos, stop)
-        if depth > 0:
+        if depth > 0 and not self._window_resident(runsel, rows_abs, newest):
             bounds = (
                 [pos]
                 + list(range((pos // d + 1) * d, stop, d))
                 + [stop]
             )
         else:
+            # eager path — or a fully-warm window, where the group-ahead
+            # pipeline would issue no prefetch (every granule resident)
+            # and only pay per-group fetch overhead: one span per run
             bounds = [pos, stop]
         nrun = len(self.tables)
         chunk_ranges: list[list[tuple[int, int]]] = []
@@ -673,19 +733,98 @@ class Partition:
             if not inb.any():
                 continue
             er, erow = runsel[inb], rows_abs[inb]
-            wnds = {
-                r: RowWindow.from_ranges(
-                    [chunk_ranges[ci][r]],
-                    lambda sec, x, y, t=self.tables[r]: t.rows(sec, x, y),
-                )
-                for r in np.unique(er)
-            }
-            kk, vv = self._gather_emit(er, erow, wnds, vw)
-            ks_out.append(kk)
-            vs_out.append(vv)
+            # each run's emitted rows lie inside one contiguous span
+            # (occurrence counting assigns window rows in view order),
+            # so per section one span fetch + an index gather suffices —
+            # no range merging or searchsorted row resolution needed
+            kk = np.empty(len(er), np.uint64)
+            vv2 = np.empty((len(er), vw), np.uint32)
+            dead = np.zeros(len(er), bool)
+            for r in np.unique(er):
+                m = er == r
+                lo2, hi2 = chunk_ranges[ci][r]
+                idx = erow[m] - lo2  # old-version rows interleave: gather
+                t = self.tables[r]
+                kk[m] = CK.unpack_u64(t.rows("keys", lo2, hi2))[idx]
+                vv2[m] = t.rows("vals", lo2, hi2)[idx]
+                dead[m] = t.rows("tomb", lo2, hi2)[idx]
+            live = ~dead
+            ks_out.append(kk[live])
+            vs_out.append(vv2[live])
         if not ks_out:
             return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32)
         return np.concatenate(ks_out), np.concatenate(vs_out)
+
+    # ---- cursor continuation (streaming scans without re-seeking) ----
+    def cold_cursor_seek(self, start: int) -> dict:
+        """Continuation state for a streaming cold scan: the view position
+        of ``start``'s lower bound plus the per-run next-row pointers.
+
+        One anchors binary search + one bounded CKB seek per run — paid
+        exactly once per cursor; every subsequent window is a pure
+        selector-stream decode (:meth:`cold_cursor_window`)."""
+        hx = self._host_index()
+        g = max(
+            int(np.searchsorted(hx["anch64"], np.uint64(start), side="right"))
+            - 1,
+            0,
+        )
+        cur, nxt = self._group_rows(hx, g)
+        qw = CK.pack_u64(np.array([start], np.uint64))[0]
+        nextrow = np.array(
+            [
+                t.seek_row(qw, int(cur[r]), int(nxt[r]))
+                for r, t in enumerate(self.tables)
+            ],
+            np.int64,
+        )
+        return dict(pos=self._seek_slot(hx, g, cur, nextrow), nextrow=nextrow)
+
+    def cold_cursor_window(self, state: dict, width: int,
+                           prefetch_depth: int = 0):
+        """Walk the next ``width`` view slots from ``state`` (no seek).
+
+        The comparison-free ``next × width`` of the paper's cursor
+        (§3.3): decode the persisted selector stream from the saved
+        position, fetch only the emitted row spans, advance the state.
+        Returns (keys, vals, more) exactly like :meth:`cold_scan`; a
+        fresh ``cold_cursor_seek(start)`` followed by chained windows
+        yields bit-identical rows to repeated ``cold_scan`` calls."""
+        hx = self._host_index()
+        self.cold_scans += 1
+        vw = self.tables[0].vw if self.tables else 2
+        pos0 = int(state["pos"])
+        if pos0 >= hx["n_slots"]:
+            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), False
+        pos, stop, valid, win, rows_abs, newest = self._walk_from(
+            hx, pos0, state["nextrow"], width
+        )
+        state["pos"] = stop
+        more = stop < hx["n_slots"]
+        if not bool(newest.any()):
+            return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), more
+        kk, vv = self._emit_window(
+            pos, stop, win, rows_abs, newest, prefetch_depth, vw, hx["d"]
+        )
+        self.cold_served_rows += len(kk)
+        return kk, vv, more
+
+    def _window_resident(self, runsel, rows_abs, newest) -> bool:
+        """Whether every granule a window's emission touches is already
+        cached/verified (no I/O left to overlap — pipelining it would be
+        pure per-group overhead). Side-effect-free."""
+        for r in range(len(self.tables)):
+            rr = rows_abs[newest & (runsel == r)]
+            if not len(rr):
+                continue
+            lo, hi = int(rr[0]), int(rr[-1]) + 1
+            t = self.tables[r]
+            if not all(
+                t.rows_resident(sec, lo, hi)
+                for sec in ("keys", "vals", "tomb")
+            ):
+                return False
+        return True
 
     def cold_scan_batch(self, starts, width: int) -> list[tuple]:
         """Batched :meth:`cold_scan`: one vectorized anchors search and
@@ -737,6 +876,7 @@ class Partition:
                 out.append((empty[0], empty[1], more))
                 continue
             kk, vv = self._gather_emit(er, erow, windows, vw)
+            self.cold_served_rows += len(kk)
             out.append((kk, vv, more))
         return out
 

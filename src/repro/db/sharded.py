@@ -13,6 +13,7 @@ is arithmetic, not a directory lookup.
 """
 from __future__ import annotations
 
+import bisect
 from functools import partial
 
 import numpy as np
@@ -45,6 +46,30 @@ def route_host(lows, keys) -> np.ndarray:
     lows = np.asarray(lows, np.uint64)
     keys = np.asarray(keys, np.uint64)
     return np.maximum(np.searchsorted(lows, keys, side="right") - 1, 0)
+
+
+def route_one(parts_or_lows, key: int) -> int:
+    """Scalar :func:`route_host`: owning range index of one key.
+
+    Accepts a sequence of partitions/shards (anything with ``.lo``) or
+    raw lower bounds — the single routing rule shared by the store's
+    point reads and the cursor's seek.
+    """
+    lows = [int(getattr(x, "lo", x)) for x in parts_or_lows]
+    return max(0, bisect.bisect_right(lows, int(key)) - 1)
+
+
+def partition_spans(lows) -> list[tuple[int, int]]:
+    """``[lo, hi)`` key spans for sorted inclusive lower bounds.
+
+    The companion of :func:`route_host`: each range's exclusive upper
+    bound is the next range's lower bound (the last spans to 2**64).
+    Shared by the store's scans and :class:`repro.db.cursor.RemixCursor`
+    so partition/shard boundaries are computed by one rule everywhere.
+    Python ints, not uint64: the final bound 2**64 must be representable.
+    """
+    lows = [int(x) for x in lows]
+    return list(zip(lows, lows[1:] + [1 << 64]))
 
 
 def abstract_state(cfg, n_shards: int):

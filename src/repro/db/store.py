@@ -7,13 +7,28 @@ hot keys back (TRIAD-style), and garbage-collects the WAL's virtual log.
 
 Read path: MemTable overlay first, then the owning partition's REMIX
 (batched JAX seek/get/scan — no bloom filters, §4).
+
+Versioned core: the store below the MemTable is a chain of immutable,
+refcounted :class:`~repro.db.version.Version` objects. A flush builds new
+partitions *off to the side* (copy-on-write — see
+``compaction.execute``), commits the manifest (the version edge), and
+publishes the new Version with a pointer swap; readers holding a
+:meth:`snapshot` pin their Version until dropped, so a compaction never
+invalidates an in-flight read and retired tables/files are reclaimed
+only when their last Version unpins. All scans run through
+:class:`~repro.db.cursor.RemixCursor`, the paper's §3.2 cursor over the
+merged (overlay + cold + promoted) view — ``scan``/``scan_batch`` are
+thin wrappers, and streaming consumers can hold one cursor instead of
+re-seeking per chunk.
 """
 from __future__ import annotations
 
-import bisect
+import collections
+import contextlib
 import dataclasses
 import os
 import tempfile
+import threading
 
 import numpy as np
 
@@ -29,9 +44,11 @@ from repro.db.compaction import (
     execute,
     plan_partition,
 )
+from repro.db.cursor import RemixCursor
 from repro.db.memtable import MemTable
 from repro.db.partition import Partition, Table
-from repro.db.sharded import route_host
+from repro.db.sharded import partition_spans, route_host, route_one
+from repro.db.version import Snapshot, VersionSet
 from repro.db.wal import WAL
 
 
@@ -61,8 +78,10 @@ class RemixDBConfig:
     # serve recovered partitions via block-granular cold reads until
     # promotion, instead of loading whole tables on first query
     cold_reads: bool = True
-    # build the device RunSet once cold reads fetched this fraction of a
-    # partition's data region
+    # promote a partition to the device RunSet once the observed cold
+    # workload — physical bytes pulled OR logical row bytes served (cache
+    # hits included) — reaches this fraction of its data region; the
+    # decision inputs are exposed in stats()["cache"]["promotion"]
     promote_fraction: float = 0.5
     # cold-scan pipelining (paper Fig 10): while one selector group's
     # rows are emitted, issue the next `prefetch_depth` groups'
@@ -78,6 +97,10 @@ class RemixDBConfig:
     # full 4 KB block is written; "always" fsyncs every put; "none" only
     # fsyncs on explicit sync()/close()
     sync_policy: str = "block"
+    # per-round compaction log entries retained (ring of the last N
+    # rounds); aggregate counters live in stats()["compaction"], so
+    # long-running stores don't grow memory with flush count
+    compaction_log_rounds: int = 64
 
 
 
@@ -132,15 +155,40 @@ class RemixDB:
             wal_path = os.path.join(wal_dir, "wal.log")
         self.wal = WAL(wal_path, vw=self.cfg.vw,
                        sync_policy=self.cfg.sync_policy)
-        self.partitions: list[Partition] = [Partition(lo=0, d=self.cfg.d)]
         self.seq = 1
-        # physical-read bytes of table handles retired by compaction, so
-        # disk_bytes_read() is monotonic across table replacement
+        # physical-read bytes of table handles retired with their last
+        # Version, so disk_bytes_read() is monotonic across table
+        # replacement
         self._retired_disk_bytes = 0
         # write-amplification accounting (fig 16)
         self.user_bytes = 0
         self.table_bytes_written = 0
-        self.compaction_log: list[dict] = []
+        # last-N compaction rounds (ring) + lifetime aggregates
+        self.compaction_log: collections.deque = collections.deque(
+            maxlen=max(1, self.cfg.compaction_log_rounds)
+        )
+        self.compaction_totals: dict = dict(
+            rounds=0, kinds={}, bytes_written=0
+        )
+        # one writer at a time; readers never take this lock — they pin
+        # a Version and proceed. Reentrant because a publish inside
+        # flush() releases the old Version, whose hook may reach
+        # _gc_files on the same thread.
+        self._flush_lock = threading.RLock()
+        self._in_flush = False  # file GC defers to flush-end while set
+        # guards the (current Version, overlay source, seq) triple that
+        # snapshots capture, against the flush's freeze/publish edges
+        self._state_lock = threading.Lock()
+        # while a flush is compacting, readers overlay the *frozen*
+        # MemTable (the data mid-compaction) instead of the drained live
+        # one — a snapshot taken mid-flush must still see pre-flush state
+        self._flush_overlay: dict | None = None
+        # release-hook accounting only (never nests with other locks)
+        self._acct_lock = threading.Lock()
+        self.versions = VersionSet(on_release=self._on_version_release)
+        self.versions.publish(
+            [Partition(lo=0, d=self.cfg.d)], seq_horizon=0
+        )
         if state is not None:
             self._recover(state)
         elif self.storage is not None:
@@ -163,14 +211,24 @@ class RemixDB:
         cfg = dataclasses.replace(cfg, data_dir=data_dir)
         return cls(cfg)
 
+    @property
+    def partitions(self):
+        """The current Version's partitions (immutable tuple). Mutating
+        store state goes through ``flush()``/``VersionSet.publish``."""
+        return self.versions.current.partitions
+
     def _recover(self, state: dict) -> None:
         """Rebuild partitions/WAL/MemTable from a committed manifest."""
+        from repro.io.manifest import live_files
         from repro.io.remix_io import load_remix
 
         if int(state.get("vw", self.cfg.vw)) != self.cfg.vw:
             raise ValueError(
                 f"data dir has vw={state['vw']}, config has vw={self.cfg.vw}"
             )
+        # files a crashed flush wrote but never committed are orphans:
+        # collect them before building table handles over the directory
+        self.storage.gc_orphans(live_files(state))
         # adopt the persisted group size: the on-disk REMIXes were built
         # with it and the cold path serves them directly — keeping a
         # mismatched cfg.d would make cold and promoted query windows
@@ -179,7 +237,6 @@ class RemixDB:
         d_disk = int(state.get("d", self.cfg.d))
         if d_disk != self.cfg.d:
             self.cfg = dataclasses.replace(self.cfg, d=d_disk)
-        live: set[str] = set()
         parts: list[Partition] = []
         for pe in state["partitions"]:
             tables = []
@@ -190,32 +247,36 @@ class RemixDB:
                 )
                 t.attach_cache(self.block_cache)
                 tables.append(t)
-            live.update(pe["tables"])
             p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
             if pe.get("remix"):
-                live.add(pe["remix"])
                 p.remix_name = pe["remix"]
                 p.preload_index(
                     load_remix(self.storage.remix_path(pe["remix"]))
                 )
             parts.append(p)
-        if parts:
-            self.partitions = sorted(parts, key=lambda p: p.lo)
-        self.storage.gc_orphans(live)
+        if not parts:
+            parts = [Partition(lo=0, d=self.cfg.d)]
         self.seq = int(state.get("seq", 1))
+        # publishing releases the construction placeholder, whose release
+        # hook garbage-collects files the manifest doesn't reference
+        self.versions.publish(
+            sorted(parts, key=lambda p: p.lo), seq_horizon=self.seq
+        )
         self.wal.restore_state(state["wal"])
         self.wal.recover_tail()
         self._replay_wal()
 
     def _replay_wal(self) -> None:
         """Rebuild the MemTable from the WAL's live log; advance seq past
-        every replayed record."""
+        every replayed record and the WAL's durable sequence horizon."""
         self.mem = self.recover_memtable()
         for e in self.mem.data.values():
             self.seq = max(self.seq, e.seq + 1)
+        self.seq = max(self.seq, self.wal.max_seq + 1)
 
-    def _commit(self) -> None:
-        """Durably publish the current version (atomic manifest commit)."""
+    def _commit(self, parts) -> None:
+        """Durably publish ``parts`` as the next manifest version — the
+        version edge (atomic rename commit, §4.3)."""
         state = dict(
             seq=int(self.seq),
             vw=self.cfg.vw,
@@ -226,41 +287,88 @@ class RemixDB:
                     tables=[os.path.basename(t.path) for t in p.tables],
                     remix=p.remix_name,
                 )
-                for p in self.partitions
+                for p in parts
             ],
             wal=self.wal.save_state(),
         )
         self.storage.commit(state)
-        # files superseded by this version (old REMIXes, compacted-away
-        # tables) are unreferenced now — reclaim them immediately instead
-        # of leaking until the next open()
-        live = {n for pe in state["partitions"] for n in pe["tables"]}
-        live |= {pe["remix"] for pe in state["partitions"] if pe["remix"]}
-        self.storage.gc_orphans(live)
+
+    def _gc_files(self, from_flush: bool = False) -> None:
+        """Reclaim table/REMIX files no live Version references.
+
+        The live set spans *every* pinned Version, not only the
+        committed one: files superseded by a commit survive until the
+        last snapshot reading them unpins (no mid-read deletion), then
+        the release hook calls back here. Never interleaves with a
+        flush mid-write — fresh tables (and ``.tmp`` staging files)
+        belong to no Version until publish and would be collected as
+        orphans: other threads block on the flush lock, and a release
+        reached *from inside* the flush (same thread, via publish or a
+        snapshot finalizer) defers to the collection flush() itself
+        runs after publishing.
+        """
+        if self._in_flush and not from_flush:
+            return  # fast path: flush-end gc will cover it
+        # non-blocking from release hooks: a reader dropping the last pin
+        # right as a flush starts must not stall for the whole compaction.
+        # Skipping is safe — files are immutable orphans once unreferenced
+        # and the next collection (flush end, close, open) reclaims them.
+        if not self._flush_lock.acquire(blocking=from_flush):
+            return
+        try:
+            if self._in_flush and not from_flush:
+                return
+            live: set[str] = set()
+            for v in self.versions.live_versions():
+                live |= v.file_names()
+            self.storage.gc_orphans(live)
+        finally:
+            self._flush_lock.release()
+
+    def _on_version_release(self, version, remaining) -> None:
+        """A Version's last pin dropped: fold the physical-read counters
+        of tables only it referenced, then drop their files."""
+        live_ids = {id(t) for v in remaining for t in v.tables()}
+        retired = sum(
+            t._reader.disk_bytes_read
+            for t in version.tables()
+            if id(t) not in live_ids and t._reader is not None
+        )
+        if retired:
+            with self._acct_lock:  # hooks run on whichever thread unpins
+                self._retired_disk_bytes += retired
+        if self.storage is not None:
+            self._gc_files()
 
     def close(self) -> None:
         """Flush WAL buffers and, in persistent mode, commit a manifest so
         reopening needs no tail scan. The MemTable stays in the WAL."""
         self.wal.sync()
         if self.storage is not None:
-            self._commit()
+            self._commit(self.versions.current.partitions)
             self.wal.release_quarantine()
+            self._gc_files()
 
     # ---------------- write path ----------------
     def put(self, key: int, val) -> None:
         val = np.asarray(val, np.uint32).reshape(self.cfg.vw)
         self.wal.append(int(key), self.seq, False, val)
-        self.mem.put(int(key), val, self.seq)
+        # MemTable inserts take the state lock so concurrent readers can
+        # materialize a stable view of the live overlay (cursor seeks
+        # iterate it; dict iteration must not race a resize)
+        with self._state_lock:
+            self.mem.put(int(key), val, self.seq)
+            self.seq += 1
         self.user_bytes += 8 + 4 * self.cfg.vw
-        self.seq += 1
         self._maybe_flush()
 
     def delete(self, key: int) -> None:
         val = np.zeros(self.cfg.vw, np.uint32)
         self.wal.append(int(key), self.seq, True, val)
-        self.mem.put(int(key), val, self.seq, tomb=True)
+        with self._state_lock:
+            self.mem.put(int(key), val, self.seq, tomb=True)
+            self.seq += 1
         self.user_bytes += 8 + 4 * self.cfg.vw
-        self.seq += 1
         self._maybe_flush()
 
     def put_batch(self, keys, vals) -> None:
@@ -268,7 +376,8 @@ class RemixDB:
         vals = np.asarray(vals, np.uint32).reshape(len(keys), self.cfg.vw)
         seqs = np.arange(self.seq, self.seq + len(keys), dtype=np.uint64)
         self.wal.append_batch(keys, seqs, np.zeros(len(keys), bool), vals)
-        self.seq = self.mem.put_batch(keys, vals, self.seq)
+        with self._state_lock:
+            self.seq = self.mem.put_batch(keys, vals, self.seq)
         self.user_bytes += len(keys) * (8 + 4 * self.cfg.vw)
         self._maybe_flush()
 
@@ -277,38 +386,63 @@ class RemixDB:
             self.flush()
 
     # ---------------- flush / compaction ----------------
-    def _route(self, key: int) -> int:
-        los = [p.lo for p in self.partitions]
-        return max(0, bisect.bisect_right(los, key) - 1)
-
     def flush(self) -> dict:
-        """Freeze the MemTable and run one compaction round (§4.2)."""
+        """Freeze the MemTable and run one compaction round (§4.2),
+        building the next Version off to the side.
+
+        Readers are never blocked or invalidated: live partitions are
+        not mutated (copy-on-write ``execute``), the manifest commit is
+        the durable version edge, and only then is the new Version
+        published with a pointer swap. Snapshots opened before the flush
+        keep serving the old Version until they close.
+        """
+        with self._flush_lock:
+            return self._flush_locked()
+
+    def _flush_locked(self) -> dict:
         keys, vals, seq, tomb, counts = self.mem.to_arrays()
         if len(keys) == 0:
             return dict(kinds={})
         hot = counts > self.cfg.hot_threshold
         frozen = self.mem
-        self.mem = MemTable(vw=self.cfg.vw)
+        # freeze edge: from here until publish, readers overlay the
+        # frozen entries — pairing the old Version with the drained live
+        # MemTable would make the data under compaction invisible
+        with self._state_lock:
+            self.mem = MemTable(vw=self.cfg.vw)
+            self._flush_overlay = frozen.data
+            self._in_flush = True
+        try:
+            return self._compact(frozen, keys, vals, seq, tomb, hot)
+        finally:
+            with self._state_lock:
+                self._flush_overlay = None
+                self._in_flush = False
+
+    def _compact(self, frozen, keys, vals, seq, tomb, hot) -> dict:
         # hot keys skip compaction; carried over with halved counters
         for k in np.asarray(keys[hot], np.uint64).tolist():
             self.mem.carry_over(int(k), frozen.data[int(k)])
         keys, vals, seq, tomb = (
             keys[~hot], vals[~hot], seq[~hot], tomb[~hot],
         )
-        # route new data to partitions
-        pidx = route_host([p.lo for p in self.partitions], keys)
+        # route new data to partitions of the current version
+        base = self.versions.current.partitions
+        pidx = route_host([p.lo for p in base], keys)
         plans: list[Plan] = []
-        for i, p in enumerate(self.partitions):
+        for i, p in enumerate(base):
             m = pidx == i
             t = Table(keys=keys[m], vals=vals[m], seq=seq[m], tomb=tomb[m])
             plans.append(plan_partition(p, t, self.cfg.compaction))
         apply_abort_budget(plans, self.cfg.compaction)
         kinds: dict[str, int] = {}
+        round_bytes = 0
         new_parts: list[Partition] = []
-        for p, pl in zip(self.partitions, plans):
+        for p, pl in zip(base, plans):
             kinds[pl.kind] = kinds.get(pl.kind, 0) + 1
             res = execute(pl, self.cfg.compaction, storage=self.storage)
             self.table_bytes_written += res.bytes_written
+            round_bytes += res.bytes_written
             if res.carried is not None:  # aborted: back into the MemTable
                 for j in range(res.carried.n):
                     e = frozen.data[int(res.carried.keys[j])]
@@ -318,11 +452,6 @@ class RemixDB:
             else:
                 new_parts.append(p)
         new_parts.sort(key=lambda p: p.lo)
-        live_before = sum(p.cold_disk_bytes() for p in self.partitions)
-        self.partitions = new_parts
-        self._retired_disk_bytes += max(
-            0, live_before - sum(p.cold_disk_bytes() for p in new_parts)
-        )
         # WAL GC: only carried/hot keys remain live in the log (§4.3).
         # In persistent mode freed blocks stay quarantined until the new
         # mapping table is committed with the manifest: a crash in between
@@ -330,11 +459,71 @@ class RemixDB:
         self.wal.gc(set(self.mem.data.keys()),
                     defer_free=self.storage is not None)
         if self.storage is not None:
-            self._commit()
+            self._commit(new_parts)  # the version edge
+        # pointer swap: readers pinning the old Version keep it alive
+        # (with no pins its exclusively-owned files are reclaimed at the
+        # flush-end gc below); the frozen overlay retires in the same
+        # critical section so no reader pairs the new Version with it
+        with self._state_lock:
+            self.versions.publish(new_parts, seq_horizon=self.seq)
+            self._flush_overlay = None
+        if self.storage is not None:
             self.wal.release_quarantine()
+            self._gc_files(from_flush=True)
         stats = dict(kinds=kinds)
         self.compaction_log.append(stats)
+        self.compaction_totals["rounds"] += 1
+        self.compaction_totals["bytes_written"] += round_bytes
+        tk = self.compaction_totals["kinds"]
+        for k, v in kinds.items():
+            tk[k] = tk.get(k, 0) + v
         return stats
+
+    # ---------------- snapshots / cursors ----------------
+    def snapshot(self) -> Snapshot:
+        """A pinned, point-in-time view of the whole store: the current
+        Version plus a frozen MemTable overlay. Reads through it are
+        immune to concurrent flushes; close it (or use ``with``) to let
+        retired versions free their tables/files. The public MVCC
+        handle (§4.2's "old version remains servable")."""
+        with self._state_lock:
+            v = self.versions.pin_current()
+            src = (
+                self._flush_overlay
+                if self._flush_overlay is not None
+                else self.mem.data
+            )
+            return Snapshot(self, v, dict(src), seq=self.seq, pinned=True)
+
+    @contextlib.contextmanager
+    def _view(self):
+        """Ephemeral *pinned* view of the live state for one read call:
+        same code path as public snapshots, sharing the live overlay
+        dict instead of copying it. The pin matters — without it a
+        concurrent flush could release the version and delete its files
+        mid-read; a Python reference keeps objects alive, not files."""
+        with self._state_lock:
+            v = self.versions.pin_current()
+            src = (
+                self._flush_overlay
+                if self._flush_overlay is not None
+                else self.mem.data
+            )
+            snap = Snapshot(self, v, src, seq=self.seq, pinned=True,
+                            shared=True)
+        try:
+            yield snap
+        finally:
+            snap.close()
+
+    def cursor(self, start: int = 0, width: int = 64) -> RemixCursor:
+        """A streaming cursor (seek/peek/next/skip/next_batch, §3.2) over
+        a fresh snapshot; the snapshot is released when the cursor is
+        closed. Long scans seek once and stream — see
+        ``benchmarks/cursor_bench.py``."""
+        cur = RemixCursor(self.snapshot(), width=width, owns_snapshot=True)
+        cur.seek(int(start))
+        return cur
 
     # ---------------- read path ----------------
     def _query_mod(self):
@@ -356,8 +545,8 @@ class RemixDB:
         """Serve this partition via block-granular cold reads?
 
         True only while the recovered on-disk REMIX still matches the
-        table list and cold reads haven't yet pulled enough blocks to
-        justify building the device RunSet (promotion)."""
+        table list and the observed cold workload hasn't yet justified
+        building the device RunSet (promotion)."""
         return (
             self.cfg.cold_reads
             and self.block_cache is not None
@@ -366,10 +555,15 @@ class RemixDB:
         )
 
     def get(self, key: int):
-        e = self.mem.get(int(key))
+        with self._view() as view:
+            return self._get_at(view, int(key))
+
+    def _get_at(self, view: Snapshot, key: int):
+        e = view.overlay.get(int(key))
         if e is not None:
             return None if e.tomb else e.val
-        p = self.partitions[self._route(int(key))]
+        parts = view.partitions
+        p = parts[route_one(parts, int(key))]
         if self._cold_ok(p):
             found, val = p.cold_get(int(key))
             return val if found else None
@@ -380,23 +574,28 @@ class RemixDB:
 
     def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
         """Batched point lookups. Returns (found (Q,), vals (Q,VW))."""
+        with self._view() as view:
+            return self._get_batch_at(view, keys)
+
+    def _get_batch_at(self, view: Snapshot, keys):
         keys = np.asarray(keys, np.uint64)
         found = np.zeros(len(keys), bool)
         vals = np.zeros((len(keys), self.cfg.vw), np.uint32)
         rest = []
         for i, k in enumerate(keys.tolist()):
-            e = self.mem.get(k)
+            e = view.overlay.get(k)
             if e is not None:
                 found[i] = not e.tomb
                 vals[i] = e.val
             else:
                 rest.append(i)
+        parts = view.partitions
         if rest:
             rest = np.array(rest)
-            pidx = route_host([p.lo for p in self.partitions], keys[rest])
+            pidx = route_host([p.lo for p in parts], keys[rest])
             for pi in np.unique(pidx):
                 sel = rest[pidx == pi]
-                p = self.partitions[pi]
+                p = parts[pi]
                 if self._cold_ok(p):
                     f, v = p.cold_get_batch(keys[sel])
                     found[sel] = f
@@ -413,108 +612,51 @@ class RemixDB:
         return found, vals
 
     def scan(self, start_key: int, n: int) -> tuple[np.ndarray, np.ndarray]:
-        """Range scan: seek + next×n across partitions + MemTable overlay."""
-        out_k: list[int] = []
-        out_v: list[np.ndarray] = []
-        pi = self._route(int(start_key))
-        lo = int(start_key)
-        base_width = max(8, n + n // 2)
-        width = base_width
-        while len(out_k) < n and pi < len(self.partitions):
-            p = self.partitions[pi]
-            hi = (
-                self.partitions[pi + 1].lo
-                if pi + 1 < len(self.partitions)
-                else 1 << 64
-            )
-            if self._cold_ok(p):
-                kk, vv, more = p.cold_scan(
-                    lo, width, prefetch_depth=self.cfg.prefetch_depth
-                )
-            else:
-                remix, runset = p.index()
-                qk = jnp.asarray(CK.pack_u64(np.array([lo], np.uint64)))
-                keys, vals, valid, pos = self._query_mod().scan(
-                    remix, runset, qk, width=width, **self._qkw()
-                )
-                kk = CK.unpack_u64(np.asarray(keys)[0][np.asarray(valid)[0]])
-                vv = np.asarray(vals)[0][np.asarray(valid)[0]]
-                more = int(np.asarray(pos)[0]) + width < remix.n_slots
-            if len(kk) == 0 and more:
-                # every slot in the window was a tombstone/old version but
-                # the view has more: widen and retry — advancing to the
-                # next partition here would silently drop its live tail.
-                # (On the device path each new width jit-compiles once;
-                # widths are powers of two of base_width, so the compile
-                # set stays O(log max-tombstone-run) process-wide.)
-                width *= 2
-                continue
-            got_in_range = 0
-            for j in range(len(kk)):
-                if int(kk[j]) >= hi:
-                    break
-                out_k.append(int(kk[j]))
-                out_v.append(vv[j])
-                got_in_range += 1
-            if got_in_range == 0 or (len(kk) > got_in_range):
-                # nothing (more) in this partition's range: advance partition
-                pi += 1
-                lo = self.partitions[pi].lo if pi < len(self.partitions) else 0
-                width = base_width  # widening was partition-local
-            else:
-                lo = int(kk[got_in_range - 1]) + 1
-                width = base_width  # widening was window-local too
-        # overlay MemTable entries in range
-        merged: dict[int, np.ndarray | None] = {}
-        for k, v in zip(out_k, out_v):
-            merged[k] = v
-        limit = max(out_k) if len(out_k) >= n else (1 << 64)
-        for k, e in self.mem.data.items():
-            if int(start_key) <= k <= limit:
-                merged[k] = None if e.tomb else e.val
-        items = sorted(
-            ((k, v) for k, v in merged.items() if v is not None),
-            key=lambda kv: kv[0],
-        )[:n]
-        if not items:
-            return np.zeros(0, np.uint64), np.zeros((0, self.cfg.vw), np.uint32)
-        return (
-            np.array([k for k, _ in items], np.uint64),
-            np.stack([v for _, v in items]),
-        )
+        """Range scan: one cursor seek + ``next_batch(n)`` over the merged
+        view (partitions + MemTable overlay)."""
+        with self._view() as view:
+            return self._scan_at(view, start_key, n)
+
+    def _scan_at(self, view: Snapshot, start_key: int, n: int):
+        cur = RemixCursor(view, width=max(8, n + n // 2))
+        cur.seek(int(start_key))
+        return cur.next_batch(n)
 
     def scan_batch(self, starts, n: int):
         """Batched range scans (one jitted call per touched partition).
 
         Returns (keys (Q, n) uint64, valid (Q, n)). Queries whose range
-        crosses a partition boundary fall back to the sequential path.
+        crosses a partition boundary fall back to the cursor path.
         """
+        with self._view() as view:
+            return self._scan_batch_at(view, starts, n)
+
+    def _scan_batch_at(self, view: Snapshot, starts, n: int):
         starts = np.asarray(starts, np.uint64)
         q = len(starts)
         out_k = np.zeros((q, n), np.uint64)
         out_m = np.zeros((q, n), bool)
-        pidx = route_host([p.lo for p in self.partitions], starts)
+        parts = view.partitions
+        spans = partition_spans([p.lo for p in parts])
+        pidx = route_host([p.lo for p in parts], starts)
         width = n + max(8, n // 2)
         for pi in np.unique(pidx):
             sel = np.flatnonzero(pidx == pi)
-            p = self.partitions[pi]
-            hi = (
-                self.partitions[pi + 1].lo
-                if pi + 1 < len(self.partitions)
-                else 1 << 64
-            )
+            p = parts[pi]
+            hi = spans[pi][1]
+
             def emit_row(qi, kk):
                 """Clip one query's window to the partition — shared by
                 the cold and device branches so promotion never changes
-                results. Any under-full row falls back to the sequential
+                results. Any under-full row falls back to the cursor
                 scan: the fixed window alone can't distinguish "partition
                 tail reached" from "window swallowed by a tombstone run
-                or a partition boundary", and scan() handles both."""
+                or a partition boundary", and the cursor handles both."""
                 kk = kk[kk < hi][:n]
                 out_k[qi, : len(kk)] = kk
                 out_m[qi, : len(kk)] = True
                 if len(kk) < n:
-                    kk2, _ = self.scan(int(starts[qi]), n)
+                    kk2, _ = self._scan_at(view, int(starts[qi]), n)
                     out_k[qi, : len(kk2)] = kk2[:n]
                     out_m[qi] = False
                     out_m[qi, : len(kk2)] = True
@@ -538,9 +680,9 @@ class RemixDB:
             for row, qi in enumerate(sel):
                 emit_row(qi, keys[row][valid[row]])
         # memtable overlay (host merge) only if buffered entries exist
-        if len(self.mem):
+        if view.overlay:
             for qi in range(q):
-                kk, _ = self.scan(int(starts[qi]), n)
+                kk, _ = self._scan_at(view, int(starts[qi]), n)
                 out_k[qi, : len(kk)] = kk[:n]
                 out_m[qi] = False
                 out_m[qi, : len(kk)] = True
@@ -554,23 +696,33 @@ class RemixDB:
     def disk_bytes_read(self) -> int:
         """Physical table-file bytes read so far (cache hits excluded).
 
-        Monotonic: counts from handles retired by compaction are folded
-        into ``_retired_disk_bytes`` when their partition list is swapped.
+        Monotonic: counts from handles retired with their last Version
+        are folded into ``_retired_disk_bytes`` on release; live counts
+        span every pinned Version (tables shared between versions are
+        counted once).
         """
-        return self._retired_disk_bytes + sum(
-            p.cold_disk_bytes() for p in self.partitions
-        )
+        total = self._retired_disk_bytes
+        seen: set[int] = set()
+        for v in self.versions.live_versions():
+            for t in v.tables():
+                if id(t) in seen:
+                    continue
+                seen.add(id(t))
+                if t._reader is not None:
+                    total += t._reader.disk_bytes_read
+        return total
 
     def stats(self) -> dict:
         """Store counters. Introspection-safe: never force-loads a lazy
         table handle (entries come from cached file headers) and never
         builds a partition index."""
+        parts = self.partitions
         out = dict(
-            partitions=len(self.partitions),
-            tables=sum(len(p.tables) for p in self.partitions),
-            entries=sum(p.n_entries for p in self.partitions),
+            partitions=len(parts),
+            tables=sum(len(p.tables) for p in parts),
+            entries=sum(p.n_entries for p in parts),
             resident_tables=sum(
-                t.resident for p in self.partitions for t in p.tables
+                t.resident for p in parts for t in p.tables
             ),
             memtable=len(self.mem),
             wa=self.write_amplification(),
@@ -579,12 +731,26 @@ class RemixDB:
             # (whole-table loads and rebuilds count too)
             disk_bytes_read=self.disk_bytes_read(),
             cold=dict(
-                gets=sum(p.cold_gets for p in self.partitions),
-                scans=sum(p.cold_scans for p in self.partitions),
+                gets=sum(p.cold_gets for p in parts),
+                scans=sum(p.cold_scans for p in parts),
+            ),
+            versions=self.versions.stats(),
+            compaction=dict(
+                rounds=self.compaction_totals["rounds"],
+                bytes_written=self.compaction_totals["bytes_written"],
+                kinds=dict(self.compaction_totals["kinds"]),
+                log_rounds=len(self.compaction_log),
             ),
         )
         if self.block_cache is not None:
             out["cache"] = self.block_cache.stats()
+            # promotion decision inputs per cold-servable partition
+            # (header-only table reads; nothing is force-loaded)
+            out["cache"]["promotion"] = [
+                p.promotion_inputs(self.cfg.promote_fraction)
+                for p in parts
+                if p.cold_ready()
+            ]
         return out
 
     def recover_memtable(self) -> MemTable:

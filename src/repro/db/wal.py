@@ -94,6 +94,12 @@ class WAL:
         self._pending: list[tuple[int, int, int, np.ndarray]] = []
         self._dirty = False  # blocks written since the last fsync
         self.bytes_written = 0  # physical write accounting (for WA ratios)
+        # highest sequence number ever appended — the durable sequence
+        # horizon. Checkpointed with the mapping table and advanced by
+        # tail recovery, so a reopened store never reissues a seq that a
+        # (possibly GC-masked) record already consumed; Versions adopt it
+        # as their seq_horizon floor.
+        self.max_seq = 0
         if not os.path.exists(path):
             with open(path, "wb"):
                 pass
@@ -101,6 +107,7 @@ class WAL:
     # ---------- append path ----------
     def append(self, key: int, seq: int, tomb: bool, val: np.ndarray):
         self._pending.append((key, seq, int(tomb), np.asarray(val, np.uint32)))
+        self.max_seq = max(self.max_seq, int(seq))
         if self.sync_policy == "always":
             self._flush_pending()
             self._fsync()
@@ -112,6 +119,7 @@ class WAL:
     def append_batch(self, keys, seqs, tombs, vals):
         for k, s, t, v in zip(keys, seqs, tombs, vals):
             self._pending.append((int(k), int(s), int(t), v))
+            self.max_seq = max(self.max_seq, int(s))
         flushed = False
         while len(self._pending) >= self.recs_per_block:
             self._flush_pending()
@@ -270,6 +278,7 @@ class WAL:
         self.sync()
         return dict(
             timestamp=self.vlog.timestamp,
+            max_seq=self.max_seq,
             next_phys=self.next_phys,
             free=sorted(self.free + self.quarantine),
             epoch=[[k, v] for k, v in sorted(self.epoch_bits.items())],
@@ -287,6 +296,7 @@ class WAL:
             for p, e, w, bm in state["blocks"]
         ]
         self.next_phys = int(state["next_phys"])
+        self.max_seq = int(state.get("max_seq", 0))
         self.free = [int(b) for b in state["free"]]
         self.quarantine = []
         self.epoch_bits = {int(k): int(v) for k, v in state["epoch"]}
@@ -309,6 +319,9 @@ class WAL:
             if epoch != self.epoch_bits.get(phys, 0) ^ 1 or not recs:
                 continue
             self.epoch_bits[phys] = epoch
+            self.max_seq = max(
+                self.max_seq, max(int(s) for _, s, _, _ in recs)
+            )
             if phys in self.free:
                 self.free.remove(phys)
             self.next_phys = max(self.next_phys, phys + 1)

@@ -58,6 +58,13 @@ class BlockCache:
     def __len__(self) -> int:
         return len(self._blocks)
 
+    def contains(self, key: Hashable) -> bool:
+        """Residence probe with **no** side effects: hit/miss counters,
+        LRU order and prefetch tags are untouched. Lets readers plan
+        around residency (e.g. skip pipelining a fully-warm window)
+        without distorting the accounting the tests assert on."""
+        return key in self._blocks
+
     def get(self, key: Hashable) -> bytes | None:
         """Cached payload for ``key`` (marks it most-recently-used)."""
         data = self._blocks.get(key)

@@ -23,6 +23,23 @@ _MANIFEST_RE = re.compile(r"^MANIFEST-(\d{6})$")
 _FILE_RE = re.compile(r"^(t|x)-(\d{6})\.(sst|rmx)$")
 
 
+def live_files(state: dict) -> set[str]:
+    """Table/REMIX file names a manifest state references.
+
+    The db layer uses this for orphan collection at recovery; with the
+    Version architecture the *runtime* live set is the union of this
+    over every pinned :class:`repro.db.version.Version` — a commit is
+    the version edge, but files are reclaimed only when the last Version
+    referencing them unpins.
+    """
+    live: set[str] = set()
+    for pe in state.get("partitions", []):
+        live.update(pe.get("tables", []))
+        if pe.get("remix"):
+            live.add(pe["remix"])
+    return live
+
+
 def _atomic_write(path: str, data: bytes) -> None:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:

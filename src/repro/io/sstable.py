@@ -246,6 +246,23 @@ class SSTableReader:
             self._cache.put((self._cache_key, idx), data)
         return data
 
+    def section_rows_resident(self, name: str, lo: int, hi: int) -> bool:
+        """Whether rows [lo, hi) of ``name`` can be served without any
+        disk read or checksum pass: every covering granule is in the
+        block cache (or, in mmap mode, already verified — re-slicing the
+        mapping is free). Pure probe: no counters move."""
+        if self._cache is None and self.mode != "mmap":
+            return False
+        for bi in self.section_row_blocks(name, lo, hi):
+            if self.mode == "mmap" and bi in self._verified:
+                continue
+            if self._cache is not None and self._cache.contains(
+                (self._cache_key, bi)
+            ):
+                continue
+            return False
+        return True
+
     def prefetch_block(self, idx: int) -> None:
         """Pull granule ``idx`` into the shared cache ahead of demand.
 

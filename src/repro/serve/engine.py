@@ -118,7 +118,15 @@ class KVServeEngine:
     the *same* :class:`repro.io.blockcache.BlockCache`, so the byte
     budget — and the hit/miss accounting — spans all partitions of all
     shards instead of fragmenting per store. Point and range queries are
-    routed by key range, mirroring ``RemixDB._route`` one level up.
+    routed by key range, mirroring the store's own routing one level up.
+
+    Every request batch reads through one pinned
+    :class:`repro.db.version.Snapshot` per touched shard, so a batch
+    observes a single consistent Version of each store even while a
+    concurrent flush/compaction publishes new ones — the serving-side
+    MVCC contract. ``snapshot()`` exposes the same handle for callers
+    that want consistency across *multiple* requests (e.g. a streaming
+    cursor per shard).
     """
 
     def __init__(
@@ -165,30 +173,44 @@ class KVServeEngine:
         found, vals = self.get_batch(np.array([int(key)], np.uint64))
         return vals[0] if bool(found[0]) else None
 
+    def snapshot(self, key: int | None = None):
+        """Pin a consistent view: of the shard owning ``key``, or (when
+        ``key`` is None) a list of per-shard snapshots in key order —
+        close each (or use ``with``) when done."""
+        if key is not None:
+            return self._route(int(key)).snapshot()
+        return [db.snapshot() for db in self.shards]
+
     def get_batch(self, keys):
-        """Batched point lookups: one vectorized ``RemixDB.get_batch``
-        call per touched shard — a sharded batch costs O(shards) batched
-        calls, never O(keys) scalar gets."""
+        """Batched point lookups: one vectorized ``get_batch`` call per
+        touched shard — a sharded batch costs O(shards) batched calls,
+        never O(keys) scalar gets — each through a Version pinned for
+        the duration of the batch (the store's ephemeral view: pinned
+        like a snapshot but sharing the live overlay, so the serving hot
+        path never copies a MemTable per request)."""
         keys = np.asarray(keys, np.uint64)
         found = np.zeros(len(keys), bool)
         vals = np.zeros((len(keys), self.shards[0].cfg.vw), np.uint32)
         sid = route_host(self.lows, keys)
         for s in np.unique(sid):
             m = sid == s
-            f, v = self.shards[s].get_batch(keys[m])
+            with self.shards[s]._view() as view:
+                f, v = view.get_batch(keys[m])
             found[m] = f
             vals[m] = v
         return found, vals
 
     def scan(self, start_key: int, n: int):
-        """Cross-shard range scan: drain shards in key order until full."""
+        """Cross-shard range scan: drain shards in key order until full,
+        each shard read through one pinned per-call view."""
         out_k: list[np.ndarray] = []
         out_v: list[np.ndarray] = []
         got = 0
         si = max(0, bisect.bisect_right(self.lows, int(start_key)) - 1)
         lo = int(start_key)
         while got < n and si < len(self.shards):
-            kk, vv = self.shards[si].scan(lo, n - got)
+            with self.shards[si]._view() as view:
+                kk, vv = view.scan(lo, n - got)
             out_k.append(kk)
             out_v.append(vv)
             got += len(kk)

@@ -11,7 +11,7 @@ from repro.core.runs import make_run
 from repro.db.compaction import CompactionConfig
 from repro.db.partition import Table
 from repro.db.store import RemixDB, RemixDBConfig
-from repro.io.checksum import crc32c
+from repro.io.checksum import crc32c, crc32c_py
 from repro.io.ckb import decode_ckb, encode_ckb
 from repro.io.manifest import Manifest, Storage
 from repro.io.rebuild import incremental_build_remix
@@ -43,6 +43,33 @@ def test_crc32c_vectors():
     assert crc32c(b"123456789") == 0xE3069283  # RFC 3720 check value
     # streaming == one-shot
     assert crc32c(b"456789", crc32c(b"123")) == 0xE3069283
+    # the pure-Python fallback satisfies the same reference vectors
+    assert crc32c_py(b"") == 0
+    assert crc32c_py(b"123456789") == 0xE3069283
+    assert crc32c_py(b"456789", crc32c_py(b"123")) == 0xE3069283
+
+
+def test_crc32c_numpy_matches_pure_python():
+    """The vectorized slicing-by-16 path must produce byte-for-byte
+    identical digests to the pure-Python loop: every length bracketing
+    the chunk width / dispatch threshold, misaligned offsets, and
+    streaming continuations split at arbitrary points (where the two
+    implementations hand off state to each other)."""
+    rng = np.random.default_rng(42)
+    blob = rng.integers(0, 256, 200_001, dtype=np.uint8).tobytes()
+    lengths = [0, 1, 15, 16, 17, 255, 1023, 1024, 1025, 4096, 65536,
+               65537, 131072, 200_001]
+    for n in lengths:
+        for off in (0, 1, 7):
+            d = blob[off : off + n]
+            assert crc32c(d) == crc32c_py(d), (n, off)
+    # streaming: numpy-then-python and python-then-numpy continuations
+    d = blob[:100_000]
+    want = crc32c_py(d)
+    for cut in (0, 1, 15, 16, 500, 1024, 50_000, 99_999, 100_000):
+        assert crc32c(d[cut:], crc32c(d[:cut])) == want, cut
+        assert crc32c(d[cut:], crc32c_py(d[:cut])) == want, cut
+        assert crc32c_py(d[cut:], crc32c(d[:cut])) == want, cut
 
 
 def test_ckb_roundtrip_and_compression():

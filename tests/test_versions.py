@@ -1,0 +1,372 @@
+"""Versioned-core tests: immutable Versions, snapshot isolation across
+flushes, cursor/scan equivalence on all three read paths, pinned-file
+lifetime, the compaction-log ring, and workload-stat promotion."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.db.compaction import CompactionConfig
+from repro.db.store import RemixDB, RemixDBConfig
+
+
+def _cfg(tmp_path=None, **kw):
+    comp = kw.pop("compaction", CompactionConfig(table_cap=256, t_max=6))
+    return RemixDBConfig(
+        memtable_entries=kw.pop("memtable_entries", 1 << 30),
+        compaction=comp,
+        wal_dir=str(tmp_path) if tmp_path is not None else None,
+        hot_threshold=255,
+        **kw,
+    )
+
+
+def _fill(db, keys):
+    keys = np.asarray(keys, np.uint64)
+    vals = np.stack([keys & 0xFFFFFFFF, keys >> 32], 1).astype(np.uint32)
+    db.put_batch(keys, vals)
+    return vals
+
+
+# ---------------------------------------------------------------- snapshots
+def test_snapshot_isolated_from_flush(tmp_path):
+    db = RemixDB(_cfg(tmp_path))
+    keys = np.arange(0, 3000, 3, dtype=np.uint64)
+    _fill(db, keys)
+    db.delete(6)  # a pre-snapshot delete must stay deleted in the view
+    pre_k, pre_v = db.scan(0, 10_000)
+    with db.snapshot() as snap:
+        # post-snapshot writes + a flush publishing a new Version
+        db.put_batch(np.arange(1, 3000, 3, dtype=np.uint64),
+                     np.zeros((1000, 2), np.uint32))
+        db.delete(9)
+        db.flush()
+        k1, v1 = snap.scan(0, 10_000)
+        np.testing.assert_array_equal(k1, pre_k)
+        np.testing.assert_array_equal(v1, pre_v)
+        # point reads through the snapshot agree with the frozen view
+        assert snap.get(6) is None and snap.get(9) is not None
+        f, _ = snap.get_batch(np.array([1, 4, 9], np.uint64))
+        assert list(f) == [False, False, True]
+    # the live store sees everything
+    assert db.get(9) is None and db.get(1) is not None
+    k2, _ = db.scan(0, 10_000)
+    assert len(k2) == len(pre_k) + 1000 - 1
+
+
+def test_snapshot_versions_refcount_and_release(tmp_path):
+    db = RemixDB(_cfg(tmp_path))
+    _fill(db, np.arange(100, dtype=np.uint64))
+    db.flush()
+    v0 = db.stats()["versions"]
+    assert v0["live"] == 1 and v0["pinned"] == 0
+    s1, s2 = db.snapshot(), db.snapshot()
+    assert db.stats()["versions"]["pinned"] == 2
+    _fill(db, np.arange(100, 200, dtype=np.uint64))
+    db.flush()  # old Version must stay live: two snapshots pin it
+    st = db.stats()["versions"]
+    assert st["live"] == 2
+    s1.close()
+    s1.close()  # idempotent
+    assert db.stats()["versions"]["live"] == 2
+    s2.close()
+    st = db.stats()["versions"]
+    assert st["live"] == 1 and st["pinned"] == 0
+
+
+# ---------------------------------------------------------------- cursors
+def test_cursor_ops_peek_next_skip(tmp_path):
+    db = RemixDB(_cfg(tmp_path))
+    keys = np.arange(10, 200, 10, dtype=np.uint64)
+    _fill(db, keys)
+    db.flush()
+    db.put(15, [7, 7])  # overlay entry between table keys
+    db.delete(30)  # overlay tombstone hiding a table key
+    with db.cursor(start=11) as cur:
+        assert cur.peek()[0] == 15
+        assert cur.peek()[0] == 15  # peek does not advance
+        k, v = cur.next()
+        assert k == 15 and int(v[0]) == 7
+        assert cur.next()[0] == 20
+        assert cur.skip(2) == 2  # 40, 50 (30 is deleted)
+        assert cur.next()[0] == 60
+        kk, _ = cur.next_batch(4)
+        np.testing.assert_array_equal(kk, [70, 80, 90, 100])
+        # iteration protocol drains the rest
+        rest = [k for k, _ in cur]
+        assert rest == list(range(110, 200, 10))
+        assert cur.next() is None and cur.peek() is None
+        assert cur.skip(5) == 0
+
+
+@pytest.mark.parametrize("path", ["overlay", "device", "cold"])
+def test_cursor_matches_scan_on_each_read_path(tmp_path, path):
+    root = str(tmp_path / "db")
+    rng = np.random.default_rng(5)
+    keys = np.sort(rng.choice(100_000, 4000, replace=False).astype(np.uint64))
+    if path == "cold":
+        db = RemixDB.open(root, _cfg(promote_fraction=1e9))
+    elif path == "device":
+        db = RemixDB.open(root, _cfg(cold_reads=False))
+    else:
+        db = RemixDB(_cfg(tmp_path))
+    _fill(db, keys)
+    if path != "overlay":
+        db.flush()
+        for k in keys[::7].tolist():
+            db.delete(int(k))
+        db.flush()
+        if path == "cold":  # reopen so tables are lazy handles again
+            db.close()
+            db = RemixDB.open(root, _cfg(promote_fraction=1e9))
+            assert all(p.cold_ready() for p in db.partitions)
+    for start, n in [(0, 100), (int(keys[1000]), 64), (int(keys[-5]), 50)]:
+        k_scan, v_scan = db.scan(start, n)
+        with db.cursor(start=start) as cur:
+            k_cur, v_cur = cur.next_batch(n)
+        np.testing.assert_array_equal(k_cur, k_scan)
+        np.testing.assert_array_equal(v_cur, v_scan)
+        kb, mb = db.scan_batch(np.array([start], np.uint64), n)
+        np.testing.assert_array_equal(kb[0][mb[0]], k_scan[:n])
+    if path == "cold":
+        assert db.stats()["resident_tables"] == 0  # stayed cold throughout
+
+
+def test_cursor_streams_across_partitions_and_overlay(tmp_path):
+    cfg = _cfg(tmp_path, memtable_entries=2048)
+    cfg.compaction = CompactionConfig(table_cap=128, t_max=3, split_m=2)
+    db = RemixDB(cfg)
+    keys = np.arange(0, 4096, dtype=np.uint64)
+    for _ in range(3):
+        db.put_batch(keys, np.zeros((len(keys), 2), np.uint32))
+        db.flush()
+    assert len(db.partitions) > 1
+    db.put(4096, [1, 1])  # overlay tail beyond every partition's tables
+    with db.cursor() as cur:
+        kk, _ = cur.next_batch(5000)
+    np.testing.assert_array_equal(kk, np.arange(0, 4097, dtype=np.uint64))
+
+
+# ------------------------------------------------- flush/cursor interleave
+def test_cursor_survives_concurrent_flush_and_files_pinned(tmp_path):
+    """The acceptance bar: a reader holding a snapshot/cursor across a
+    concurrent flush (compaction publishing a new Version and rewriting
+    tables) returns exactly the rows of an isolated pre-flush scan; the
+    pinned Version's files outlive the commit until the snapshot closes,
+    and recovery still round-trips afterwards."""
+    root = str(tmp_path / "db")
+    cfg = RemixDBConfig(
+        memtable_entries=1 << 30, hot_threshold=255,
+        compaction=CompactionConfig(table_cap=256, t_max=2),
+        promote_fraction=1e9,
+    )
+    db = RemixDB.open(root, cfg)
+    keys = np.arange(1, 4001, dtype=np.uint64) * 4
+    _fill(db, keys)
+    db.flush()
+    db.close()
+
+    db = RemixDB.open(root, cfg)  # cold: cursor reads straight off files
+    assert all(p.cold_ready() for p in db.partitions)
+    pre_k, pre_v = db.scan(0, 10_000)  # isolated pre-flush reference
+
+    snap = db.snapshot()
+    cur = snap.cursor(start=0, width=64)
+    got_k = [cur.next_batch(500)[0]]  # consume part of the view...
+
+    # ...then a flush rewrites the partition (t_max=2 forces a
+    # major/split that supersedes the old table files)
+    db.delete(int(keys[1000]))
+    _fill(db, keys + 1)
+    db.flush()
+    pinned = snap.version.file_names()
+    current = db.versions.current.file_names()
+    assert pinned - current, "flush should have superseded some files"
+    for name in pinned:  # superseded files stay on disk while pinned
+        sub = "tables" if name.endswith(".sst") else "remix"
+        assert os.path.exists(os.path.join(root, sub, name)), name
+
+    while True:  # cursor keeps streaming the old Version mid-compaction
+        kk, _ = cur.next_batch(500)
+        if len(kk) == 0:
+            break
+        got_k.append(kk)
+    np.testing.assert_array_equal(np.concatenate(got_k), pre_k)
+    # a fresh snapshot scan of the old version also matches row-for-row
+    k_old, v_old = snap.scan(0, 10_000)
+    np.testing.assert_array_equal(k_old, pre_k)
+    np.testing.assert_array_equal(v_old, pre_v)
+
+    cur.close()
+    snap.close()  # last pin drops -> exclusively-owned files reclaimed
+    on_disk = set(os.listdir(os.path.join(root, "tables")))
+    assert on_disk == {n for n in current if n.endswith(".sst")}
+
+    # live store + recovery round-trip reflect the post-flush state
+    k_live, _ = db.scan(0, 20_000)
+    db.close()
+    db2 = RemixDB.open(root, cfg)
+    k_rec, _ = db2.scan(0, 20_000)
+    np.testing.assert_array_equal(k_rec, k_live)
+    assert db2.get(int(keys[1000])) is None  # the delete survived
+
+
+def test_snapshot_taken_mid_flush_sees_pre_flush_state(tmp_path, monkeypatch):
+    """A snapshot captured *during* a flush — after the MemTable freeze
+    but before the new Version publishes — must still observe the full
+    pre-flush contents: the frozen entries overlay the old Version until
+    the pointer swap."""
+    import repro.db.store as S
+
+    db = RemixDB(_cfg(tmp_path))
+    keys = np.arange(0, 500, 5, dtype=np.uint64)
+    _fill(db, keys)
+    db.delete(10)
+    pre_k, pre_v = db.scan(0, 10_000)
+    grabbed = {}
+    real_execute = S.execute
+
+    def spy(plan, cfg, storage=None):
+        if "snap" not in grabbed:  # mid-flush: frozen, not yet published
+            grabbed["snap"] = db.snapshot()
+        return real_execute(plan, cfg, storage=storage)
+
+    monkeypatch.setattr(S, "execute", spy)
+    db.flush()
+    with grabbed["snap"] as snap:
+        kk, vv = snap.scan(0, 10_000)
+        np.testing.assert_array_equal(kk, pre_k)
+        np.testing.assert_array_equal(vv, pre_v)
+        assert snap.get(10) is None  # the pre-flush delete holds
+    # post-flush reads are unaffected
+    kk, _ = db.scan(0, 10_000)
+    np.testing.assert_array_equal(kk, pre_k)
+
+
+# ---------------------------------------------------------------- ring log
+def test_compaction_log_ring_and_totals(tmp_path):
+    cfg = _cfg(tmp_path, memtable_entries=400, compaction_log_rounds=4)
+    cfg.compaction = CompactionConfig(table_cap=128, t_max=4)
+    db = RemixDB(cfg)
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        ks = rng.choice(50_000, size=400, replace=False).astype(np.uint64)
+        db.put_batch(ks, np.zeros((400, 2), np.uint32))
+        db.flush()
+    assert len(db.compaction_log) == 4  # ring: only the last N rounds
+    st = db.stats()["compaction"]
+    assert st["rounds"] == 10 and st["log_rounds"] == 4
+    assert sum(st["kinds"].values()) >= 10  # aggregates span all rounds
+    assert st["bytes_written"] > 0
+
+
+# ---------------------------------------------------------------- promotion
+def test_promotion_driven_by_served_workload(tmp_path):
+    """A partition whose working set the block cache fully absorbs must
+    still promote under traffic: the served-bytes counter keeps growing
+    on cache hits while the physical disk counter stalls."""
+    from repro.core.remix import build_remix
+    from repro.core.runs import make_run
+    from repro.db.wal import WAL
+    from repro.io.manifest import Storage
+
+    root = str(tmp_path / "db")
+    n = 60_000
+    keys = np.arange(1, n + 1, dtype=np.uint64) * 8
+    run = make_run(keys, seq=np.arange(1, n + 1, dtype=np.uint32))
+    storage = Storage(root)
+    name = storage.write_table(
+        np.asarray(run.keys), np.asarray(run.vals),
+        np.asarray(run.seq), np.asarray(run.tomb),
+    )
+    remix, _ = build_remix([run], d=32)
+    xname = storage.write_remix(remix)
+    storage.commit(dict(
+        seq=n + 1, vw=2, d=32,
+        partitions=[dict(lo=0, tables=[name], remix=xname)],
+        wal=WAL(storage.wal_path()).save_state(),
+    ))
+    # promote_fraction high so the store stays cold while we hammer it
+    db = RemixDB.open(root, _cfg(promote_fraction=1e9))
+    [p] = db.partitions
+    start = int(keys[n // 2])
+    for _ in range(40):  # same range: cache hits after the first pass
+        kk, _ = db.scan(start, 500)
+        assert len(kk) == 500
+    frac = 0.3
+    inputs = p.promotion_inputs(frac)
+    assert inputs["served_bytes"] >= inputs["threshold_bytes"]
+    assert inputs["disk_bytes"] < inputs["threshold_bytes"]  # cache absorbed
+    assert inputs["promote"] and p.should_promote(frac)
+    # the decision inputs are exposed through stats()["cache"]
+    st = db.stats()["cache"]["promotion"]
+    assert len(st) == 1 and st[0]["cold_scans"] >= 40
+    assert st[0]["served_bytes"] == inputs["served_bytes"]
+    assert db.stats()["resident_tables"] == 0  # still cold at 1e9 fraction
+
+
+# ---------------------------------------------------------------- property
+def test_snapshot_semantics_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    op = st.tuples(
+        st.booleans(),  # True = put, False = delete
+        st.integers(min_value=0, max_value=40),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        pre=st.lists(op, max_size=40),
+        post=st.lists(op, max_size=25),
+        flush_mid_pre=st.booleans(),
+    )
+    def run(pre, post, flush_mid_pre):
+        db = RemixDB(_cfg(tempfile.mkdtemp(prefix="snapprop-")))
+        ref: dict[int, int] = {}
+        for i, (is_put, k, v) in enumerate(pre):
+            if is_put:
+                db.put(k, [v, 0])
+                ref[k] = v
+            else:
+                db.delete(k)
+                ref.pop(k, None)
+            if flush_mid_pre and i == len(pre) // 2:
+                db.flush()  # part of the view in tables, part in overlay
+        want_k = np.array(sorted(ref), np.uint64)
+        with db.snapshot() as snap:
+            for is_put, k, v in post:
+                (db.put(k, [v, 0]) if is_put else db.delete(k))
+            db.flush()
+            # the snapshot observes exactly the pre-flush contents
+            kk, vv = snap.scan(0, 1000)
+            np.testing.assert_array_equal(kk, want_k)
+            if len(kk):
+                np.testing.assert_array_equal(
+                    vv[:, 0], [ref[int(k)] for k in kk]
+                )
+            # batched == scalar == cursor on the same snapshot
+            probes = np.arange(0, 42, dtype=np.uint64)
+            fb, vb = snap.get_batch(probes)
+            for i, k in enumerate(probes.tolist()):
+                v = snap.get(k)
+                assert bool(fb[i]) == (v is not None)
+                if v is not None:
+                    assert int(vb[i, 0]) == int(v[0]) == ref.get(k, -1)
+            with snap.cursor() as cur:
+                ck, cv = cur.next_batch(1000)
+            np.testing.assert_array_equal(ck, kk)
+            np.testing.assert_array_equal(cv, vv)
+        # the live store reflects the post ops
+        live: dict[int, int] = dict(ref)
+        for is_put, k, v in post:
+            live[k] = v if is_put else None
+        for k, v in live.items():
+            got = db.get(k)
+            assert (got is None) == (v is None)
+            if v is not None:
+                assert int(got[0]) == v
+
+    run()
