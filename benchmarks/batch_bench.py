@@ -16,6 +16,12 @@ adapted to block-granular I/O, plus the Fig 10 value-block pipeline):
 - **prefetch**: cold scans with ``prefetch_depth > 0`` must read no more
   value blocks than the eager path (equal ``disk_bytes_read``) while
   reporting pipeline hit/waste counters.
+- **ckb decoder**: batched seeks resolving keys from the prefix-
+  compressed CKB entry stream (``ckb_decode``, default) must return
+  bit-identical results while reading strictly fewer physical bytes
+  than the fixed-width keys-section path (asserted on the full-size
+  store; the tiny store's sections share 64 KB granules, so there the
+  bar is "no extra bytes").
 
 Also emits ``BENCH_queries.json`` (cold/warm get + scan throughput at
 batch 1/64/256) — the perf trajectory file CI's smoke job keeps
@@ -160,6 +166,33 @@ def bench_prefetch_scan(root: str, domain: np.ndarray, csv: CSV):
     )
 
 
+def bench_ckb_decoder(root: str, domain: np.ndarray, csv: CSV,
+                      strict: bool, q: int = 256) -> float:
+    """Vectorized CKB entry-stream decoder: same results, fewer bytes."""
+    rng = np.random.default_rng(23)
+    probes = _probe(domain, rng, q)
+    db_on = RemixDB.open(root, _cold_cfg())
+    db_off = RemixDB.open(root, _cold_cfg(ckb_decode=False))
+    f1, v1 = db_on.get_batch(probes)
+    f0, v0 = db_off.get_batch(probes)
+    if not (np.array_equal(f1, f0) and np.array_equal(v1, v0)):
+        raise AssertionError(
+            "CKB-decoded seeks disagree with keys-section seeks"
+        )
+    b_on, b_off = db_on.disk_bytes_read(), db_off.disk_bytes_read()
+    if b_on > b_off or (strict and b_on >= b_off):
+        raise AssertionError(
+            f"CKB entry-stream decoder saved no bytes: "
+            f"{b_on} vs {b_off} (keys-section path)"
+        )
+    savings = 1 - b_on / max(b_off, 1)
+    csv.emit(
+        "batch_ckb_decoder", 0.0,
+        f"bytes_decode={b_on};bytes_fixed={b_off};savings={savings:.1%}",
+    )
+    return savings
+
+
 def bench_query_matrix(root: str, domain: np.ndarray) -> list[dict]:
     """Cold/warm get + scan throughput at batch 1/64/256 (JSON rows)."""
     rng = np.random.default_rng(17)
@@ -198,6 +231,7 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
         speedup = bench_multiget(root, domain, csv)
         bench_coalescing(root, domain, csv)
         bench_prefetch_scan(root, domain, csv)
+        savings = bench_ckb_decoder(root, domain, csv, strict=not tiny)
         matrix = bench_query_matrix(root, domain)
     csv.emit(
         "batch_summary", 0.0,
@@ -216,6 +250,7 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
                 store=dict(r_tables=r_tables, n_per_table=n_per_table),
                 scan_n=SCAN_N,
                 multiget_speedup_at_256=round(speedup, 2),
+                ckb_decode_savings=round(savings, 3),
                 queries=matrix,
             ),
             f,

@@ -22,6 +22,7 @@ def main() -> None:
         batch_bench,
         cache_bench,
         cursor_bench,
+        engine_bench,
         fig11_queries,
         fig13_groupsize,
         fig14_16_stores,
@@ -45,6 +46,8 @@ def main() -> None:
         "batch": batch_bench.run,
         # streaming cursor vs re-seeking scans (results/BENCH_cursor.json)
         "cursor": cursor_bench.run,
+        # typed op batches through submit() (results/BENCH_engine.json)
+        "engine": engine_bench.run,
     }
     if args.only:
         names = args.only.split(",")

@@ -138,13 +138,14 @@ def seek(remix: Remix, runset: RunSet, queries: jnp.ndarray, ingroup: str = "vec
     return jnp.minimum(g * remix.d + s, remix.n_slots)
 
 
-@partial(jax.jit, static_argnames=("width", "ingroup"))
+@partial(jax.jit, static_argnames=("width", "ingroup", "with_vals"))
 def scan(
     remix: Remix,
     runset: RunSet,
     queries: jnp.ndarray,
     width: int,
     ingroup: str = "vector",
+    with_vals: bool = True,
 ):
     """Seek + retrieve ``width`` consecutive view slots per query.
 
@@ -152,9 +153,14 @@ def scan(
     masks placeholders, old versions, tombstones and end-of-view; the next
     operation itself performs **no key comparisons** — it is a pure decode
     of the persisted selectors (paper §3.3).
+
+    ``with_vals=False`` returns None for vals — callers that only need
+    the key stream (e.g. ``scan_batch``'s (keys, valid) shape) drop the
+    value gather entirely (XLA dead-code-eliminates it).
     """
     pos = seek(remix, runset, queries, ingroup=ingroup)
-    return (*gather_view(remix, runset, pos, width), pos)
+    keys, vals, valid = gather_view(remix, runset, pos, width)
+    return keys, (vals if with_vals else None), valid, pos
 
 
 @partial(jax.jit, static_argnames=("width",))

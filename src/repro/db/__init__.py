@@ -6,10 +6,22 @@
   - compaction: abort / minor / major / split procedures (§4.2)
   - version:    immutable refcounted Versions + pinned Snapshots (MVCC)
   - cursor:     RemixCursor — §3.2 seek/peek/next/skip over a snapshot
+  - ops:        typed operation model (Op / Batch / OpResult, API v2)
+  - executor:   planner–executor behind submit(): admission, deadlines,
+                cross-shard fan-out, async futures
   - store:      the RemixDB public API
   - sstable:    baseline SSTable metadata (block index + bloom filters)
   - baseline:   LevelDB-like leveled / tiered comparison stores
 """
 from repro.db.cursor import RemixCursor  # noqa: F401
+from repro.db.executor import Executor  # noqa: F401
+from repro.db.ops import (  # noqa: F401
+    Batch,
+    BatchResult,
+    Op,
+    OpKind,
+    OpResult,
+    OpStatus,
+)
 from repro.db.store import RemixDB, RemixDBConfig  # noqa: F401
 from repro.db.version import Snapshot, Version, VersionSet  # noqa: F401

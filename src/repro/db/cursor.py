@@ -38,7 +38,7 @@ class RemixCursor:
     """Merged-view iterator over a :class:`repro.db.version.Snapshot`."""
 
     def __init__(self, snapshot, width: int = 64,
-                 owns_snapshot: bool = False):
+                 owns_snapshot: bool = False, interrupt=None):
         if width < 1:
             raise ValueError("cursor width must be >= 1")
         self.snap = snapshot
@@ -46,6 +46,10 @@ class RemixCursor:
         self.base_width = int(width)
         self.vw = self.store.cfg.vw
         self._owns = owns_snapshot
+        # cooperative cancellation hook (op layer): called once per
+        # window pull; raising aborts the fill — a deadline-bounded scan
+        # stops mid-stream instead of draining the whole range
+        self._interrupt = interrupt
         # buffered live entries, as (keys, vals) array chunks: windows
         # with no interleaving overlay entries pass through zero-copy
         self._chunks: list[tuple[np.ndarray, np.ndarray]] = []
@@ -274,6 +278,8 @@ class RemixCursor:
         is exhausted."""
         parts = self.snap.partitions
         while self._buffered < n and not self._done:
+            if self._interrupt is not None:
+                self._interrupt()
             if self._pi >= len(parts):
                 # every partition drained: flush the overlay tail
                 self._merge_emit(

@@ -1,0 +1,651 @@
+"""Planner–executor for typed op batches: the physical half of the v2 API.
+
+``Executor.submit(batch)`` turns a :class:`repro.db.ops.Batch` into a
+future in three steps:
+
+1. **Admission** — an in-flight byte budget shared by every batch of the
+   engine. Submitters block (backpressure) while the budget is full; an
+   op whose deadline expires while waiting is marked
+   ``DEADLINE_EXCEEDED`` without poisoning the rest of the batch.
+2. **Planning** — ops are split into *stages*: maximal runs of reads and
+   writes in batch order (so a batch is always equivalent to the same
+   ops issued sequentially through the legacy methods). Within a read
+   stage, point lookups (Get + MultiGet fan-out) and scans are routed to
+   their owning shard with the same ``route_host`` arithmetic the store
+   uses internally, and grouped per shard for vectorized execution.
+   MultiGets spanning shards fan out here and fan back in at execution.
+3. **Execution** — a read stage pins **one snapshot per touched shard**
+   (the store's ephemeral pinned view) for its whole duration, then
+   compiles groups onto the engine's physical read primitives:
+   ``_get_batch_at`` (vectorized cold/device point lookups) and
+   ``_scan_group_at`` (vectorized window scans with the
+   :class:`~repro.db.cursor.RemixCursor` fallback). Cross-shard scans
+   drain shards in key order. A write stage routes rows to their owning
+   shard and group-commits each shard's rows through the WAL in one
+   append (``_apply_writes``).
+
+Deadlines are re-checked when each group starts and inside cursor loops
+(the ``interrupt`` hook), so a slow scan can be cut off mid-flight;
+``future.cancel()`` cancels a queued batch outright and cooperatively
+interrupts a running one between groups. Pinned snapshots are released
+in ``finally`` blocks — a cancelled or failed batch never leaks a
+Version pin.
+
+Async submission runs on a small worker pool (daemon threads, started
+lazily); ``submit(batch, sync=True)`` executes inline on the caller
+thread and returns an already-completed future — the mode the legacy
+wrapper methods use, so scalar ``put``/``get`` pay no thread hop.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import contextlib
+import threading
+import time
+import traceback
+
+import numpy as np
+
+from repro.db.ops import (
+    Batch,
+    BatchResult,
+    Op,
+    OpInterrupted,
+    OpKind,
+    OpResult,
+    OpStatus,
+    WRITE_KINDS,
+)
+from repro.db.sharded import route_host
+
+
+def scan_batch_via_ops(engine: "Executor", starts, n: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Legacy ``scan_batch`` shape — (keys (Q, n), valid (Q, n)) — via
+    one keys-only Scan op per start. The single shared body behind
+    ``RemixDB.scan_batch`` and ``KVServeEngine.scan_batch``."""
+    starts = np.asarray(starts, np.uint64)
+    ops = [Op.scan(int(s), int(n), with_vals=False)
+           for s in starts.tolist()]
+    res = engine.submit(Batch(ops), sync=True).result()
+    q = len(starts)
+    out_k = np.zeros((q, n), np.uint64)
+    out_m = np.zeros((q, n), bool)
+    for i, r in enumerate(res.results):
+        r.raise_if_error()
+        kk = r.keys[:n]
+        out_k[i, : len(kk)] = kk
+        out_m[i, : len(kk)] = True
+    return out_k, out_m
+
+
+class BatchFuture(concurrent.futures.Future):
+    """Future for one submitted batch, with cooperative mid-run cancel.
+
+    ``cancel()`` on a still-queued batch cancels it outright (the future
+    raises ``CancelledError``). Once execution has started, ``cancel()``
+    sets :attr:`interrupted` instead: ops not yet executed complete with
+    ``OpStatus.CANCELLED`` and the future still resolves to a
+    :class:`BatchResult`.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.interrupted = threading.Event()
+
+    def cancel(self) -> bool:
+        if super().cancel():
+            return True
+        self.interrupted.set()
+        return False
+
+
+class AdmissionController:
+    """Bounded in-flight bytes with blocking (backpressure) acquire."""
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self.inflight = 0
+        self.peak = 0
+        self.admitted = 0
+        self.waits = 0  # acquires that had to block
+        self._cv = threading.Condition()
+
+    def acquire(self, cost: int, deadline_at: float | None = None) -> bool:
+        """Block until ``cost`` bytes fit in the budget; False when
+        ``deadline_at`` (monotonic) passes first. A batch larger than
+        the whole budget is admitted alone (sole occupancy) so it can
+        never livelock."""
+        cost = int(cost)
+        with self._cv:
+            waited = False
+            while not (
+                self.inflight + cost <= self.max_bytes or self.inflight == 0
+            ):
+                if not waited:
+                    waited = True
+                    self.waits += 1
+                timeout = None
+                if deadline_at is not None:
+                    timeout = deadline_at - time.monotonic()
+                    if timeout <= 0:
+                        return False
+                self._cv.wait(timeout)
+            self.inflight += cost
+            self.peak = max(self.peak, self.inflight)
+            self.admitted += 1
+            return True
+
+    def release(self, cost: int) -> None:
+        with self._cv:
+            self.inflight -= int(cost)
+            self._cv.notify_all()
+
+    def stats(self) -> dict:
+        with self._cv:
+            return dict(
+                max_bytes=self.max_bytes,
+                inflight_bytes=self.inflight,
+                peak_bytes=self.peak,
+                admitted=self.admitted,
+                waits=self.waits,
+            )
+
+
+class _ReadGroup:
+    """Per-(stage, shard) bundle of read work, vectorized at execution."""
+
+    __slots__ = ("shard", "gets", "mgets", "scans", "priority")
+
+    def __init__(self, shard: int):
+        self.shard = shard
+        self.gets: list[int] = []  # op indices
+        # (op_idx, positions into op.keys routed to this shard)
+        self.mgets: list[tuple[int, np.ndarray]] = []
+        # (n, with_vals) -> op indices starting in this shard
+        self.scans: dict[tuple[int, bool], list[int]] = {}
+        self.priority = 0
+
+
+class _Stage:
+    __slots__ = ("kind", "ops", "groups")
+
+    def __init__(self, kind: str):
+        self.kind = kind  # "read" | "write"
+        self.ops: list[int] = []  # op indices in batch order
+        self.groups: dict[int, _ReadGroup] = {}  # shard -> group (reads)
+
+
+class Executor:
+    """Plans and executes op batches over one or more range shards.
+
+    ``shards`` is a list of ``(inclusive lower key bound, store)`` pairs
+    — a single ``RemixDB`` uses ``[(0, db)]``; ``KVServeEngine`` passes
+    its whole shard table so one batch fans out across stores.
+    """
+
+    def __init__(
+        self,
+        shards: list[tuple[int, object]],
+        *,
+        max_inflight_bytes: int = 64 << 20,
+        workers: int = 2,
+    ):
+        if not shards:
+            raise ValueError("Executor needs at least one shard")
+        shards = sorted(shards, key=lambda s: int(s[0]))
+        self.lows = [int(lo) for lo, _ in shards]
+        self.stores = [db for _, db in shards]
+        self.vw = int(self.stores[0].cfg.vw)
+        self.admission = AdmissionController(max_inflight_bytes)
+        self._n_workers = max(1, int(workers))
+        self._queue: list = []
+        self._qcv = threading.Condition()
+        self._threads: list[threading.Thread] = []
+        self._closed = False
+        self._lock = threading.Lock()
+        self._counts = dict(
+            batches=0, completed=0, cancelled_batches=0,
+            ops=dict((k.value, 0) for k in OpKind),
+            deadline_exceeded=0, cancelled_ops=0, errors=0,
+        )
+
+    # ---------------- submission ----------------
+    def submit(self, batch: Batch | list, *, sync: bool = False
+               ) -> BatchFuture:
+        """Admit + enqueue ``batch``; returns a future resolving to a
+        :class:`BatchResult`. With ``sync=True`` the batch executes
+        inline on the calling thread (the future returned is already
+        done) — identical semantics, no thread hop."""
+        if isinstance(batch, (list, tuple)):
+            batch = Batch(list(batch))
+        if self._closed and not sync:
+            # close() only retires the async worker pool; synchronous
+            # submission (and with it every legacy wrapper) keeps
+            # working, matching the stores' own close-then-read contract
+            raise RuntimeError("executor is closed to async submissions")
+        now = time.monotonic()
+        deadlines = [
+            None if op.deadline_ms is None else now + op.deadline_ms / 1e3
+            for op in batch.ops
+        ]
+        with self._lock:
+            self._counts["batches"] += 1
+            for op in batch.ops:
+                self._counts["ops"][op.kind.value] += 1
+        fut = BatchFuture()
+        results: list[OpResult | None] = [None] * len(batch.ops)
+        t0 = time.monotonic()
+        cost = self._admit(batch, deadlines, results)
+        wait_s = time.monotonic() - t0
+        if all(r is not None for r in results):  # every op expired waiting
+            self._finish(fut, batch, results, cost, wait_s, started=False)
+            return fut
+        if sync:
+            self._run(fut, batch, deadlines, results, cost, wait_s)
+            return fut
+        with self._qcv:
+            self._ensure_workers()
+            self._queue.append((fut, batch, deadlines, results, cost, wait_s))
+            self._qcv.notify()
+        return fut
+
+    def execute(self, batch: Batch | list) -> BatchResult:
+        """Synchronous convenience: ``submit(batch, sync=True).result()``."""
+        return self.submit(batch, sync=True).result()
+
+    def _admit(self, batch, deadlines, results) -> int:
+        """Admission loop: blocks for budget; ops whose deadline passes
+        while waiting are individually expired and give their bytes
+        back. Returns the admitted cost (of still-live ops)."""
+        while True:
+            live = [i for i, r in enumerate(results) if r is None]
+            cost = sum(batch.ops[i].cost_bytes(self.vw) for i in live)
+            if not live:
+                return 0
+            dls = [deadlines[i] for i in live if deadlines[i] is not None]
+            earliest = min(dls) if dls else None
+            if self.admission.acquire(cost, earliest):
+                return cost
+            # earliest deadline fired while queued: expire what's due,
+            # then retry admission with the slimmer batch
+            now = time.monotonic()
+            for i in live:
+                if deadlines[i] is not None and deadlines[i] <= now:
+                    results[i] = OpResult(status=OpStatus.DEADLINE_EXCEEDED)
+
+    # ---------------- worker pool ----------------
+    def _ensure_workers(self) -> None:
+        while len(self._threads) < self._n_workers:
+            t = threading.Thread(target=self._worker, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _worker(self) -> None:
+        while True:
+            with self._qcv:
+                while not self._queue and not self._closed:
+                    self._qcv.wait()
+                if not self._queue:
+                    return  # closed + drained
+                job = self._queue.pop(0)
+            fut, batch, deadlines, results, cost, wait_s = job
+            if not fut.set_running_or_notify_cancel():
+                # cancelled while queued: give the bytes back, count ops
+                self.admission.release(cost)
+                with self._lock:
+                    self._counts["cancelled_batches"] += 1
+                continue
+            self._run(fut, batch, deadlines, results, cost, wait_s,
+                      mark_running=False)
+
+    def _run(self, fut, batch, deadlines, results, cost, wait_s,
+             mark_running=True) -> None:
+        if mark_running and not fut.set_running_or_notify_cancel():
+            self.admission.release(cost)
+            with self._lock:
+                self._counts["cancelled_batches"] += 1
+            return
+        try:
+            self._execute(fut, batch, deadlines, results)
+        except BaseException as e:  # plan-level failure: fail leftover ops
+            for i, r in enumerate(results):
+                if r is None:
+                    results[i] = OpResult(status=OpStatus.ERROR,
+                                          error=repr(e), exc=e)
+            traceback.print_exc()
+        self._finish(fut, batch, results, cost, wait_s, started=True)
+
+    def _finish(self, fut, batch, results, cost, wait_s, started) -> None:
+        self.admission.release(cost)
+        stats = self._batch_stats(batch, results, wait_s, started)
+        with self._lock:
+            self._counts["completed"] += 1
+            self._counts["deadline_exceeded"] += stats["deadline_exceeded"]
+            self._counts["cancelled_ops"] += stats["cancelled"]
+            self._counts["errors"] += stats["errors"]
+        if fut.cancelled():
+            return  # raced a queue-level cancel
+        fut.set_result(BatchResult(list(results), stats))
+
+    def _batch_stats(self, batch, results, wait_s, started) -> dict:
+        by_status: dict[str, int] = {}
+        for r in results:
+            by_status[r.status.value] = by_status.get(r.status.value, 0) + 1
+        kinds: dict[str, int] = {}
+        for op in batch.ops:
+            kinds[op.kind.value] = kinds.get(op.kind.value, 0) + 1
+        return dict(
+            ops=len(batch.ops),
+            kinds=kinds,
+            status=by_status,
+            executed=bool(started),
+            admission_wait_s=round(wait_s, 6),
+            deadline_exceeded=by_status.get("deadline_exceeded", 0),
+            cancelled=by_status.get("cancelled", 0),
+            errors=by_status.get("error", 0),
+        )
+
+    # ---------------- planning ----------------
+    def plan(self, batch: Batch) -> list[_Stage]:
+        """Split ops into read/write stages and route read work to
+        shards. Public for introspection and tests; execution consumes
+        exactly this structure."""
+        stages: list[_Stage] = []
+        for i, op in enumerate(batch.ops):
+            kind = "write" if op.kind in WRITE_KINDS else "read"
+            if not stages or stages[-1].kind != kind:
+                stages.append(_Stage(kind))
+            st = stages[-1]
+            st.ops.append(i)
+            if kind != "read":
+                continue
+            if op.kind is OpKind.GET:
+                g = self._group(st, self._route_one(op.key))
+                g.gets.append(i)
+                g.priority = max(g.priority, op.priority)
+            elif op.kind is OpKind.MULTIGET:
+                if len(op.keys) == 0:
+                    # empty fan-out still needs a home so the op
+                    # resolves to an empty OK result
+                    g = self._group(st, 0)
+                    g.mgets.append((i, np.zeros(0, np.int64)))
+                    continue
+                if len(self.lows) == 1:
+                    sids = np.zeros(len(op.keys), np.int64)
+                else:
+                    sids = route_host(self.lows, op.keys)
+                for s in np.unique(sids):
+                    g = self._group(st, int(s))
+                    g.mgets.append((i, np.flatnonzero(sids == s)))
+                    g.priority = max(g.priority, op.priority)
+            else:  # SCAN: starts in its owning shard, may drain onward
+                g = self._group(st, self._route_one(op.start))
+                g.scans.setdefault((op.n, op.with_vals), []).append(i)
+                g.priority = max(g.priority, op.priority)
+        return stages
+
+    def _group(self, stage: _Stage, shard: int) -> _ReadGroup:
+        g = stage.groups.get(shard)
+        if g is None:
+            g = stage.groups[shard] = _ReadGroup(shard)
+        return g
+
+    def _route_one(self, key: int) -> int:
+        if len(self.lows) == 1:
+            return 0
+        return int(route_host(self.lows, np.array([key], np.uint64))[0])
+
+    # ---------------- execution ----------------
+    def _execute(self, fut, batch, deadlines, results) -> None:
+        for stage in self.plan(batch):
+            if stage.kind == "write":
+                self._exec_write_stage(fut, batch, deadlines, results, stage)
+            else:
+                self._exec_read_stage(fut, batch, deadlines, results, stage)
+
+    def _precheck(self, fut, deadlines, results, idxs) -> list[int]:
+        """Mark cancelled/expired ops among ``idxs``; return survivors."""
+        now = time.monotonic()
+        out = []
+        for i in idxs:
+            if results[i] is not None:
+                continue
+            if fut.interrupted.is_set():
+                results[i] = OpResult(status=OpStatus.CANCELLED)
+            elif deadlines[i] is not None and deadlines[i] <= now:
+                results[i] = OpResult(status=OpStatus.DEADLINE_EXCEEDED)
+            else:
+                out.append(i)
+        return out
+
+    def _interrupt_for(self, fut, deadline_at):
+        """Cooperative checker threaded into cursor loops (mid-op
+        deadline/cancel), or None when the op can't be interrupted."""
+        if deadline_at is None:
+            def check():
+                if fut.interrupted.is_set():
+                    raise OpInterrupted(OpStatus.CANCELLED)
+        else:
+            def check():
+                if fut.interrupted.is_set():
+                    raise OpInterrupted(OpStatus.CANCELLED)
+                if time.monotonic() > deadline_at:
+                    raise OpInterrupted(OpStatus.DEADLINE_EXCEEDED)
+        return check
+
+    # ---- writes ----
+    def _exec_write_stage(self, fut, batch, deadlines, results, stage):
+        live = self._precheck(fut, deadlines, results, stage.ops)
+        if not live:
+            return
+        # rows per shard, in op order (cross-shard keys are disjoint, so
+        # per-shard order equals the sequential legacy order)
+        per: dict[int, list[tuple[np.ndarray, np.ndarray, bool]]] = {}
+        for i in live:
+            op = batch.ops[i]
+            tomb = op.kind is OpKind.DELETE
+            if op.keys is None:
+                keys = np.array([op.key], np.uint64)
+                vals = (
+                    np.zeros((1, self.vw), np.uint32)
+                    if tomb
+                    else np.asarray(op.val, np.uint32).reshape(1, self.vw)
+                )
+            else:
+                keys = np.asarray(op.keys, np.uint64)
+                vals = (
+                    np.zeros((len(keys), self.vw), np.uint32)
+                    if tomb or op.val is None
+                    else np.asarray(op.val, np.uint32).reshape(
+                        len(keys), self.vw
+                    )
+                )
+            if len(self.lows) == 1:
+                per.setdefault(0, []).append((keys, vals, tomb))
+            else:
+                sids = route_host(self.lows, keys)
+                for s in np.unique(sids):
+                    m = sids == s
+                    per.setdefault(int(s), []).append(
+                        (keys[m], vals[m], tomb)
+                    )
+        try:
+            for shard in sorted(per):
+                chunks = per[shard]
+                keys = np.concatenate([c[0] for c in chunks])
+                vals = np.concatenate([c[1] for c in chunks])
+                tombs = np.concatenate(
+                    [np.full(len(c[0]), c[2], bool) for c in chunks]
+                )
+                # one WAL group commit + MemTable apply per shard
+                self.stores[shard]._apply_writes(keys, vals, tombs)
+        except Exception as e:
+            for i in live:
+                results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
+            return
+        for i in live:
+            results[i] = OpResult(status=OpStatus.OK)
+
+    # ---- reads ----
+    def _exec_read_stage(self, fut, batch, deadlines, results, stage):
+        groups = sorted(
+            stage.groups.values(), key=lambda g: (-g.priority, g.shard)
+        )
+        # one pinned snapshot per touched shard, held for the whole stage
+        # (scan drains pin follow-on shards through the same table)
+        with contextlib.ExitStack() as stack:
+            views: dict[int, object] = {}
+
+            def view(shard: int):
+                v = views.get(shard)
+                if v is None:
+                    v = stack.enter_context(self.stores[shard]._view())
+                    views[shard] = v
+                return v
+
+            # MultiGet fan-in buffers: op_idx -> (found, vals)
+            mg: dict[int, list] = {}
+            for g in groups:
+                self._exec_points(fut, batch, deadlines, results, g, view, mg)
+                self._exec_scans(fut, batch, deadlines, results, g, view)
+            for i, (found, vals) in mg.items():
+                if results[i] is None:
+                    results[i] = OpResult(
+                        status=OpStatus.OK, found=found, vals=vals
+                    )
+
+    def _exec_points(self, fut, batch, deadlines, results, g, view, mg):
+        gets = self._precheck(fut, deadlines, results, g.gets)
+        mgets = [
+            (i, pos)
+            for i, pos in g.mgets
+            if results[i] is None
+            and self._precheck(fut, deadlines, results, [i])
+        ]
+        keys: list[np.ndarray] = []
+        for i in gets:
+            keys.append(np.array([batch.ops[i].key], np.uint64))
+        for i, pos in mgets:
+            if i not in mg:
+                q = len(batch.ops[i].keys)
+                mg[i] = [np.zeros(q, bool),
+                         np.zeros((q, self.vw), np.uint32)]
+            keys.append(np.asarray(batch.ops[i].keys, np.uint64)[pos])
+        if not keys:
+            return
+        if len(gets) == 1 and not mgets and len(keys[0]) == 1:
+            # lone point lookup: the scalar read path (same results as the
+            # batched one — tested — but with the bounded per-key byte
+            # profile legacy ``db.get`` had)
+            i = gets[0]
+            try:
+                val = self.stores[g.shard]._get_at(
+                    view(g.shard), batch.ops[i].key
+                )
+            except Exception as e:
+                results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
+                return
+            results[i] = OpResult(
+                status=OpStatus.OK, found=val is not None, value=val
+            )
+            return
+        qk = np.concatenate(keys)
+        try:
+            found, vals = self.stores[g.shard]._get_batch_at(view(g.shard), qk)
+        except Exception as e:
+            for i in gets:
+                results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
+            for i, _ in mgets:
+                results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
+            return
+        off = 0
+        for i in gets:
+            results[i] = OpResult(
+                status=OpStatus.OK,
+                found=bool(found[off]),
+                value=vals[off].copy() if found[off] else None,
+            )
+            off += 1
+        for i, pos in mgets:
+            m = len(pos)
+            mg[i][0][pos] = found[off : off + m]
+            mg[i][1][pos] = vals[off : off + m]
+            off += m
+
+    def _exec_scans(self, fut, batch, deadlines, results, g, view):
+        for (n, with_vals), idxs in g.scans.items():
+            live = self._precheck(fut, deadlines, results, idxs)
+            if not live:
+                continue
+            starts = np.array(
+                [batch.ops[i].start for i in live], np.uint64
+            )
+            checks = [
+                self._interrupt_for(fut, deadlines[i]) for i in live
+            ]
+            try:
+                rows = self.stores[g.shard]._scan_group_at(
+                    view(g.shard), starts, n,
+                    with_vals=with_vals, interrupts=checks,
+                )
+            except Exception as e:
+                for i in live:
+                    results[i] = OpResult(status=OpStatus.ERROR,
+                                          error=repr(e), exc=e)
+                continue
+            for i, row in zip(live, rows):
+                if isinstance(row, OpInterrupted):
+                    results[i] = OpResult(status=row.status)
+                    continue
+                kk, vv = row
+                try:
+                    kk, vv = self._drain_scan(
+                        fut, deadlines[i], g.shard, kk, vv, n, with_vals,
+                        view,
+                    )
+                except OpInterrupted as e:
+                    results[i] = OpResult(status=e.status)
+                    continue
+                except Exception as e:
+                    results[i] = OpResult(status=OpStatus.ERROR,
+                                          error=repr(e), exc=e)
+                    continue
+                results[i] = OpResult(status=OpStatus.OK, keys=kk, vals=vv)
+
+    def _drain_scan(self, fut, deadline_at, shard, kk, vv, n, with_vals,
+                    view):
+        """Cross-shard fan-out of one scan: drain follow-on shards in key
+        order until ``n`` rows (the serve engine's legacy drain rule)."""
+        si = shard + 1
+        check = self._interrupt_for(fut, deadline_at)
+        while len(kk) < n and si < len(self.stores):
+            check()
+            k2, v2 = self.stores[si]._scan_at(
+                view(si), self.lows[si], n - len(kk), interrupt=check
+            )
+            kk = np.concatenate([kk, k2])
+            if with_vals:
+                vv = np.concatenate([vv, v2])
+            si += 1
+        return kk, vv
+
+    # ---------------- lifecycle / stats ----------------
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting batches; drain the async queue (``wait``)."""
+        with self._qcv:
+            self._closed = True
+            self._qcv.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join()
+
+    def stats(self) -> dict:
+        with self._lock, self._qcv:
+            out = dict(self._counts)
+            out["ops"] = dict(self._counts["ops"])
+            out["queue_depth"] = len(self._queue)
+            out["workers"] = len(self._threads)
+        out["admission"] = self.admission.stats()
+        out["shards"] = len(self.stores)
+        return out

@@ -102,6 +102,7 @@ class Table:
         tomb: np.ndarray | None = None,  # (N,) bool
         path: str | None = None,
         cache_mode: str = "copy",
+        ckb_decode: bool = True,
     ):
         if keys is None and path is None:
             raise ValueError("Table needs in-memory arrays or a file path")
@@ -109,14 +110,18 @@ class Table:
         self._seq, self._tomb = seq, tomb
         self.path = path
         self.cache_mode = cache_mode
+        # batched seeks decode the prefix-compressed CKB entry stream
+        # (vectorized) instead of reading fixed-width key rows
+        self.ckb_decode = ckb_decode
         self._reader = None
         self._cache = None
         self._ckb = None
         self._n: int | None = None if keys is None else len(keys)
 
     @classmethod
-    def from_file(cls, path: str, cache_mode: str = "copy") -> "Table":
-        return cls(path=path, cache_mode=cache_mode)
+    def from_file(cls, path: str, cache_mode: str = "copy",
+                  ckb_decode: bool = True) -> "Table":
+        return cls(path=path, cache_mode=cache_mode, ckb_decode=ckb_decode)
 
     def __repr__(self) -> str:
         # must not force-load a lazy handle: report only what is resident
@@ -215,28 +220,53 @@ class Table:
         for bi in rd.section_row_blocks(section, lo, hi):
             rd.prefetch_block(bi)
 
-    def seek_rows_batch(self, qs: np.ndarray, los, his) -> np.ndarray:
+    def seek_rows_batch(self, qs: np.ndarray, los, his,
+                        return_keys: bool = False):
         """Lower bounds of ``qs`` (Q,) u64 within per-query row ranges.
 
         The batched counterpart of :meth:`seek_row`, same results, no
         per-query binary search: the CKB's restart keys narrow every
         query to one restart interval in a single vectorized pass
-        (:meth:`repro.io.ckb.CKBReader.narrow_batch`), the narrowed
-        fixed-width key rows are fetched with ranges merged across the
-        whole batch (each granule once), and one ``np.searchsorted``
-        over the concatenated rows resolves every query. Clipping the
-        global candidate row into each query's narrowed range is exact
-        because keys ascend with row number.
+        (:meth:`repro.io.ckb.CKBReader.narrow_batch`), then the narrowed
+        intervals are resolved — by default straight from the
+        prefix-compressed entry stream (the vectorized
+        :meth:`repro.io.ckb.CKBReader.seek_batch` decoder: zero
+        keys-section bytes), or, with ``ckb_decode`` off / no usable
+        CKB, by fetching the narrowed fixed-width key rows with ranges
+        merged across the whole batch and one ``np.searchsorted``.
+        Clipping the candidate row into each query's narrowed range is
+        exact because keys ascend with row number.
+
+        With ``return_keys`` the result is ``(rows, keyat, known)``:
+        where ``known[i]``, ``keyat[i]`` is the key at ``rows[i]`` —
+        point lookups verify hits with zero extra key fetches on the
+        decoder path (the fallback path reports nothing as known).
+
+        The entry-stream decoder only runs when the caller wants the
+        keys (``return_keys``): there the decode replaces *two* keys-
+        section reads (seek + hit verification). Seek-only callers
+        (the scan paths, which must read the keys section anyway to
+        emit rows) keep the cheaper narrow + scattered-fetch resolve.
         """
         qs = np.asarray(qs, np.uint64)
         los = np.maximum(np.asarray(los, np.int64), 0)
         his = np.minimum(np.asarray(his, np.int64), self.n)
         out = his.copy()
+        keyat = np.zeros(len(qs), np.uint64)
+        known = np.zeros(len(qs), bool)
         act = his > los
         if not act.any():
-            return out
-        nlo, nhi = los.copy(), his.copy()
+            return (out, keyat, known) if return_keys else out
         ckb = self.ckb()
+        if (ckb is not None and ckb.kb == 8 and self.ckb_decode
+                and return_keys):
+            nlo, nhi = ckb.narrow_batch(qs[act], los[act], his[act])
+            rows, ka, kn = ckb.seek_batch(qs[act], nlo, nhi)
+            out[act] = rows
+            keyat[act] = ka
+            known[act] = kn
+            return (out, keyat, known) if return_keys else out
+        nlo, nhi = los.copy(), his.copy()
         if ckb is not None and ckb.kb == 8:
             nlo[act], nhi[act] = ckb.narrow_batch(qs[act], los[act], his[act])
         mlo, mhi = merge_ranges_np(nlo[act], nhi[act])
@@ -248,7 +278,8 @@ class Table:
             hit, rows_cat[np.minimum(idx, len(rows_cat) - 1)],
             np.iinfo(np.int64).max,
         )
-        return np.where(act, np.clip(cand, nlo, nhi), his)
+        out = np.where(act, np.clip(cand, nlo, nhi), his)
+        return (out, keyat, known) if return_keys else out
 
     @property
     def keys(self) -> np.ndarray:
@@ -631,8 +662,12 @@ class Partition:
         nrun = len(self.tables)
         g, cur, nxt = self._group_bounds_batch(hx, keys)
         rows = np.empty((q, nrun), np.int64)
+        keyat = np.empty((q, nrun), np.uint64)
+        known = np.empty((q, nrun), bool)
         for r, t in enumerate(self.tables):
-            rows[:, r] = t.seek_rows_batch(keys, cur[:, r], nxt[:, r])
+            rows[:, r], keyat[:, r], known[:, r] = t.seek_rows_batch(
+                keys, cur[:, r], nxt[:, r], return_keys=True
+            )
         s = (rows - cur).sum(axis=1)
         pos = g * d + s
         ok = (s < d) & (pos < n_slots)
@@ -647,7 +682,14 @@ class Partition:
             t = self.tables[r]
             m = ok & (run == r)
             rr = row[m]
-            match = t.keys_u64_rows(rr) == keys[m]
+            # hit verification: keys the CKB decoder already resolved
+            # cost nothing; only unresolved rows (decoder off / no CKB)
+            # fall back to a fixed-width keys-section fetch
+            kn = known[m, r]
+            match = np.empty(len(rr), bool)
+            match[kn] = keyat[m, r][kn] == keys[m][kn]
+            if (~kn).any():
+                match[~kn] = t.keys_u64_rows(rr[~kn]) == keys[m][~kn]
             qi = np.flatnonzero(m)[match]
             rv = rr[match]
             if not len(qi):

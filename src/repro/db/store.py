@@ -20,6 +20,18 @@ only when their last Version unpins. All scans run through
 merged (overlay + cold + promoted) view — ``scan``/``scan_batch`` are
 thin wrappers, and streaming consumers can hold one cursor instead of
 re-seeking per chunk.
+
+Operation layer (API v2): the typed entry point is
+:meth:`RemixDB.submit` — build a :class:`repro.db.ops.Batch` of
+Get/MultiGet/Scan/Put/Delete ops (with per-op deadlines and priorities)
+and get a future back; the :class:`repro.db.executor.Executor` plans the
+batch (stage split, shard routing, one pinned snapshot per shard) and
+compiles it onto this store's physical primitives (``_get_at`` /
+``_get_batch_at`` / ``_scan_group_at`` / ``_apply_writes``). Every
+legacy method below (``get``/``get_batch``/``scan``/``scan_batch``/
+``put``/``put_batch``/``delete``) is a thin wrapper that builds a
+one-kind batch and blocks on the future, so both surfaces share one
+code path and stay bit-for-bit identical.
 """
 from __future__ import annotations
 
@@ -46,6 +58,7 @@ from repro.db.compaction import (
 )
 from repro.db.cursor import RemixCursor
 from repro.db.memtable import MemTable
+from repro.db.ops import Batch, Op, OpInterrupted
 from repro.db.partition import Partition, Table
 from repro.db.sharded import partition_spans, route_host, route_one
 from repro.db.version import Snapshot, VersionSet
@@ -101,6 +114,21 @@ class RemixDBConfig:
     # rounds); aggregate counters live in stats()["compaction"], so
     # long-running stores don't grow memory with flush count
     compaction_log_rounds: int = 64
+    # run compaction + manifest commit on a background thread: flush()
+    # returns right after the MemTable freeze and the round publishes
+    # off-thread under the writer lock (wait_for_compaction() joins it).
+    # Readers are unaffected either way (Version pointer swap).
+    background_compaction: bool = False
+    # resolve batched cold seeks from the prefix-compressed CKB entry
+    # stream (vectorized decoder) instead of fixed-width keys-section
+    # reads; False falls back to the keys-section path
+    ckb_decode: bool = True
+    # op-layer admission control: bytes of submitted-but-unfinished
+    # batches before submit() blocks (backpressure)
+    max_inflight_bytes: int = 256 << 20
+    # worker threads serving async submit(); sync submissions (and the
+    # legacy wrappers) execute inline and never touch them
+    submit_workers: int = 2
 
 
 
@@ -175,6 +203,22 @@ class RemixDB:
         # flush() releases the old Version, whose hook may reach
         # _gc_files on the same thread.
         self._flush_lock = threading.RLock()
+        # serializes the write path end-to-end (seq allocation + WAL
+        # append + MemTable apply) against other writers and against the
+        # compaction round's WAL GC / checkpoint — with async submit()
+        # several executor workers may write concurrently
+        self._write_lock = threading.Lock()
+        # serializes flush scheduling (freeze + background hand-off)
+        self._flush_gate = threading.Lock()
+        # guards the (_bg_thread, _bg_error) handoff: wait_for_compaction
+        # is public and may race a writer-triggered flush() installing
+        # the next round's thread
+        self._bg_lock = threading.Lock()
+        self._bg_thread: threading.Thread | None = None
+        self._bg_error: BaseException | None = None
+        # op-layer executor, created on first submit()/wrapper call
+        self._ops_engine = None
+        self._engine_lock = threading.Lock()
         self._in_flush = False  # file GC defers to flush-end while set
         # guards the (current Version, overlay source, seq) triple that
         # snapshots capture, against the flush's freeze/publish edges
@@ -244,6 +288,7 @@ class RemixDB:
                 t = Table.from_file(
                     self.storage.table_path(nm),
                     cache_mode=self.cfg.cache_mode,
+                    ckb_decode=self.cfg.ckb_decode,
                 )
                 t.attach_cache(self.block_cache)
                 tables.append(t)
@@ -343,42 +388,84 @@ class RemixDB:
     def close(self) -> None:
         """Flush WAL buffers and, in persistent mode, commit a manifest so
         reopening needs no tail scan. The MemTable stays in the WAL."""
+        if self._ops_engine is not None:
+            self._ops_engine.close()
+        if self.cfg.background_compaction:
+            self.wait_for_compaction()
         self.wal.sync()
         if self.storage is not None:
             self._commit(self.versions.current.partitions)
             self.wal.release_quarantine()
             self._gc_files()
 
+    # ---------------- operation layer (API v2) ----------------
+    def engine(self):
+        """This store's op-layer :class:`repro.db.executor.Executor`
+        (one shard: the store itself), created on first use."""
+        if self._ops_engine is None:
+            with self._engine_lock:
+                if self._ops_engine is None:
+                    from repro.db.executor import Executor
+
+                    self._ops_engine = Executor(
+                        [(0, self)],
+                        max_inflight_bytes=self.cfg.max_inflight_bytes,
+                        workers=self.cfg.submit_workers,
+                    )
+        return self._ops_engine
+
+    def submit(self, batch, *, sync: bool = False):
+        """Submit a typed op :class:`~repro.db.ops.Batch`; returns a
+        future resolving to a :class:`~repro.db.ops.BatchResult`. The
+        single entry point every read/write below compiles onto."""
+        return self.engine().submit(batch, sync=sync)
+
+    def _run_one(self, op: Op):
+        """Wrapper helper: one-op batch, inline, unwrap or re-raise."""
+        r = self.engine().submit(Batch([op]), sync=True).result().results[0]
+        r.raise_if_error()
+        return r
+
     # ---------------- write path ----------------
     def put(self, key: int, val) -> None:
+        # eager shape/dtype validation so bad input raises here, with
+        # the original exception type, not inside the executor
         val = np.asarray(val, np.uint32).reshape(self.cfg.vw)
-        self.wal.append(int(key), self.seq, False, val)
-        # MemTable inserts take the state lock so concurrent readers can
-        # materialize a stable view of the live overlay (cursor seeks
-        # iterate it; dict iteration must not race a resize)
-        with self._state_lock:
-            self.mem.put(int(key), val, self.seq)
-            self.seq += 1
-        self.user_bytes += 8 + 4 * self.cfg.vw
-        self._maybe_flush()
+        self._run_one(Op.put(int(key), val))
 
     def delete(self, key: int) -> None:
-        val = np.zeros(self.cfg.vw, np.uint32)
-        self.wal.append(int(key), self.seq, True, val)
-        with self._state_lock:
-            self.mem.put(int(key), val, self.seq, tomb=True)
-            self.seq += 1
-        self.user_bytes += 8 + 4 * self.cfg.vw
-        self._maybe_flush()
+        self._run_one(Op.delete(int(key)))
 
     def put_batch(self, keys, vals) -> None:
         keys = np.asarray(keys, np.uint64)
         vals = np.asarray(vals, np.uint32).reshape(len(keys), self.cfg.vw)
-        seqs = np.arange(self.seq, self.seq + len(keys), dtype=np.uint64)
-        self.wal.append_batch(keys, seqs, np.zeros(len(keys), bool), vals)
-        with self._state_lock:
-            self.seq = self.mem.put_batch(keys, vals, self.seq)
-        self.user_bytes += len(keys) * (8 + 4 * self.cfg.vw)
+        self._run_one(Op.put(keys, vals))
+
+    def _apply_writes(self, keys, vals, tombs) -> None:
+        """The physical write primitive: one group-committed row chunk.
+
+        A single WAL ``append_batch`` (group commit under the configured
+        ``sync_policy``) plus the MemTable apply, in row order, under the
+        write lock — ``put``/``delete``/``put_batch`` are one-chunk
+        special cases and a mixed op batch's write stage lands here once
+        per shard. The flush trigger runs after the lock is released so
+        a triggered compaction never deadlocks against the writer."""
+        keys = np.asarray(keys, np.uint64)
+        n = len(keys)
+        if n == 0:
+            return
+        vals = np.asarray(vals, np.uint32).reshape(n, self.cfg.vw)
+        tombs = np.asarray(tombs, bool)
+        with self._write_lock:
+            seqs = np.arange(self.seq, self.seq + n, dtype=np.uint64)
+            self.wal.append_batch(keys, seqs, tombs, vals)
+            # MemTable inserts take the state lock so concurrent readers
+            # can materialize a stable view of the live overlay (cursor
+            # seeks iterate it; dict iteration must not race a resize)
+            with self._state_lock:
+                self.seq = self.mem.put_batch(keys, vals, self.seq,
+                                              tomb=tombs)
+            self.user_bytes += n * (8 + 4 * self.cfg.vw)
         self._maybe_flush()
 
     def _maybe_flush(self):
@@ -395,25 +482,83 @@ class RemixDB:
         the durable version edge, and only then is the new Version
         published with a pointer swap. Snapshots opened before the flush
         keep serving the old Version until they close.
-        """
-        with self._flush_lock:
-            return self._flush_locked()
 
-    def _flush_locked(self) -> dict:
-        keys, vals, seq, tomb, counts = self.mem.to_arrays()
-        if len(keys) == 0:
-            return dict(kinds={})
-        hot = counts > self.cfg.hot_threshold
-        frozen = self.mem
-        # freeze edge: from here until publish, readers overlay the
-        # frozen entries — pairing the old Version with the drained live
-        # MemTable would make the data under compaction invisible
+        With ``background_compaction`` this returns right after the
+        freeze (``{"kinds": {}, "background": True}``): the compaction +
+        manifest commit + publish run on a background thread under the
+        writer lock, at most one round in flight — a second flush (or
+        ``close``/``wait_for_compaction``) joins the pending round
+        first. Reads during the round see the frozen overlay + the old
+        Version, exactly like a reader that raced a synchronous flush.
+        """
+        if not self.cfg.background_compaction:
+            with self._flush_lock:
+                return self._flush_locked()
+        with self._flush_gate:
+            self.wait_for_compaction()
+            with self._flush_lock:
+                frozen = self._freeze()
+            if frozen is None:
+                return dict(kinds={})
+            t = threading.Thread(
+                target=self._bg_compact, args=frozen, daemon=True
+            )
+            with self._bg_lock:
+                self._bg_thread = t
+            t.start()
+        return dict(kinds={}, background=True)
+
+    def wait_for_compaction(self) -> None:
+        """Join the in-flight background compaction round, if any;
+        re-raises its failure. No-op in synchronous mode."""
+        with self._bg_lock:
+            t = self._bg_thread
+        if t is not None:
+            t.join()
+        with self._bg_lock:
+            # only clear the round we joined: a concurrent flush() may
+            # already have installed the next round's thread
+            if self._bg_thread is t:
+                self._bg_thread = None
+            err, self._bg_error = self._bg_error, None
+        if err is not None:
+            raise err
+
+    def _bg_compact(self, *frozen) -> None:
+        try:
+            with self._flush_lock:
+                self._compact(*frozen)
+        except BaseException as e:  # surfaced by wait_for_compaction()
+            self._bg_error = e
+        finally:
+            with self._state_lock:
+                self._flush_overlay = None
+                self._in_flush = False
+
+    def _freeze(self):
+        """Swap in a fresh MemTable and install the frozen overlay; the
+        start-of-flush edge shared by both flush modes. Returns the
+        ``_compact`` arguments, or None when there is nothing to flush."""
         with self._state_lock:
+            keys, vals, seq, tomb, counts = self.mem.to_arrays()
+            if len(keys) == 0:
+                return None
+            hot = counts > self.cfg.hot_threshold
+            frozen = self.mem
+            # freeze edge: from here until publish, readers overlay the
+            # frozen entries — pairing the old Version with the drained
+            # live MemTable would make the data under compaction invisible
             self.mem = MemTable(vw=self.cfg.vw)
             self._flush_overlay = frozen.data
             self._in_flush = True
+        return (frozen, keys, vals, seq, tomb, hot)
+
+    def _flush_locked(self) -> dict:
+        frozen = self._freeze()
+        if frozen is None:
+            return dict(kinds={})
         try:
-            return self._compact(frozen, keys, vals, seq, tomb, hot)
+            return self._compact(*frozen)
         finally:
             with self._state_lock:
                 self._flush_overlay = None
@@ -421,8 +566,11 @@ class RemixDB:
 
     def _compact(self, frozen, keys, vals, seq, tomb, hot) -> dict:
         # hot keys skip compaction; carried over with halved counters
-        for k in np.asarray(keys[hot], np.uint64).tolist():
-            self.mem.carry_over(int(k), frozen.data[int(k)])
+        # (under the state lock: with background compaction, writers may
+        # be inserting into the live MemTable concurrently)
+        with self._state_lock:
+            for k in np.asarray(keys[hot], np.uint64).tolist():
+                self.mem.carry_over(int(k), frozen.data[int(k)])
         keys, vals, seq, tomb = (
             keys[~hot], vals[~hot], seq[~hot], tomb[~hot],
         )
@@ -444,22 +592,30 @@ class RemixDB:
             self.table_bytes_written += res.bytes_written
             round_bytes += res.bytes_written
             if res.carried is not None:  # aborted: back into the MemTable
-                for j in range(res.carried.n):
-                    e = frozen.data[int(res.carried.keys[j])]
-                    self.mem.carry_over(int(res.carried.keys[j]), e)
+                with self._state_lock:
+                    for j in range(res.carried.n):
+                        e = frozen.data[int(res.carried.keys[j])]
+                        self.mem.carry_over(int(res.carried.keys[j]), e)
             if res.new_partitions is not None:
                 new_parts.extend(res.new_partitions)
             else:
                 new_parts.append(p)
         new_parts.sort(key=lambda p: p.lo)
-        # WAL GC: only carried/hot keys remain live in the log (§4.3).
+        # WAL GC: only carried/hot keys (plus anything written since the
+        # freeze) remain live in the log (§4.3). The write lock stalls
+        # concurrent appenders for the GC + checkpoint window so no
+        # record can land between the live-key snapshot and the rewrite
+        # — a put that misses the snapshot would otherwise be dropped
+        # from the log while only existing in the volatile MemTable.
         # In persistent mode freed blocks stay quarantined until the new
         # mapping table is committed with the manifest: a crash in between
         # must still be able to replay the previous checkpoint's blocks.
-        self.wal.gc(set(self.mem.data.keys()),
-                    defer_free=self.storage is not None)
-        if self.storage is not None:
-            self._commit(new_parts)  # the version edge
+        with self._write_lock:
+            with self._state_lock:
+                live_keys = set(self.mem.data.keys())
+            self.wal.gc(live_keys, defer_free=self.storage is not None)
+            if self.storage is not None:
+                self._commit(new_parts)  # the version edge
         # pointer swap: readers pinning the old Version keep it alive
         # (with no pins its exclusively-owned files are reclaimed at the
         # flush-end gc below); the frozen overlay retires in the same
@@ -468,7 +624,8 @@ class RemixDB:
             self.versions.publish(new_parts, seq_horizon=self.seq)
             self._flush_overlay = None
         if self.storage is not None:
-            self.wal.release_quarantine()
+            with self._write_lock:
+                self.wal.release_quarantine()
             self._gc_files(from_flush=True)
         stats = dict(kinds=kinds)
         self.compaction_log.append(stats)
@@ -555,8 +712,8 @@ class RemixDB:
         )
 
     def get(self, key: int):
-        with self._view() as view:
-            return self._get_at(view, int(key))
+        r = self._run_one(Op.get(int(key)))
+        return r.value if r.found else None
 
     def _get_at(self, view: Snapshot, key: int):
         e = view.overlay.get(int(key))
@@ -574,8 +731,8 @@ class RemixDB:
 
     def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
         """Batched point lookups. Returns (found (Q,), vals (Q,VW))."""
-        with self._view() as view:
-            return self._get_batch_at(view, keys)
+        r = self._run_one(Op.multiget(keys))
+        return r.found, r.vals
 
     def _get_batch_at(self, view: Snapshot, keys):
         keys = np.asarray(keys, np.uint64)
@@ -614,11 +771,13 @@ class RemixDB:
     def scan(self, start_key: int, n: int) -> tuple[np.ndarray, np.ndarray]:
         """Range scan: one cursor seek + ``next_batch(n)`` over the merged
         view (partitions + MemTable overlay)."""
-        with self._view() as view:
-            return self._scan_at(view, start_key, n)
+        r = self._run_one(Op.scan(int(start_key), int(n)))
+        return r.keys, r.vals
 
-    def _scan_at(self, view: Snapshot, start_key: int, n: int):
-        cur = RemixCursor(view, width=max(8, n + n // 2))
+    def _scan_at(self, view: Snapshot, start_key: int, n: int,
+                 interrupt=None):
+        cur = RemixCursor(view, width=max(8, n + n // 2),
+                          interrupt=interrupt)
         cur.seek(int(start_key))
         return cur.next_batch(n)
 
@@ -628,14 +787,72 @@ class RemixDB:
         Returns (keys (Q, n) uint64, valid (Q, n)). Queries whose range
         crosses a partition boundary fall back to the cursor path.
         """
-        with self._view() as view:
-            return self._scan_batch_at(view, starts, n)
+        from repro.db.executor import scan_batch_via_ops
+
+        return scan_batch_via_ops(self.engine(), starts, n)
 
     def _scan_batch_at(self, view: Snapshot, starts, n: int):
+        """(keys (Q, n), valid (Q, n)) for a pinned view — the snapshot
+        API's batched scan, reformatted from :meth:`_scan_group_at`."""
         starts = np.asarray(starts, np.uint64)
         q = len(starts)
         out_k = np.zeros((q, n), np.uint64)
         out_m = np.zeros((q, n), bool)
+        for i, (kk, _) in enumerate(
+            self._scan_group_at(view, starts, n, with_vals=False)
+        ):
+            kk = kk[:n]
+            out_k[i, : len(kk)] = kk
+            out_m[i, : len(kk)] = True
+        return out_k, out_m
+
+    def _scan_group_at(self, view: Snapshot, starts, n: int,
+                       with_vals: bool = True, interrupts=None) -> list:
+        """Vectorized group of range scans over one pinned view: the
+        physical primitive behind Scan ops, ``scan_batch`` and the serve
+        engine's batched scans.
+
+        One jitted (or cold batched) window call per touched partition;
+        per query the window is clipped to the partition span, and any
+        under-full row falls back to the cursor path — the fixed window
+        alone can't distinguish "partition tail reached" from "window
+        swallowed by a tombstone run or a partition boundary", and the
+        cursor handles both (so promotion never changes results).
+        Batches over a non-empty overlay take the cursor path per query,
+        like the legacy ``scan_batch`` did.
+
+        Returns one entry per query: ``(keys (M,), vals (M, VW))`` with
+        ``vals`` None when ``with_vals`` is False, or the
+        :class:`~repro.db.ops.OpInterrupted` instance when that query's
+        ``interrupts`` checker fired mid-scan (deadline/cancel) — the
+        executor converts it to a per-op status.
+        """
+        starts = np.asarray(starts, np.uint64)
+        q = len(starts)
+        checks = interrupts if interrupts is not None else [None] * q
+        if n <= 0:
+            empty_v = np.zeros((0, self.cfg.vw), np.uint32)
+            return [
+                (np.zeros(0, np.uint64), empty_v if with_vals else None)
+            ] * q
+
+        def row_fallback(qi):
+            try:
+                kk, vv = self._scan_at(
+                    view, int(starts[qi]), n, interrupt=checks[qi]
+                )
+            except OpInterrupted as e:
+                return e
+            return kk, (vv if with_vals else None)
+
+        # a lone scan keeps the legacy streaming profile: the cursor
+        # path pipelines value/tomb blocks ahead (Fig 10, prefetch_depth)
+        # — the batched window path instead coalesces across queries,
+        # which only wins with > 1 scan sharing granules. Batches over a
+        # non-empty overlay merge per query through the cursor too.
+        if q == 1 or view.overlay:
+            return [row_fallback(qi) for qi in range(q)]
+        out: list = [None] * q
         parts = view.partitions
         spans = partition_spans([p.lo for p in parts])
         pidx = route_host([p.lo for p in parts], starts)
@@ -645,48 +862,40 @@ class RemixDB:
             p = parts[pi]
             hi = spans[pi][1]
 
-            def emit_row(qi, kk):
-                """Clip one query's window to the partition — shared by
-                the cold and device branches so promotion never changes
-                results. Any under-full row falls back to the cursor
-                scan: the fixed window alone can't distinguish "partition
-                tail reached" from "window swallowed by a tombstone run
-                or a partition boundary", and the cursor handles both."""
-                kk = kk[kk < hi][:n]
-                out_k[qi, : len(kk)] = kk
-                out_m[qi, : len(kk)] = True
+            def emit_row(qi, kk, vv):
+                m = kk < hi  # clip to the partition's key span
+                kk = kk[m][:n]
                 if len(kk) < n:
-                    kk2, _ = self._scan_at(view, int(starts[qi]), n)
-                    out_k[qi, : len(kk2)] = kk2[:n]
-                    out_m[qi] = False
-                    out_m[qi, : len(kk2)] = True
+                    out[qi] = row_fallback(qi)
+                    return
+                out[qi] = (kk, vv[m][:n] if with_vals else None)
 
             if self._cold_ok(p):
-                for qi, (kk, _, _) in zip(
+                for qi, (kk, vv, _) in zip(
                     sel, p.cold_scan_batch(starts[sel], width)
                 ):
-                    emit_row(qi, kk)
+                    emit_row(qi, kk, vv)
                 continue
             remix, runset = p.index()
             sq = starts[sel]
             pad = _pow2pad(len(sq))
             sq = np.pad(sq, (0, pad - len(sq)))
             qk = jnp.asarray(CK.pack_u64(sq))
+            kw = dict(self._qkw())
+            if not self.cfg.use_kernels:
+                # skip the value gather (XLA dead-code-eliminates it)
+                # when the caller only needs keys, e.g. scan_batch
+                kw["with_vals"] = with_vals
             keys, vals, valid, _ = self._query_mod().scan(
-                remix, runset, qk, width=width, **self._qkw()
+                remix, runset, qk, width=width, **kw
             )
             keys = CK.unpack_u64(np.asarray(keys))[: len(sel)]
             valid = np.asarray(valid)[: len(sel)]
+            vals = None if vals is None else np.asarray(vals)[: len(sel)]
             for row, qi in enumerate(sel):
-                emit_row(qi, keys[row][valid[row]])
-        # memtable overlay (host merge) only if buffered entries exist
-        if view.overlay:
-            for qi in range(q):
-                kk, _ = self._scan_at(view, int(starts[qi]), n)
-                out_k[qi, : len(kk)] = kk[:n]
-                out_m[qi] = False
-                out_m[qi, : len(kk)] = True
-        return out_k, out_m
+                v = vals[row][valid[row]] if vals is not None else None
+                emit_row(qi, keys[row][valid[row]], v)
+        return out
 
     # ---------------- stats / recovery ----------------
     def write_amplification(self) -> float:
@@ -740,8 +949,11 @@ class RemixDB:
                 bytes_written=self.compaction_totals["bytes_written"],
                 kinds=dict(self.compaction_totals["kinds"]),
                 log_rounds=len(self.compaction_log),
+                in_flight=bool(self._in_flush),
             ),
         )
+        if self._ops_engine is not None:
+            out["engine"] = self._ops_engine.stats()
         if self.block_cache is not None:
             out["cache"] = self.block_cache.stats()
             # promotion decision inputs per cold-servable partition

@@ -19,6 +19,7 @@ Layout::
 from __future__ import annotations
 
 import struct
+import threading
 
 import numpy as np
 
@@ -112,6 +113,14 @@ class CKBReader:
         # value + validity, filled by _ensure_restart_chunks
         self._rk64: np.ndarray | None = None
         self._rk_valid: np.ndarray | None = None
+        # interval-decode memo (8-byte keys): keys of fully decoded
+        # restart intervals, so repeated batched seeks over a warm
+        # working set pay the entry-stream decode once per interval
+        self._iv_keys: np.ndarray | None = None
+        self._iv_valid: np.ndarray | None = None
+        # guards both memos (restart chunks + decoded intervals): the op
+        # layer's async worker pool reads one table from several threads
+        self._memo_lock = threading.Lock()
 
     @classmethod
     def from_bytes(cls, buf: bytes | memoryview) -> "CKBReader":
@@ -174,24 +183,25 @@ class CKBReader:
         Python walk, because restart entries are self-contained
         (``shared == 0``). Requires ``kb == 8``.
         """
-        if self._rk64 is None:
-            self._rk64 = np.zeros(self.n_restarts, np.uint64)
-            self._rk_valid = np.zeros(self.n_restarts, bool)
-        offs = self._restart_offsets()
-        c = self.RESTART_CHUNK
-        for ci in chunks:
-            a, b = ci * c, min((ci + 1) * c, self.n_restarts)
-            if a >= b or self._rk_valid[a]:
-                continue
-            lo = int(offs[a])
-            hi = int(offs[b - 1]) + 2 + self.kb
-            raw = np.frombuffer(
-                self._fetch(lo, hi), np.uint8, count=hi - lo
-            )
-            rel = (offs[a:b].astype(np.int64) - lo)[:, None]
-            kb8 = raw[rel + 2 + np.arange(self.kb)]  # (m, 8) big-endian
-            self._rk64[a:b] = kb8.copy().view(">u8").ravel()
-            self._rk_valid[a:b] = True
+        with self._memo_lock:
+            if self._rk64 is None:
+                self._rk64 = np.zeros(self.n_restarts, np.uint64)
+                self._rk_valid = np.zeros(self.n_restarts, bool)
+            offs = self._restart_offsets()
+            c = self.RESTART_CHUNK
+            for ci in chunks:
+                a, b = ci * c, min((ci + 1) * c, self.n_restarts)
+                if a >= b or self._rk_valid[a]:
+                    continue
+                lo = int(offs[a])
+                hi = int(offs[b - 1]) + 2 + self.kb
+                raw = np.frombuffer(
+                    self._fetch(lo, hi), np.uint8, count=hi - lo
+                )
+                rel = (offs[a:b].astype(np.int64) - lo)[:, None]
+                kb8 = raw[rel + 2 + np.arange(self.kb)]  # (m, 8) big-endian
+                self._rk64[a:b] = kb8.copy().view(">u8").ravel()
+                self._rk_valid[a:b] = True
 
     def narrow_batch(
         self, qs: np.ndarray, los: np.ndarray, his: np.ndarray
@@ -224,6 +234,114 @@ class CKBReader:
         cand = js[np.maximum(idx, 0)]
         j = np.clip(cand, ja, jb)
         return np.maximum(los, j * ii), np.minimum(his, (j + 1) * ii)
+
+    def decode_intervals(self, js: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized decode of whole restart intervals from the entry
+        stream (requires ``kb == 8``).
+
+        ``js`` are unique restart indices. Returns ``(keys (U, interval)
+        uint64, counts (U,))`` — interval ``j``'s rows are
+        ``[j*interval, j*interval + counts)`` and positions past
+        ``counts`` are undefined. The prefix-compression recurrence is
+        sequential *within* an interval but independent *across* them,
+        so the loop runs over the ≤ ``interval`` in-interval positions
+        while every gather/scatter is vectorized over all U intervals at
+        once — the decoder that lets batched seeks resolve keys straight
+        from the compressed stream, with no fixed-width keys-section
+        reads.
+        """
+        if self.kb != 8:
+            raise ValueError("decode_intervals requires 8-byte keys")
+        js = np.asarray(js, np.int64)
+        ii = self.interval
+        with self._memo_lock:
+            if self._iv_keys is None:
+                self._iv_keys = np.zeros((self.n_restarts, ii), np.uint64)
+                self._iv_valid = np.zeros(self.n_restarts, bool)
+            all_counts = np.minimum(self.n - js * ii, ii).astype(np.int64)
+            todo = js[~self._iv_valid[js]]
+            if len(todo):
+                keys, counts = self._decode_intervals_uncached(todo)
+                self._iv_keys[todo] = keys
+                self._iv_valid[todo] = True
+            return self._iv_keys[js], all_counts
+
+    def _decode_intervals_uncached(self, js: np.ndarray
+                                   ) -> tuple[np.ndarray, np.ndarray]:
+        offs = self._restart_offsets()
+        u = len(js)
+        ii = self.interval
+        counts = np.minimum(self.n - js * ii, ii).astype(np.int64)
+        # one span fetch per touched restart *chunk* — the same spans
+        # narrow_batch already pulled through the block cache, so this
+        # adds joins, not granule reads — then a shared flat byte buffer
+        c = self.RESTART_CHUNK
+        cj = js // c
+        base = np.zeros(u, np.int64)
+        chunks: list[np.ndarray] = []
+        pos = 0
+        for ci in np.unique(cj):
+            a = int(ci) * c
+            b = min(a + c, self.n_restarts)
+            lo = int(offs[a])
+            hi = int(offs[b]) if b < self.n_restarts else self._entries_end
+            raw = np.frombuffer(
+                self._fetch(lo, hi), np.uint8, count=hi - lo
+            )
+            chunks.append(raw)
+            m = cj == ci
+            base[m] = pos + (offs[js[m]].astype(np.int64) - lo)
+            pos += len(raw)
+        raw = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+        kb = self.kb
+        cur = np.zeros((u, kb), np.uint8)
+        out = np.zeros((u, ii), np.uint64)
+        ptr = base.copy()
+        jj = np.arange(kb)
+        for k in range(ii):
+            act = k < counts
+            p = np.where(act, ptr, 0)
+            shared = raw[p].astype(np.int64)  # entry: u8 shared | u8 ns
+            # fixed-width keys ⇒ ns == kb - shared: suffix byte j of the
+            # key replaces positions [shared, kb)
+            take = (jj[None, :] >= shared[:, None]) & act[:, None]
+            src = p[:, None] + 2 + (jj[None, :] - shared[:, None])
+            cur = np.where(take, raw[np.where(take, src, 0)], cur)
+            out[:, k] = cur.copy().view(">u8").ravel()
+            ptr = ptr + np.where(act, 2 + kb - shared, 0)
+        return out, counts
+
+    def seek_batch(
+        self, qs: np.ndarray, nlo: np.ndarray, nhi: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Resolve a batch of narrowed seeks entirely from the entry
+        stream: the vectorized counterpart of :meth:`seek` over ranges
+        produced by :meth:`narrow_batch` (each within one restart
+        interval).
+
+        Returns ``(rows, keyat, known)``: ``rows[i]`` is the lower bound
+        of ``qs[i]`` within ``[nlo[i], nhi[i]]`` (``nhi`` itself when
+        every key in range is smaller); ``known[i]`` marks rows whose
+        key was decoded (always, except ``rows[i] == nhi[i]``), with the
+        key in ``keyat[i]`` — callers verify point hits without touching
+        the fixed-width keys section.
+        """
+        ii = self.interval
+        j = np.asarray(nlo, np.int64) // ii
+        uj, inv = np.unique(j, return_inverse=True)
+        keys, counts = self.decode_intervals(uj)
+        krows = keys[inv]  # (Q, interval)
+        cnt = counts[inv]
+        valid = np.arange(ii)[None, :] < cnt[:, None]
+        lt = (krows < np.asarray(qs, np.uint64)[:, None]) & valid
+        rows = j * ii + lt.sum(axis=1)
+        rows = np.clip(rows, nlo, nhi)
+        idx = rows - j * ii
+        known = idx < cnt
+        keyat = krows[np.arange(len(rows)), np.minimum(idx, ii - 1)]
+        keyat = np.where(known, keyat, np.uint64(0))
+        return rows, keyat, known
 
     def seek(self, key: np.ndarray, lo: int = 0, hi: int | None = None) -> int:
         """Lower bound of ``key`` within rows [lo, hi): first row whose key

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.db.sharded import route_host
 from repro.models import model as M
 from repro.models.kvcache import PrefixCache
 
@@ -120,13 +119,17 @@ class KVServeEngine:
     shards instead of fragmenting per store. Point and range queries are
     routed by key range, mirroring the store's own routing one level up.
 
-    Every request batch reads through one pinned
-    :class:`repro.db.version.Snapshot` per touched shard, so a batch
-    observes a single consistent Version of each store even while a
-    concurrent flush/compaction publishes new ones — the serving-side
-    MVCC contract. ``snapshot()`` exposes the same handle for callers
-    that want consistency across *multiple* requests (e.g. a streaming
-    cursor per shard).
+    The serving surface is the op layer (API v2): :meth:`submit` takes a
+    typed :class:`repro.db.ops.Batch` — mixed gets, multigets, scans,
+    puts and deletes, with per-op deadlines/priorities — and the shared
+    :class:`repro.db.executor.Executor` fans it out across shards
+    (writes to the owning shard, reads through **one pinned snapshot per
+    touched shard per batch**) and back in. Every legacy method below is
+    a thin wrapper building a one-kind batch and blocking on the future,
+    so both surfaces stay bit-for-bit identical — the serving-side MVCC
+    contract is unchanged. ``snapshot()`` exposes the pinned handle for
+    callers that want consistency across *multiple* requests (e.g. a
+    streaming cursor per shard).
     """
 
     def __init__(
@@ -134,7 +137,10 @@ class KVServeEngine:
         shards: list[tuple[int, object]],
         cache_bytes: int = 64 << 20,
         config=None,
+        max_inflight_bytes: int = 256 << 20,
+        submit_workers: int = 2,
     ):
+        from repro.db.executor import Executor
         from repro.db.store import RemixDB, RemixDBConfig
         from repro.io.blockcache import BlockCache
 
@@ -161,17 +167,42 @@ class KVServeEngine:
                         t.attach_cache(self.cache)
             self.lows.append(int(lo))
             self.shards.append(db)
+        self.engine = Executor(
+            list(zip(self.lows, self.shards)),
+            max_inflight_bytes=max_inflight_bytes,
+            workers=submit_workers,
+        )
 
     def _route(self, key: int) -> "object":
         return self.shards[max(0, bisect.bisect_right(self.lows, key) - 1)]
 
+    # ---------------- operation layer (API v2) ----------------
+    def submit(self, batch, *, sync: bool = False):
+        """Submit a typed op batch across all shards; returns a future
+        resolving to a :class:`repro.db.ops.BatchResult`."""
+        return self.engine.submit(batch, sync=sync)
+
+    def _run_one(self, op):
+        from repro.db.ops import Batch
+
+        r = self.engine.submit(Batch([op]), sync=True).result().results[0]
+        r.raise_if_error()
+        return r
+
+    def close(self) -> None:
+        """Drain and stop the op executor (the stores stay open)."""
+        self.engine.close()
+
+    # ---------------- legacy wrappers ----------------
     def get(self, key: int):
         """Point lookup, routed through the batched path: a scalar get is
         a batch of one, so cold shards answer it with the same vectorized
         ``cold_get_batch`` machinery (and the same block accounting) as a
         256-key batch."""
-        found, vals = self.get_batch(np.array([int(key)], np.uint64))
-        return vals[0] if bool(found[0]) else None
+        from repro.db.ops import Op
+
+        r = self._run_one(Op.multiget(np.array([int(key)], np.uint64)))
+        return r.vals[0] if bool(r.found[0]) else None
 
     def snapshot(self, key: int | None = None):
         """Pin a consistent view: of the shard owning ``key``, or (when
@@ -188,41 +219,57 @@ class KVServeEngine:
         the duration of the batch (the store's ephemeral view: pinned
         like a snapshot but sharing the live overlay, so the serving hot
         path never copies a MemTable per request)."""
-        keys = np.asarray(keys, np.uint64)
-        found = np.zeros(len(keys), bool)
-        vals = np.zeros((len(keys), self.shards[0].cfg.vw), np.uint32)
-        sid = route_host(self.lows, keys)
-        for s in np.unique(sid):
-            m = sid == s
-            with self.shards[s]._view() as view:
-                f, v = view.get_batch(keys[m])
-            found[m] = f
-            vals[m] = v
-        return found, vals
+        from repro.db.ops import Op
+
+        r = self._run_one(Op.multiget(keys))
+        return r.found, r.vals
 
     def scan(self, start_key: int, n: int):
         """Cross-shard range scan: drain shards in key order until full,
-        each shard read through one pinned per-call view."""
-        out_k: list[np.ndarray] = []
-        out_v: list[np.ndarray] = []
-        got = 0
-        si = max(0, bisect.bisect_right(self.lows, int(start_key)) - 1)
-        lo = int(start_key)
-        while got < n and si < len(self.shards):
-            with self.shards[si]._view() as view:
-                kk, vv = view.scan(lo, n - got)
-            out_k.append(kk)
-            out_v.append(vv)
-            got += len(kk)
-            si += 1
-            if si < len(self.shards):
-                lo = self.lows[si]
-        if not out_k:
-            return (
-                np.zeros(0, np.uint64),
-                np.zeros((0, self.shards[0].cfg.vw), np.uint32),
-            )
-        return np.concatenate(out_k), np.concatenate(out_v)
+        each shard read through a snapshot pinned for the call."""
+        from repro.db.ops import Op
+
+        r = self._run_one(Op.scan(int(start_key), int(n)))
+        return r.keys, r.vals
+
+    def scan_batch(self, starts, n: int):
+        """Batched cross-shard range scans (serve-side analogue of
+        ``RemixDB.scan_batch``): one vectorized window call per touched
+        (shard, partition), under-full scans drain follow-on shards in
+        key order. Returns (keys (Q, n) uint64, valid (Q, n))."""
+        from repro.db.executor import scan_batch_via_ops
+
+        return scan_batch_via_ops(self.engine, starts, n)
+
+    def put(self, key: int, val) -> None:
+        """Upsert, routed to the owning shard's WAL + MemTable."""
+        from repro.db.ops import Op
+
+        vw = self.shards[0].cfg.vw
+        val = np.asarray(val, np.uint32).reshape(vw)
+        self._run_one(Op.put(int(key), val))
+
+    def put_batch(self, keys, vals) -> None:
+        """Vectorized upserts: rows are routed to their owning shards
+        and each shard's slice group-commits through its WAL in one
+        append (cross-shard write fan-out of a single op)."""
+        from repro.db.ops import Op
+
+        keys = np.asarray(keys, np.uint64)
+        vals = np.asarray(vals, np.uint32).reshape(
+            len(keys), self.shards[0].cfg.vw
+        )
+        self._run_one(Op.put(keys, vals))
+
+    def delete(self, key: int) -> None:
+        """Tombstone write, routed to the owning shard."""
+        from repro.db.ops import Op
+
+        self._run_one(Op.delete(int(key)))
+
+    def flush(self) -> list[dict]:
+        """Flush every shard (memtable freeze + compaction round each)."""
+        return [db.flush() for db in self.shards]
 
     def stats(self) -> dict:
         """Aggregated serving stats + the shared cache's counters."""
@@ -230,6 +277,7 @@ class KVServeEngine:
         return dict(
             shards=len(self.shards),
             cache=self.cache.stats(),
+            engine=self.engine.stats(),
             disk_bytes_read=sum(s["disk_bytes_read"] for s in per),
             cold=dict(
                 gets=sum(s["cold"]["gets"] for s in per),

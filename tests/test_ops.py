@@ -1,0 +1,476 @@
+"""Operation-layer (API v2) tests: typed batches through submit().
+
+Covered here:
+  - mixed Batch == the equivalent sequence of legacy calls (explicit
+    cases + a hypothesis property sweep over random op sequences)
+  - cross-shard mixed batches on KVServeEngine (fan-out / fan-in) and
+    the serve parity surface (scan_batch, put/put_batch/delete)
+  - error paths: per-op deadline-exceeded without poisoning the batch,
+    cancellation (queued and mid-run) releasing pinned Versions,
+    mid-scan interruption through the cursor hook
+  - admission control: backpressure, byte accounting, deadline expiry
+    while queued
+  - background compaction: sync-mode equivalence, reads during the
+    round, recovery after close
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.db.executor import AdmissionController, Executor
+from repro.db.ops import Batch, Op, OpInterrupted, OpKind, OpStatus
+from repro.db.store import RemixDB, RemixDBConfig
+
+
+def _mem_cfg(**kw) -> RemixDBConfig:
+    return RemixDBConfig(memtable_entries=1 << 30, **kw)
+
+
+def _fill(db, lo=1, n=300, step=7):
+    keys = np.arange(lo, lo + n, dtype=np.uint64) * step
+    vals = np.stack([keys & 0xFFFFFFFF, keys >> 32], 1).astype(np.uint32)
+    db.put_batch(keys, vals)
+    return keys
+
+
+# ---------------------------------------------------------------- mixed
+def _apply_legacy(db, ops):
+    """Issue ops through the legacy methods, in order."""
+    out = []
+    for op in ops:
+        if op.kind is OpKind.GET:
+            out.append(db.get(op.key))
+        elif op.kind is OpKind.MULTIGET:
+            out.append(db.get_batch(op.keys))
+        elif op.kind is OpKind.SCAN:
+            out.append(db.scan(op.start, op.n))
+        elif op.kind is OpKind.PUT:
+            if op.keys is None:
+                out.append(db.put(op.key, op.val))
+            else:
+                out.append(db.put_batch(op.keys, op.val))
+        else:
+            out.append(db.delete(op.key))
+    return out
+
+
+def _check_equiv(ops, legacy, res):
+    assert res.ok, [r.status for r in res.results]
+    for op, ref, r in zip(ops, legacy, res.results):
+        if op.kind is OpKind.GET:
+            assert (ref is not None) == bool(r.found)
+            if ref is not None:
+                np.testing.assert_array_equal(ref, r.value)
+        elif op.kind is OpKind.MULTIGET:
+            np.testing.assert_array_equal(ref[0], r.found)
+            np.testing.assert_array_equal(ref[1], r.vals)
+        elif op.kind is OpKind.SCAN:
+            np.testing.assert_array_equal(ref[0], r.keys)
+            np.testing.assert_array_equal(ref[1], r.vals)
+
+
+def test_mixed_batch_equals_legacy_sequence():
+    db_a, db_b = RemixDB(_mem_cfg()), RemixDB(_mem_cfg())
+    for db in (db_a, db_b):
+        _fill(db)
+    ops = [
+        Op.get(7),
+        Op.put(7, [9, 9]),
+        Op.get(7),  # must observe the put (write edge between reads)
+        Op.scan(0, 10),
+        Op.delete(14),
+        Op.get(14),
+        Op.multiget([7, 14, 21, 99999]),
+        Op.put(np.array([50, 51], np.uint64), np.ones((2, 2), np.uint32)),
+        Op.scan(49, 4),
+    ]
+    legacy = _apply_legacy(db_b, ops)
+    res = db_a.submit(Batch(list(ops)), sync=True).result()
+    _check_equiv(ops, legacy, res)
+    # same final store contents
+    ka, va = db_a.scan(0, 1000)
+    kb, vb = db_b.scan(0, 1000)
+    np.testing.assert_array_equal(ka, kb)
+    np.testing.assert_array_equal(va, vb)
+    # stats reflect the batch structure
+    assert res.stats["ops"] == len(ops)
+    assert res.stats["kinds"]["get"] == 3
+
+
+def test_mixed_batch_property_equals_legacy():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    key = st.integers(0, 120)
+
+    def to_op(draw_tuple):
+        kind, k, n = draw_tuple
+        if kind == "get":
+            return Op.get(k)
+        if kind == "put":
+            return Op.put(k, [k & 0xFFFFFFFF, n])
+        if kind == "delete":
+            return Op.delete(k)
+        if kind == "scan":
+            return Op.scan(k, n)
+        return Op.multiget(np.array([k, k + n, k * 2], np.uint64))
+
+    op_strategy = st.tuples(
+        st.sampled_from(["get", "put", "delete", "scan", "mget"]),
+        key,
+        st.integers(1, 12),
+    ).map(to_op)
+
+    @given(st.lists(op_strategy, min_size=1, max_size=16),
+           st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def check(ops, seed):
+        db_a, db_b = RemixDB(_mem_cfg()), RemixDB(_mem_cfg())
+        rng = np.random.default_rng(seed)
+        base = rng.choice(120, size=40, replace=False).astype(np.uint64)
+        for db in (db_a, db_b):
+            db.put_batch(
+                base,
+                np.stack([base, np.zeros_like(base)], 1).astype(np.uint32),
+            )
+        legacy = _apply_legacy(db_b, ops)
+        res = db_a.submit(Batch(list(ops)), sync=True).result()
+        _check_equiv(ops, legacy, res)
+        ka, _ = db_a.scan(0, 500)
+        kb, _ = db_b.scan(0, 500)
+        np.testing.assert_array_equal(ka, kb)
+
+    check()
+
+
+def test_mixed_batch_cross_shard_serve(tmp_path):
+    from repro.serve.engine import KVServeEngine
+
+    split = 1 << 32
+    roots = []
+    for i, lo in enumerate((0, split)):
+        root = str(tmp_path / f"s{i}")
+        db = RemixDB.open(root, _mem_cfg())
+        _fill(db, lo=lo // 7 + 1, n=200)
+        db.flush()
+        db.close()
+        roots.append(root)
+    eng = KVServeEngine(
+        [(0, roots[0]), (split, roots[1])],
+        config=RemixDBConfig(promote_fraction=1e9),
+    )
+    k0, k1 = 7, (split // 7 + 1) * 7
+    ops = [
+        Op.get(k0),
+        Op.get(k1),
+        Op.multiget(np.array([k0, k1, 5], np.uint64)),  # spans both shards
+        Op.scan(k0, 5),
+        Op.scan(k1, 5),
+        Op.put(split + 42, [4, 2]),
+        Op.get(split + 42),
+    ]
+    res = eng.submit(Batch(list(ops)), sync=True).result()
+    assert res.ok
+    # equals the legacy per-op calls
+    assert np.array_equal(res.results[0].value, eng.get(k0))
+    assert np.array_equal(res.results[1].value, eng.get(k1))
+    f, v = eng.get_batch(np.array([k0, k1, 5], np.uint64))
+    np.testing.assert_array_equal(res.results[2].found, f)
+    np.testing.assert_array_equal(res.results[2].vals, v)
+    kk, vv = eng.scan(k1, 5)
+    np.testing.assert_array_equal(res.results[4].keys, kk)
+    # the put landed on shard 1's memtable, not shard 0's
+    assert eng.shards[1].mem.get(split + 42) is not None
+    assert eng.shards[0].mem.get(split + 42) is None
+    eng.close()
+
+
+def test_serve_scan_batch_and_writes(tmp_path):
+    from repro.serve.engine import KVServeEngine
+
+    split = 1 << 32
+    for i, lo in enumerate((0, split)):
+        db = RemixDB.open(str(tmp_path / f"s{i}"), _mem_cfg())
+        _fill(db, lo=lo // 7 + 1, n=150)
+        db.flush()
+        db.close()
+    eng = KVServeEngine(
+        [(0, str(tmp_path / "s0")), (split, str(tmp_path / "s1"))],
+        config=RemixDBConfig(promote_fraction=1e9),
+    )
+    # scan_batch == per-start legacy scans (including a cross-shard one)
+    starts = np.array([7, split - 10, (split // 7 + 2) * 7], np.uint64)
+    out_k, out_m = eng.scan_batch(starts, 6)
+    for i, s in enumerate(starts.tolist()):
+        kk, _ = eng.scan(s, 6)
+        np.testing.assert_array_equal(out_k[i, : len(kk)], kk)
+        assert out_m[i, : len(kk)].all() and not out_m[i, len(kk):].any()
+    # vectorized cross-shard put_batch + delete
+    wk = np.array([3, split + 3], np.uint64)
+    eng.put_batch(wk, np.full((2, 2), 5, np.uint32))
+    assert eng.get(3).tolist() == [5, 5]
+    assert eng.get(split + 3).tolist() == [5, 5]
+    eng.delete(3)
+    assert eng.get(3) is None
+    eng.close()
+
+
+# ------------------------------------------------------------ deadlines
+def test_deadline_exceeded_does_not_poison_batch():
+    db = RemixDB(_mem_cfg())
+    keys = _fill(db)
+    ops = [
+        Op.get(int(keys[0]), deadline_ms=-1.0),  # already expired
+        Op.get(int(keys[1])),
+        Op.scan(0, 5, deadline_ms=-1.0),
+        Op.put(123456, [1, 2], deadline_ms=-1.0),  # expired write: skipped
+        Op.multiget(keys[:4]),
+    ]
+    res = db.submit(Batch(ops), sync=True).result()
+    assert res.results[0].status is OpStatus.DEADLINE_EXCEEDED
+    assert res.results[1].ok and res.results[1].found
+    assert res.results[2].status is OpStatus.DEADLINE_EXCEEDED
+    assert res.results[3].status is OpStatus.DEADLINE_EXCEEDED
+    assert res.results[4].ok
+    assert db.get(123456) is None  # the expired put never applied
+    assert res.stats["deadline_exceeded"] == 3
+    assert not res.ok
+
+
+def test_cursor_interrupt_hook():
+    from repro.db.cursor import RemixCursor
+
+    db = RemixDB(_mem_cfg())
+    _fill(db, n=500)
+    db.flush()
+    calls = [0]
+
+    def boom():
+        calls[0] += 1
+        if calls[0] > 2:
+            raise OpInterrupted(OpStatus.DEADLINE_EXCEEDED)
+
+    with db.snapshot() as snap:
+        cur = RemixCursor(snap, width=8, interrupt=boom)
+        cur.seek(0)
+        with pytest.raises(OpInterrupted):
+            while cur.next() is not None:
+                pass
+    assert calls[0] > 2
+
+
+# --------------------------------------------------------- cancellation
+def test_queued_cancel_releases_nothing_and_raises(tmp_path):
+    db = RemixDB.open(str(tmp_path / "db"), _mem_cfg(submit_workers=1))
+    keys = _fill(db)
+    db.flush()
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = db._get_batch_at
+
+    def blocked(view, qk):
+        entered.set()
+        gate.wait(10)
+        return orig(view, qk)
+
+    db._get_batch_at = blocked
+    try:
+        f1 = db.submit(Batch([Op.multiget(keys[:4])]))  # occupies worker
+        assert entered.wait(10)
+        f2 = db.submit(Batch([Op.multiget(keys[:4])]))  # queued behind it
+        assert f2.cancel()  # still queued: cancels outright
+        gate.set()
+        assert f1.result(timeout=10).ok
+        with pytest.raises(Exception):
+            f2.result(timeout=10)
+    finally:
+        db._get_batch_at = orig
+        gate.set()
+    # no pinned Versions leaked by either future
+    assert db.versions.stats()["pinned"] == 0
+    db.close()
+
+
+def test_midrun_cancel_marks_remaining_ops_and_releases_pins(tmp_path):
+    db = RemixDB.open(str(tmp_path / "db"), _mem_cfg(submit_workers=1))
+    keys = _fill(db)
+    db.flush()
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = db._get_batch_at
+
+    def blocked(view, qk):
+        entered.set()
+        gate.wait(10)
+        return orig(view, qk)
+
+    db._get_batch_at = blocked
+    try:
+        # two point groups cannot exist on one shard, so force two
+        # stages with a write edge: [mget] [put] [mget]
+        fut = db.submit(
+            Batch([
+                Op.multiget(keys[:4]),
+                Op.put(999999, [1, 1]),
+                Op.multiget(keys[:4]),
+            ])
+        )
+        assert entered.wait(10)
+        assert not fut.cancel()  # running: cooperative interruption
+        gate.set()
+        res = fut.result(timeout=10)
+    finally:
+        db._get_batch_at = orig
+        gate.set()
+    assert res.results[0].ok  # in-flight group completed
+    assert res.results[1].status is OpStatus.CANCELLED
+    assert res.results[2].status is OpStatus.CANCELLED
+    assert db.get(999999) is None
+    assert db.versions.stats()["pinned"] == 0
+    db.close()
+
+
+# ------------------------------------------------------------ admission
+def test_admission_controller_backpressure():
+    adm = AdmissionController(100)
+    assert adm.acquire(80)
+    got = []
+
+    def second():
+        got.append(adm.acquire(50))
+
+    t = threading.Thread(target=second)
+    t.start()
+    time.sleep(0.05)
+    assert not got  # blocked: 80 + 50 > 100
+    adm.release(80)
+    t.join(5)
+    assert got == [True]
+    adm.release(50)
+    s = adm.stats()
+    assert s["inflight_bytes"] == 0 and s["waits"] == 1
+    assert s["peak_bytes"] == 80
+    # deadline expiry while waiting
+    assert adm.acquire(100)
+    assert not adm.acquire(10, deadline_at=time.monotonic() + 0.01)
+    adm.release(100)
+    # sole-occupancy: an over-budget batch admits when idle
+    assert adm.acquire(10_000)
+    adm.release(10_000)
+
+
+def test_submit_deadline_expires_while_queued():
+    db = RemixDB(_mem_cfg(max_inflight_bytes=64))
+    _fill(db, n=10)
+    eng = db.engine()
+    # fill the budget so the next batch waits, with a deadline that fires
+    assert eng.admission.acquire(64)
+    try:
+        fut = db.submit(
+            Batch([Op.get(7, deadline_ms=30.0), Op.get(14, deadline_ms=30.0)]),
+            sync=True,
+        )
+        res = fut.result(timeout=10)
+        assert all(
+            r.status is OpStatus.DEADLINE_EXCEEDED for r in res.results
+        )
+        assert not res.stats["executed"]
+    finally:
+        eng.admission.release(64)
+    # budget free again: same ops execute fine
+    assert db.submit(Batch([Op.get(7)]), sync=True).result().ok
+
+
+# ------------------------------------------------- background compaction
+def test_background_compaction_equivalence(tmp_path):
+    cfg_bg = RemixDBConfig(memtable_entries=500, background_compaction=True)
+    cfg_sy = RemixDBConfig(memtable_entries=500)
+    db_bg = RemixDB.open(str(tmp_path / "bg"), cfg_bg)
+    db_sy = RemixDB.open(str(tmp_path / "sy"), cfg_sy)
+    for db in (db_bg, db_sy):
+        _fill(db, n=450)
+    r = db_bg.flush()
+    assert r.get("background")
+    # reads + writes race the round
+    assert db_bg.get(7) is not None
+    db_bg.put(888888, [8, 8])
+    db_bg.wait_for_compaction()
+    db_sy.flush()
+    db_sy.put(888888, [8, 8])
+    for db in (db_bg, db_sy):
+        _fill(db, lo=2000, n=600)  # triggers a flush mid-batch
+    db_bg.wait_for_compaction()
+    ka, va = db_bg.scan(0, 3000)
+    kb, vb = db_sy.scan(0, 3000)
+    np.testing.assert_array_equal(ka, kb)
+    np.testing.assert_array_equal(va, vb)
+    assert db_bg.stats()["compaction"]["rounds"] >= 2
+    db_bg.close()
+    # recovery equals the synchronous store
+    db_re = RemixDB.open(str(tmp_path / "bg"))
+    kr, vr = db_re.scan(0, 3000)
+    np.testing.assert_array_equal(kr, kb)
+    np.testing.assert_array_equal(vr, vb)
+
+
+def test_background_compaction_snapshot_during_round(tmp_path):
+    db = RemixDB.open(
+        str(tmp_path / "db"),
+        RemixDBConfig(memtable_entries=10 ** 9, background_compaction=True),
+    )
+    keys = _fill(db, n=400)
+    with db.snapshot() as snap:
+        db.flush()
+        db.put(777777, [7, 7])
+        # snapshot taken before the flush ignores the concurrent round
+        kk, _ = snap.scan(0, 1000)
+        np.testing.assert_array_equal(kk, np.sort(keys))
+        assert snap.get(777777) is None
+    db.wait_for_compaction()
+    assert db.get(777777) is not None
+    db.close()
+
+
+# ------------------------------------------------------------ op model
+def test_op_model_basics():
+    with pytest.raises(ValueError):
+        Op.scan(0, -1)
+    op = Op.put(np.array([1, 2], np.uint64), np.ones((2, 2), np.uint32))
+    assert op.write_rows() == 2
+    assert op.cost_bytes(vw=2) == 2 * 16
+    assert not op.is_read and Op.get(1).is_read
+    b = Batch().get(1).put(2, [0, 0]).scan(0, 4).delete(2).multiget([1, 2])
+    assert len(b) == 5
+    assert b.cost_bytes(vw=2) > 0
+    assert "get" in repr(b)
+    # empty multiget / empty put_batch round-trip
+    db = RemixDB(_mem_cfg())
+    f, v = db.get_batch(np.zeros(0, np.uint64))
+    assert len(f) == 0 and v.shape == (0, 2)
+    db.put_batch(np.zeros(0, np.uint64), np.zeros((0, 2), np.uint32))
+    res = db.submit(Batch([Op.multiget(np.zeros(0, np.uint64))]),
+                    sync=True).result()
+    assert res.ok and len(res.results[0].found) == 0
+
+
+def test_executor_stats_and_priority_plan():
+    db = RemixDB(_mem_cfg())
+    _fill(db, n=50)
+    eng = db.engine()
+    b = Batch([
+        Op.get(7, priority=1),
+        Op.scan(0, 4, priority=5),
+        Op.put(1, [1, 1]),
+        Op.get(14),
+    ])
+    stages = eng.plan(b)
+    assert [s.kind for s in stages] == ["read", "write", "read"]
+    assert stages[0].groups[0].priority == 5
+    res = eng.submit(b, sync=True).result()
+    assert res.ok
+    s = eng.stats()
+    assert s["batches"] >= 1 and s["ops"]["get"] >= 2
+    assert s["admission"]["inflight_bytes"] == 0
