@@ -44,6 +44,7 @@ from repro.serve.engine import KVServeEngine
 
 MIN_MIXED_SPEEDUP = 5.0  # acceptance bar at batch 256
 MIN_PURE_RATIO = 0.5  # submit() vs direct batched call, safety net
+MIN_METRICS_RATIO = 0.95  # metrics-on vs metrics-off throughput floor
 SCAN_N = 20
 SPLIT = 1 << 40  # shard boundary
 
@@ -248,6 +249,44 @@ def bench_async(eng, domains, csv: CSV, q: int = 256) -> float:
     return tput
 
 
+def bench_metrics_overhead(roots, domains, csv: CSV, q: int = 256,
+                           reps: int = 5) -> float:
+    """Observability must be ~free: mixed-batch throughput with the
+    metrics registry on vs the no-op instruments, alternating reps on
+    two engines over the same shard files (read-only workload)."""
+    cfg = RemixDBConfig(promote_fraction=1e9)
+    addrs = [(0, roots[0]), (SPLIT, roots[1])]
+    eng_on = KVServeEngine(addrs, config=cfg)
+    eng_off = KVServeEngine(addrs, config=cfg, metrics=False)
+    rng = np.random.default_rng(41)
+    batches = [_mixed_ops(domains, rng, q) for _ in range(3)]
+
+    def one(eng) -> float:
+        t0 = time.perf_counter()
+        for ops in batches:
+            assert eng.submit(Batch(list(ops)), sync=True).result().ok
+        return len(batches) * q / (time.perf_counter() - t0)
+
+    try:
+        one(eng_on), one(eng_off)  # warm both working sets
+        on, off = [], []
+        for _ in range(reps):  # alternate so drift hits both sides
+            on.append(one(eng_on))
+            off.append(one(eng_off))
+        ratio = float(np.median(on) / max(np.median(off), 1e-9))
+    finally:
+        eng_on.close()
+        eng_off.close()
+    csv.emit("engine_metrics_overhead", 1e6 * q / np.median(on),
+             f"q={q};ratio_on_off={ratio:.3f}")
+    if ratio < MIN_METRICS_RATIO:
+        raise AssertionError(
+            f"metrics-on throughput is {ratio:.3f}x metrics-off "
+            f"(bar: >= {MIN_METRICS_RATIO}x)"
+        )
+    return ratio
+
+
 def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
     r_tables, n_per_table = SIZES["tiny" if tiny else "full"]
     with tempfile.TemporaryDirectory(prefix="engine-bench-") as tmp:
@@ -264,8 +303,18 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
         speedup = bench_mixed(eng, domains, csv)
         get_ratio, scan_ratio = bench_pure_paths(eng, domains, csv)
         async_tput = bench_async(eng, domains, csv)
+        # observability artifacts off the same engine: one traced batch
+        # and the full labelled registry snapshot
+        rng = np.random.default_rng(43)
+        traced = eng.submit(
+            Batch(_mixed_ops(domains, rng, 64), trace=True), sync=True
+        ).result()
+        trace = traced.trace
+        assert trace is not None and trace.well_formed()
+        snap = eng.metrics()
         estats = eng.stats()["engine"]
         eng.close()
+        metrics_ratio = bench_metrics_overhead(roots, domains, csv)
     csv.emit(
         "engine_summary", 0.0,
         f"r_tables={r_tables};n_per_table={n_per_table};"
@@ -274,7 +323,25 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
     out = json_path or os.environ.get(
         "BENCH_ENGINE_JSON", os.path.join("results", "BENCH_engine.json")
     )
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    res_dir = os.path.dirname(out) or "."
+    os.makedirs(res_dir, exist_ok=True)
+    # sibling artifacts: the labelled snapshot and the Chrome trace
+    # (chrome://tracing / Perfetto-loadable) — CI uploads both
+    from repro.obs import save_snapshot
+
+    save_snapshot(snap, os.path.join(res_dir, "OBS_snapshot.json"))
+    trace.save_chrome(os.path.join(res_dir, "OBS_trace.json"))
+    # executor section read back from the registry snapshot (the same
+    # samples OBS_snapshot.json carries), not from ad-hoc counters
+    ops_by_kind = {
+        s["labels"]["kind"]: s["value"]
+        for s in snap["metrics"]
+        if s["name"] == "engine_ops"
+    }
+    batch_hist = next(
+        (s for s in snap["metrics"] if s["name"] == "engine_batch_seconds"),
+        None,
+    )
     with open(out, "w") as f:
         json.dump(
             dict(
@@ -287,10 +354,24 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
                 pure_get_ratio=round(get_ratio, 3),
                 pure_scan_ratio=round(scan_ratio, 3),
                 async_ops_per_s=round(async_tput, 1),
+                metrics_overhead_ratio=round(metrics_ratio, 3),
                 executor=dict(
-                    batches=estats["batches"],
-                    ops=estats["ops"],
+                    batches=sum(
+                        s["value"]
+                        for s in snap["metrics"]
+                        if s["name"] == "engine_batches"
+                    ),
+                    ops=ops_by_kind,
+                    batch_seconds=None if batch_hist is None else dict(
+                        count=batch_hist["count"],
+                        p50=batch_hist["p50"],
+                        p99=batch_hist["p99"],
+                    ),
                     admission=estats["admission"],
+                ),
+                trace=dict(
+                    spans=len(trace.spans()),
+                    leaf_coverage=round(trace.leaf_coverage(), 3),
                 ),
             ),
             f,

@@ -105,7 +105,22 @@ def _persist_tables(tables: list[Table], storage) -> None:
         t.path = storage.table_path(name)
 
 
-def execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
+def execute(plan: Plan, cfg: CompactionConfig, storage=None,
+            registry=None) -> ExecResult:
+    """Execute one partition's plan; with a ``registry``, per-kind plan
+    counters and an output-size histogram are recorded alongside the
+    returned :class:`ExecResult` (the store aggregates the rest)."""
+    res = _execute(plan, cfg, storage)
+    if registry is not None:
+        registry.counter("compaction_plans", kind=plan.kind).inc()
+        if res.bytes_written:
+            registry.histogram(
+                "compaction_output_bytes", kind="bytes"
+            ).observe(res.bytes_written)
+    return res
+
+
+def _execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
     p = plan.partition
     if plan.kind in ("noop",):
         return ExecResult()

@@ -40,9 +40,9 @@ from __future__ import annotations
 
 import concurrent.futures
 import contextlib
+import logging
 import threading
 import time
-import traceback
 
 import numpy as np
 
@@ -57,6 +57,18 @@ from repro.db.ops import (
     WRITE_KINDS,
 )
 from repro.db.sharded import route_host
+from repro.obs import events as _events
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
+
+log = logging.getLogger(__name__)
+
+
+def _span(trace, name, **args):
+    """Span context when tracing, free no-op otherwise."""
+    if trace is None:
+        return contextlib.nullcontext()
+    return trace.span(name, **args)
 
 
 def scan_batch_via_ops(engine: "Executor", starts, n: int
@@ -103,13 +115,28 @@ class BatchFuture(concurrent.futures.Future):
 class AdmissionController:
     """Bounded in-flight bytes with blocking (backpressure) acquire."""
 
-    def __init__(self, max_bytes: int):
+    def __init__(self, max_bytes: int,
+                 registry: "_metrics.MetricsRegistry | None" = None):
         self.max_bytes = int(max_bytes)
         self.inflight = 0
         self.peak = 0
-        self.admitted = 0
-        self.waits = 0  # acquires that had to block
+        reg = registry if registry is not None else _metrics.MetricsRegistry()
+        self._c_admitted = reg.counter("admission_admitted")
+        self._c_waits = reg.counter("admission_waits")
+        reg.gauge("admission_inflight_bytes", fn=lambda: self.inflight)
+        reg.gauge("admission_peak_bytes", fn=lambda: self.peak)
+        reg.gauge("admission_max_bytes", fn=lambda: self.max_bytes)
         self._cv = threading.Condition()
+
+    # legacy counter attributes — live views over the registry
+    @property
+    def admitted(self) -> int:
+        return self._c_admitted.value
+
+    @property
+    def waits(self) -> int:
+        """Acquires that had to block."""
+        return self._c_waits.value
 
     def acquire(self, cost: int, deadline_at: float | None = None) -> bool:
         """Block until ``cost`` bytes fit in the budget; False when
@@ -124,7 +151,7 @@ class AdmissionController:
             ):
                 if not waited:
                     waited = True
-                    self.waits += 1
+                    self._c_waits.inc()
                 timeout = None
                 if deadline_at is not None:
                     timeout = deadline_at - time.monotonic()
@@ -133,7 +160,7 @@ class AdmissionController:
                 self._cv.wait(timeout)
             self.inflight += cost
             self.peak = max(self.peak, self.inflight)
-            self.admitted += 1
+            self._c_admitted.inc()
             return True
 
     def release(self, cost: int) -> None:
@@ -190,6 +217,9 @@ class Executor:
         *,
         max_inflight_bytes: int = 64 << 20,
         workers: int = 2,
+        registry: "_metrics.MetricsRegistry | None" = None,
+        events: "_events.EventLog | None" = None,
+        trace_sample_rate: float = 0.0,
     ):
         if not shards:
             raise ValueError("Executor needs at least one shard")
@@ -197,18 +227,34 @@ class Executor:
         self.lows = [int(lo) for lo, _ in shards]
         self.stores = [db for _, db in shards]
         self.vw = int(self.stores[0].cfg.vw)
-        self.admission = AdmissionController(max_inflight_bytes)
+        reg = registry if registry is not None else _metrics.MetricsRegistry()
+        self.registry = reg
+        self.events = events if events is not None else _events.NULL_EVENTS
+        self.admission = AdmissionController(max_inflight_bytes, registry=reg)
         self._n_workers = max(1, int(workers))
         self._queue: list = []
         self._qcv = threading.Condition()
         self._threads: list[threading.Thread] = []
         self._closed = False
-        self._lock = threading.Lock()
-        self._counts = dict(
-            batches=0, completed=0, cancelled_batches=0,
-            ops=dict((k.value, 0) for k in OpKind),
-            deadline_exceeded=0, cancelled_ops=0, errors=0,
-        )
+        # the op/batch counters the legacy ``stats()`` dict was built
+        # from now live in the registry; ``stats()`` reads them back
+        self._c_batches = reg.counter("engine_batches")
+        self._c_completed = reg.counter("engine_batches_completed")
+        self._c_cancelled_batches = reg.counter("engine_batches_cancelled")
+        self._c_deadline = reg.counter("engine_ops_deadline_exceeded")
+        self._c_cancelled_ops = reg.counter("engine_ops_cancelled")
+        self._c_errors = reg.counter("engine_ops_errors")
+        self._c_batch_failures = reg.counter("engine_batch_failures")
+        self._c_ops = {
+            k.value: reg.counter("engine_ops", kind=k.value) for k in OpKind
+        }
+        self._h_batch = reg.histogram("engine_batch_seconds")
+        self._h_wait = reg.histogram("engine_admission_wait_seconds")
+        reg.gauge("engine_queue_depth", fn=lambda: len(self._queue))
+        reg.gauge("engine_workers", fn=lambda: len(self._threads))
+        self._sampler = _tracing.Sampler(trace_sample_rate)
+        self._c_traced = reg.counter("engine_batches_traced")
+        self.last_trace: "_tracing.Trace | None" = None
 
     # ---------------- submission ----------------
     def submit(self, batch: Batch | list, *, sync: bool = False
@@ -229,24 +275,38 @@ class Executor:
             None if op.deadline_ms is None else now + op.deadline_ms / 1e3
             for op in batch.ops
         ]
-        with self._lock:
-            self._counts["batches"] += 1
-            for op in batch.ops:
-                self._counts["ops"][op.kind.value] += 1
+        self._c_batches.inc()
+        for op in batch.ops:
+            self._c_ops[op.kind.value].inc()
+        trace = None
+        if getattr(batch, "trace", False) or self._sampler.should_sample():
+            trace = _tracing.Trace(
+                "batch", args=dict(ops=len(batch.ops), sync=bool(sync))
+            )
+            trace.sampled = not getattr(batch, "trace", False)
+            self._c_traced.inc()
         fut = BatchFuture()
         results: list[OpResult | None] = [None] * len(batch.ops)
         t0 = time.monotonic()
+        ta = _tracing.now()
         cost = self._admit(batch, deadlines, results)
         wait_s = time.monotonic() - t0
+        self._h_wait.observe(wait_s)
+        if trace is not None:
+            trace.leaf("admission", ta, _tracing.now(), bytes=cost)
+        t_sub = time.monotonic()
         if all(r is not None for r in results):  # every op expired waiting
-            self._finish(fut, batch, results, cost, wait_s, started=False)
+            self._finish(fut, batch, results, cost, wait_s, started=False,
+                         trace=trace, t_sub=t_sub)
             return fut
         if sync:
-            self._run(fut, batch, deadlines, results, cost, wait_s)
+            self._run(fut, batch, deadlines, results, cost, wait_s,
+                      trace=trace, t_sub=t_sub)
             return fut
         with self._qcv:
             self._ensure_workers()
-            self._queue.append((fut, batch, deadlines, results, cost, wait_s))
+            self._queue.append((fut, batch, deadlines, results, cost, wait_s,
+                                trace, _tracing.now(), t_sub))
             self._qcv.notify()
         return fut
 
@@ -289,44 +349,58 @@ class Executor:
                 if not self._queue:
                     return  # closed + drained
                 job = self._queue.pop(0)
-            fut, batch, deadlines, results, cost, wait_s = job
+            (fut, batch, deadlines, results, cost, wait_s,
+             trace, t_enq, t_sub) = job
+            if trace is not None:
+                trace.leaf("queue", t_enq, _tracing.now())
             if not fut.set_running_or_notify_cancel():
                 # cancelled while queued: give the bytes back, count ops
                 self.admission.release(cost)
-                with self._lock:
-                    self._counts["cancelled_batches"] += 1
+                self._c_cancelled_batches.inc()
                 continue
             self._run(fut, batch, deadlines, results, cost, wait_s,
-                      mark_running=False)
+                      trace=trace, t_sub=t_sub, mark_running=False)
 
     def _run(self, fut, batch, deadlines, results, cost, wait_s,
-             mark_running=True) -> None:
+             trace=None, t_sub=None, mark_running=True) -> None:
         if mark_running and not fut.set_running_or_notify_cancel():
             self.admission.release(cost)
-            with self._lock:
-                self._counts["cancelled_batches"] += 1
+            self._c_cancelled_batches.inc()
             return
         try:
-            self._execute(fut, batch, deadlines, results)
+            with _tracing.activate(trace):
+                self._execute(fut, batch, deadlines, results, trace)
         except BaseException as e:  # plan-level failure: fail leftover ops
             for i, r in enumerate(results):
                 if r is None:
                     results[i] = OpResult(status=OpStatus.ERROR,
                                           error=repr(e), exc=e)
-            traceback.print_exc()
-        self._finish(fut, batch, results, cost, wait_s, started=True)
+            # structured failure path: a background batch failure lands
+            # in the event log + logging, not on a worker's stderr
+            self._c_batch_failures.inc()
+            self.events.emit("batch_error", error=repr(e),
+                             ops=len(batch.ops))
+            log.exception("op batch execution failed (%d ops)",
+                          len(batch.ops))
+        self._finish(fut, batch, results, cost, wait_s, started=True,
+                     trace=trace, t_sub=t_sub)
 
-    def _finish(self, fut, batch, results, cost, wait_s, started) -> None:
+    def _finish(self, fut, batch, results, cost, wait_s, started,
+                trace=None, t_sub=None) -> None:
         self.admission.release(cost)
         stats = self._batch_stats(batch, results, wait_s, started)
-        with self._lock:
-            self._counts["completed"] += 1
-            self._counts["deadline_exceeded"] += stats["deadline_exceeded"]
-            self._counts["cancelled_ops"] += stats["cancelled"]
-            self._counts["errors"] += stats["errors"]
+        self._c_completed.inc()
+        self._c_deadline.inc(stats["deadline_exceeded"])
+        self._c_cancelled_ops.inc(stats["cancelled"])
+        self._c_errors.inc(stats["errors"])
+        if t_sub is not None:
+            self._h_batch.observe(time.monotonic() - t_sub)
+        if trace is not None:
+            trace.finish()
+            self.last_trace = trace
         if fut.cancelled():
             return  # raced a queue-level cancel
-        fut.set_result(BatchResult(list(results), stats))
+        fut.set_result(BatchResult(list(results), stats, trace=trace))
 
     def _batch_stats(self, batch, results, wait_s, started) -> dict:
         by_status: dict[str, int] = {}
@@ -397,12 +471,20 @@ class Executor:
         return int(route_host(self.lows, np.array([key], np.uint64))[0])
 
     # ---------------- execution ----------------
-    def _execute(self, fut, batch, deadlines, results) -> None:
-        for stage in self.plan(batch):
-            if stage.kind == "write":
-                self._exec_write_stage(fut, batch, deadlines, results, stage)
-            else:
-                self._exec_read_stage(fut, batch, deadlines, results, stage)
+    def _execute(self, fut, batch, deadlines, results, trace=None) -> None:
+        with _span(trace, "plan"):
+            stages = self.plan(batch)
+        for idx, stage in enumerate(stages):
+            with _span(trace, f"stage{idx}:{stage.kind}",
+                       ops=len(stage.ops)):
+                if stage.kind == "write":
+                    self._exec_write_stage(
+                        fut, batch, deadlines, results, stage, trace
+                    )
+                else:
+                    self._exec_read_stage(
+                        fut, batch, deadlines, results, stage, trace
+                    )
 
     def _precheck(self, fut, deadlines, results, idxs) -> list[int]:
         """Mark cancelled/expired ops among ``idxs``; return survivors."""
@@ -435,7 +517,8 @@ class Executor:
         return check
 
     # ---- writes ----
-    def _exec_write_stage(self, fut, batch, deadlines, results, stage):
+    def _exec_write_stage(self, fut, batch, deadlines, results, stage,
+                          trace=None):
         live = self._precheck(fut, deadlines, results, stage.ops)
         if not live:
             return
@@ -479,7 +562,8 @@ class Executor:
                     [np.full(len(c[0]), c[2], bool) for c in chunks]
                 )
                 # one WAL group commit + MemTable apply per shard
-                self.stores[shard]._apply_writes(keys, vals, tombs)
+                with _span(trace, f"shard{shard}:commit", rows=len(keys)):
+                    self.stores[shard]._apply_writes(keys, vals, tombs)
         except Exception as e:
             for i in live:
                 results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
@@ -488,7 +572,8 @@ class Executor:
             results[i] = OpResult(status=OpStatus.OK)
 
     # ---- reads ----
-    def _exec_read_stage(self, fut, batch, deadlines, results, stage):
+    def _exec_read_stage(self, fut, batch, deadlines, results, stage,
+                         trace=None):
         groups = sorted(
             stage.groups.values(), key=lambda g: (-g.priority, g.shard)
         )
@@ -507,8 +592,13 @@ class Executor:
             # MultiGet fan-in buffers: op_idx -> (found, vals)
             mg: dict[int, list] = {}
             for g in groups:
-                self._exec_points(fut, batch, deadlines, results, g, view, mg)
-                self._exec_scans(fut, batch, deadlines, results, g, view)
+                with _span(trace, f"shard{g.shard}:read",
+                           gets=len(g.gets) + len(g.mgets),
+                           scans=sum(len(v) for v in g.scans.values())):
+                    self._exec_points(
+                        fut, batch, deadlines, results, g, view, mg
+                    )
+                    self._exec_scans(fut, batch, deadlines, results, g, view)
             for i, (found, vals) in mg.items():
                 if results[i] is None:
                     results[i] = OpResult(
@@ -641,11 +731,21 @@ class Executor:
                 t.join()
 
     def stats(self) -> dict:
-        with self._lock, self._qcv:
-            out = dict(self._counts)
-            out["ops"] = dict(self._counts["ops"])
-            out["queue_depth"] = len(self._queue)
-            out["workers"] = len(self._threads)
+        """Legacy stats dict — a view reading the registry counters back
+        out (bit-compatible with the pre-registry ``_counts`` layout)."""
+        with self._qcv:
+            qd, wk = len(self._queue), len(self._threads)
+        out = dict(
+            batches=self._c_batches.value,
+            completed=self._c_completed.value,
+            cancelled_batches=self._c_cancelled_batches.value,
+            ops={k.value: self._c_ops[k.value].value for k in OpKind},
+            deadline_exceeded=self._c_deadline.value,
+            cancelled_ops=self._c_cancelled_ops.value,
+            errors=self._c_errors.value,
+        )
+        out["queue_depth"] = qd
+        out["workers"] = wk
         out["admission"] = self.admission.stats()
         out["shards"] = len(self.stores)
         return out

@@ -167,10 +167,16 @@ class Batch:
 
         b = Batch().put(1, [1, 0]).get(1).scan(0, 8)
         res = db.submit(b).result()
+
+    ``trace=True`` opts this batch into op-lifecycle tracing regardless
+    of the executor's ``trace_sample_rate``: the executor records a span
+    tree (admission → plan → per-shard groups → cache/disk/CKB leaves)
+    and returns it on ``BatchResult.trace``.
     """
 
-    def __init__(self, ops: list[Op] | None = None):
+    def __init__(self, ops: list[Op] | None = None, *, trace: bool = False):
         self.ops: list[Op] = list(ops) if ops else []
+        self.trace = bool(trace)
 
     def add(self, op: Op) -> "Batch":
         self.ops.append(op)
@@ -244,10 +250,17 @@ class OpResult:
 
 @dataclasses.dataclass
 class BatchResult:
-    """Per-op results (batch order) + the batch's execution stats."""
+    """Per-op results (batch order) + the batch's execution stats.
+
+    ``trace`` carries the :class:`repro.obs.tracing.Trace` span tree when
+    the batch was traced (``Batch(trace=True)`` or sampled), else None.
+    """
 
     results: list[OpResult]
     stats: dict
+    trace: object | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def __len__(self) -> int:
         return len(self.results)

@@ -165,16 +165,27 @@ class Table:
         return self._rd().section_rows_resident(section, lo, hi)
 
     def ckb(self):
-        """Restart-point CKB reader over cached block reads (or None)."""
+        """Restart-point CKB reader over cached block reads (or None).
+
+        The reader's interval-decode memo is bounded by an entry budget
+        tied to the block-cache byte budget (1/64th of it in decoded
+        8-byte key entries per reader), so a long-lived handle over a
+        huge table can no longer hold more decoded keys than the cache
+        it shadows holds raw bytes. Cacheless handles keep a small
+        fixed budget.
+        """
         if self._ckb is None:
             rd = self._rd()
             if not rd.has_ckb:
                 return None
             from repro.io.ckb import CKBReader
 
+            cap = getattr(self._cache, "capacity_bytes", None)
+            budget = (cap // 64) if cap else (1 << 20)
             self._ckb = CKBReader(
                 rd._ckb_len,
                 lambda lo, hi: rd.read_section_bytes("ckb", lo, hi),
+                memo_entries=budget,
             )
         return self._ckb
 

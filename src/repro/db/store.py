@@ -41,6 +41,7 @@ import dataclasses
 import os
 import tempfile
 import threading
+import time
 
 import numpy as np
 
@@ -63,6 +64,8 @@ from repro.db.partition import Partition, Table
 from repro.db.sharded import partition_spans, route_host, route_one
 from repro.db.version import Snapshot, VersionSet
 from repro.db.wal import WAL
+from repro.obs.events import EventLog, NULL_EVENTS
+from repro.obs.metrics import MetricsRegistry, merge_snapshots
 
 
 @dataclasses.dataclass
@@ -129,6 +132,21 @@ class RemixDBConfig:
     # worker threads serving async submit(); sync submissions (and the
     # legacy wrappers) execute inline and never touch them
     submit_workers: int = 2
+    # ---- observability (docs/OBSERVABILITY.md) ----
+    # master toggle: False hands every layer no-op instruments and a
+    # null event log, removing even the counter lock acquires (the
+    # registry-backed stats()/wa fields then read as zero)
+    metrics: bool = True
+    # fraction of op batches traced without an explicit Batch(trace=True)
+    # (deterministic 1-in-round(1/rate) sampling; 0 disables)
+    trace_sample_rate: float = 0.0
+    # ring capacity of the structured lifecycle event log
+    event_log_capacity: int = 256
+    # optional JSONL sink mirroring every event append-only to disk
+    event_log_path: str | None = None
+    # share a MetricsRegistry across components (e.g. per-shard labelled
+    # registries from a serving tier); None creates a private one
+    registry: object | None = dataclasses.field(default=None, repr=False)
 
 
 
@@ -160,6 +178,20 @@ class RemixDB:
             )
         if self.cfg.prefetch_depth < 0:
             raise ValueError("prefetch_depth must be >= 0")
+        # observability: one registry + one lifecycle event log shared by
+        # every layer this store owns (cache, WAL, versions, executor);
+        # metrics=False hands out no-op instruments and a null event log
+        self.registry = (
+            self.cfg.registry
+            if self.cfg.registry is not None
+            else MetricsRegistry(enabled=self.cfg.metrics)
+        )
+        self.events = (
+            EventLog(self.cfg.event_log_capacity,
+                     jsonl_path=self.cfg.event_log_path)
+            if self.cfg.metrics
+            else NULL_EVENTS
+        )
         self.mem = MemTable(vw=self.cfg.vw)
         self.storage = None
         self.block_cache = None
@@ -173,7 +205,8 @@ class RemixDB:
             self.block_cache = (
                 self.cfg.block_cache
                 if self.cfg.block_cache is not None
-                else BlockCache(self.cfg.cache_bytes)
+                else BlockCache(self.cfg.cache_bytes,
+                                registry=self.registry)
             )
             state = self.storage.load_state()
             wal_path = self.storage.wal_path()
@@ -182,21 +215,53 @@ class RemixDB:
             os.makedirs(wal_dir, exist_ok=True)
             wal_path = os.path.join(wal_dir, "wal.log")
         self.wal = WAL(wal_path, vw=self.cfg.vw,
-                       sync_policy=self.cfg.sync_policy)
+                       sync_policy=self.cfg.sync_policy,
+                       registry=self.registry)
         self.seq = 1
+        # registry-backed accounting; the legacy attribute names
+        # (user_bytes, table_bytes_written, compaction_totals, ...) are
+        # read-only property views over these counters so stats() and
+        # write_amplification() stay bit-compatible
+        reg = self.registry
         # physical-read bytes of table handles retired with their last
         # Version, so disk_bytes_read() is monotonic across table
         # replacement
-        self._retired_disk_bytes = 0
+        self._c_retired_bytes = reg.counter("db_retired_disk_bytes")
         # write-amplification accounting (fig 16)
-        self.user_bytes = 0
-        self.table_bytes_written = 0
-        # last-N compaction rounds (ring) + lifetime aggregates
+        self._c_user_bytes = reg.counter("db_user_bytes")
+        self._c_table_bytes = reg.counter("db_table_bytes_written")
+        self._c_comp_rounds = reg.counter("db_compaction_rounds")
+        self._c_comp_bytes = reg.counter("db_compaction_bytes_written")
+        self._comp_kinds: set[str] = set()  # plan kinds seen so far
+        self._h_flush = reg.histogram("db_flush_seconds")
+        reg.gauge("db_memtable_entries", fn=lambda: len(self.mem))
+        reg.gauge("db_partitions", fn=lambda: len(self.partitions))
+        reg.gauge(
+            "db_tables",
+            fn=lambda: sum(len(p.tables) for p in self.partitions),
+        )
+        reg.gauge("db_disk_bytes_read", fn=self.disk_bytes_read)
+        reg.multi_gauge(
+            "db_partition_cold_gets",
+            fn=lambda: [
+                (dict(lo=str(p.lo)), p.cold_gets) for p in self.partitions
+            ],
+        )
+        reg.multi_gauge(
+            "db_partition_cold_scans",
+            fn=lambda: [
+                (dict(lo=str(p.lo)), p.cold_scans) for p in self.partitions
+            ],
+        )
+        reg.gauge("ckb_memo_entries", fn=lambda: self._ckb_memo("entries"))
+        reg.gauge("ckb_memo_bytes", fn=lambda: self._ckb_memo("bytes"))
+        reg.gauge(
+            "ckb_memo_evictions", fn=lambda: self._ckb_memo("evictions")
+        )
+        # last-N compaction rounds (ring); lifetime aggregates live in
+        # the registry counters above (see the compaction_totals view)
         self.compaction_log: collections.deque = collections.deque(
             maxlen=max(1, self.cfg.compaction_log_rounds)
-        )
-        self.compaction_totals: dict = dict(
-            rounds=0, kinds={}, bytes_written=0
         )
         # one writer at a time; readers never take this lock — they pin
         # a Version and proceed. Reentrant because a publish inside
@@ -227,9 +292,8 @@ class RemixDB:
         # MemTable (the data mid-compaction) instead of the drained live
         # one — a snapshot taken mid-flush must still see pre-flush state
         self._flush_overlay: dict | None = None
-        # release-hook accounting only (never nests with other locks)
-        self._acct_lock = threading.Lock()
-        self.versions = VersionSet(on_release=self._on_version_release)
+        self.versions = VersionSet(on_release=self._on_version_release,
+                                   registry=self.registry)
         self.versions.publish(
             [Partition(lo=0, d=self.cfg.d)], seq_horizon=0
         )
@@ -260,6 +324,43 @@ class RemixDB:
         """The current Version's partitions (immutable tuple). Mutating
         store state goes through ``flush()``/``VersionSet.publish``."""
         return self.versions.current.partitions
+
+    # ---- registry-backed views of the legacy accounting attributes ----
+    @property
+    def user_bytes(self) -> int:
+        return self._c_user_bytes.value
+
+    @property
+    def table_bytes_written(self) -> int:
+        return self._c_table_bytes.value
+
+    @property
+    def _retired_disk_bytes(self) -> int:
+        return self._c_retired_bytes.value
+
+    @property
+    def compaction_totals(self) -> dict:
+        kinds = {}
+        for k in sorted(self._comp_kinds):
+            v = self.registry.counter("compaction_plans", kind=k).value
+            if v:
+                kinds[k] = v
+        return dict(
+            rounds=self._c_comp_rounds.value,
+            kinds=kinds,
+            bytes_written=self._c_comp_bytes.value,
+        )
+
+    def _ckb_memo(self, field: str) -> int:
+        """Aggregate CKB interval-memo accounting over resident readers
+        (header-cheap: never materializes a reader)."""
+        total = 0
+        for p in self.partitions:
+            for t in p.tables:
+                ck = getattr(t, "_ckb", None)
+                if ck is not None:
+                    total += ck.memo_stats()[field]
+        return total
 
     def _recover(self, state: dict) -> None:
         """Rebuild partitions/WAL/MemTable from a committed manifest."""
@@ -310,6 +411,8 @@ class RemixDB:
         self.wal.restore_state(state["wal"])
         self.wal.recover_tail()
         self._replay_wal()
+        self.events.emit("recover", partitions=len(parts),
+                         memtable=len(self.mem))
 
     def _replay_wal(self) -> None:
         """Rebuild the MemTable from the WAL's live log; advance seq past
@@ -366,7 +469,9 @@ class RemixDB:
             live: set[str] = set()
             for v in self.versions.live_versions():
                 live |= v.file_names()
-            self.storage.gc_orphans(live)
+            removed = self.storage.gc_orphans(live)
+            if removed:
+                self.events.emit("file_gc", removed=len(removed))
         finally:
             self._flush_lock.release()
 
@@ -379,9 +484,8 @@ class RemixDB:
             for t in version.tables()
             if id(t) not in live_ids and t._reader is not None
         )
-        if retired:
-            with self._acct_lock:  # hooks run on whichever thread unpins
-                self._retired_disk_bytes += retired
+        if retired:  # hooks run on whichever thread unpins
+            self._c_retired_bytes.inc(retired)
         if self.storage is not None:
             self._gc_files()
 
@@ -397,6 +501,7 @@ class RemixDB:
             self._commit(self.versions.current.partitions)
             self.wal.release_quarantine()
             self._gc_files()
+        self.events.close()
 
     # ---------------- operation layer (API v2) ----------------
     def engine(self):
@@ -411,6 +516,9 @@ class RemixDB:
                         [(0, self)],
                         max_inflight_bytes=self.cfg.max_inflight_bytes,
                         workers=self.cfg.submit_workers,
+                        registry=self.registry,
+                        events=self.events,
+                        trace_sample_rate=self.cfg.trace_sample_rate,
                     )
         return self._ops_engine
 
@@ -465,7 +573,7 @@ class RemixDB:
             with self._state_lock:
                 self.seq = self.mem.put_batch(keys, vals, self.seq,
                                               tomb=tombs)
-            self.user_bytes += n * (8 + 4 * self.cfg.vw)
+            self._c_user_bytes.inc(n * (8 + 4 * self.cfg.vw))
         self._maybe_flush()
 
     def _maybe_flush(self):
@@ -551,6 +659,8 @@ class RemixDB:
             self.mem = MemTable(vw=self.cfg.vw)
             self._flush_overlay = frozen.data
             self._in_flush = True
+        self.events.emit("flush", entries=int(len(keys)),
+                         hot=int(hot.sum()))
         return (frozen, keys, vals, seq, tomb, hot)
 
     def _flush_locked(self) -> dict:
@@ -565,6 +675,7 @@ class RemixDB:
                 self._in_flush = False
 
     def _compact(self, frozen, keys, vals, seq, tomb, hot) -> dict:
+        t_round = time.monotonic()
         # hot keys skip compaction; carried over with halved counters
         # (under the state lock: with background compaction, writers may
         # be inserting into the live MemTable concurrently)
@@ -588,8 +699,9 @@ class RemixDB:
         new_parts: list[Partition] = []
         for p, pl in zip(base, plans):
             kinds[pl.kind] = kinds.get(pl.kind, 0) + 1
-            res = execute(pl, self.cfg.compaction, storage=self.storage)
-            self.table_bytes_written += res.bytes_written
+            res = execute(pl, self.cfg.compaction, storage=self.storage,
+                          registry=self.registry)
+            self._c_table_bytes.inc(res.bytes_written)
             round_bytes += res.bytes_written
             if res.carried is not None:  # aborted: back into the MemTable
                 with self._state_lock:
@@ -614,26 +726,35 @@ class RemixDB:
             with self._state_lock:
                 live_keys = set(self.mem.data.keys())
             self.wal.gc(live_keys, defer_free=self.storage is not None)
+            self.events.emit("wal_gc", live_keys=len(live_keys),
+                             used_blocks=self.wal.used_blocks())
             if self.storage is not None:
                 self._commit(new_parts)  # the version edge
+                self.events.emit("wal_checkpoint",
+                                 blocks=self.wal.used_blocks())
         # pointer swap: readers pinning the old Version keep it alive
         # (with no pins its exclusively-owned files are reclaimed at the
         # flush-end gc below); the frozen overlay retires in the same
         # critical section so no reader pairs the new Version with it
         with self._state_lock:
-            self.versions.publish(new_parts, seq_horizon=self.seq)
+            v = self.versions.publish(new_parts, seq_horizon=self.seq)
             self._flush_overlay = None
+        self.events.emit("version_publish", vid=v.vid,
+                         partitions=len(new_parts))
         if self.storage is not None:
             with self._write_lock:
                 self.wal.release_quarantine()
             self._gc_files(from_flush=True)
         stats = dict(kinds=kinds)
         self.compaction_log.append(stats)
-        self.compaction_totals["rounds"] += 1
-        self.compaction_totals["bytes_written"] += round_bytes
-        tk = self.compaction_totals["kinds"]
-        for k, v in kinds.items():
-            tk[k] = tk.get(k, 0) + v
+        self._c_comp_rounds.inc()
+        self._c_comp_bytes.inc(round_bytes)
+        self._comp_kinds.update(kinds)
+        dt = time.monotonic() - t_round
+        self._h_flush.observe(dt)
+        self.events.emit("compaction", kinds=dict(kinds),
+                         bytes_written=int(round_bytes),
+                         duration_s=round(dt, 6))
         return stats
 
     # ---------------- snapshots / cursors ----------------
@@ -704,12 +825,24 @@ class RemixDB:
         True only while the recovered on-disk REMIX still matches the
         table list and the observed cold workload hasn't yet justified
         building the device RunSet (promotion)."""
-        return (
+        if not (
             self.cfg.cold_reads
             and self.block_cache is not None
             and p.cold_ready()
-            and not p.should_promote(self.cfg.promote_fraction)
-        )
+        ):
+            return False
+        if not p.should_promote(self.cfg.promote_fraction):
+            return True
+        # promotion edge: first read that tips this partition over emits
+        # one lifecycle event (the flag lives on the partition so its
+        # clones in later Versions don't re-emit)
+        if not getattr(p, "_promotion_emitted", False):
+            p._promotion_emitted = True
+            self.events.emit("promotion", lo=int(p.lo),
+                             tables=len(p.tables),
+                             cold_gets=int(p.cold_gets),
+                             cold_scans=int(p.cold_scans))
+        return False
 
     def get(self, key: int):
         r = self._run_one(Op.get(int(key)))
@@ -964,6 +1097,22 @@ class RemixDB:
                 if p.cold_ready()
             ]
         return out
+
+    def metrics(self) -> dict:
+        """One merged observability snapshot (``{"metrics": [...]}``):
+        this store's registry plus any component running its own (an
+        externally shared :class:`~repro.io.blockcache.BlockCache`).
+        Render with :func:`repro.obs.render_prometheus`, diff with
+        :func:`repro.obs.diff_snapshots` (or ``tools/obstool.py``)."""
+        parts = [self.registry.snapshot()]
+        bc = self.block_cache
+        if bc is not None and getattr(bc, "registry", None) is not None \
+                and bc.registry is not self.registry:
+            parts.append(bc.registry.snapshot())
+        eng = self._ops_engine
+        if eng is not None and eng.registry is not self.registry:
+            parts.append(eng.registry.snapshot())
+        return merge_snapshots(*parts)
 
     def recover_memtable(self) -> MemTable:
         """Rebuild the MemTable from the WAL's live virtual log (§4.3)."""

@@ -70,7 +70,7 @@ class VersionSet:
     flush publishes.
     """
 
-    def __init__(self, on_release=None):
+    def __init__(self, on_release=None, registry=None):
         # reentrant: a cyclic-GC-collected Snapshot's finalizer may call
         # unpin() on the very thread that is inside publish()/pin_current
         # holding this lock — a plain Lock would self-deadlock. Reentrant
@@ -82,6 +82,14 @@ class VersionSet:
         self._next_vid = 1
         self.current: Version | None = None
         self.on_release = on_release
+        if registry is None:
+            from repro.obs import metrics as _metrics
+
+            registry = _metrics.MetricsRegistry()
+        self._c_publishes = registry.counter("versions_published")
+        self._c_releases = registry.counter("versions_released")
+        registry.gauge("versions_live", fn=lambda: len(self._live))
+        registry.gauge("versions_pinned", fn=lambda: self.stats()["pinned"])
 
     def publish(self, partitions, seq_horizon: int) -> Version:
         """Install a new current Version; the old one is unpinned (and
@@ -92,6 +100,7 @@ class VersionSet:
             v.refs = 1  # the ``current`` pointer's own pin
             self._live[v.vid] = v
             old, self.current = self.current, v
+        self._c_publishes.inc()
         if old is not None:
             self.unpin(old)
         return v
@@ -110,8 +119,10 @@ class VersionSet:
                 del self._live[v.vid]
                 remaining = list(self._live.values())
                 fire = True
-        if fire and self.on_release is not None:
-            self.on_release(v, remaining)
+        if fire:
+            self._c_releases.inc()
+            if self.on_release is not None:
+                self.on_release(v, remaining)
 
     def live_versions(self) -> list[Version]:
         with self._lock:

@@ -36,6 +36,8 @@ import struct
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+
 BLOCK = 4096
 HDR = 8  # 1-bit epoch in byte 0 + u16 record count + padding
 
@@ -71,6 +73,7 @@ class WAL:
         vw: int = 2,
         capacity_blocks: int = 1 << 20,
         sync_policy: str = "block",
+        registry: "_metrics.MetricsRegistry | None" = None,
     ):
         if sync_policy not in self.SYNC_POLICIES:
             raise ValueError(
@@ -93,7 +96,15 @@ class WAL:
         self.vlog = VirtualLog(timestamp=1)
         self._pending: list[tuple[int, int, int, np.ndarray]] = []
         self._dirty = False  # blocks written since the last fsync
-        self.bytes_written = 0  # physical write accounting (for WA ratios)
+        # physical write accounting (for WA ratios) — registry-backed;
+        # the legacy ``wal.bytes_written`` attribute reads it back out
+        reg = registry if registry is not None else _metrics.MetricsRegistry()
+        self._c_bytes_written = reg.counter("wal_bytes_written")
+        self._c_blocks_flushed = reg.counter("wal_blocks_flushed")
+        self._c_fsyncs = reg.counter("wal_fsyncs")
+        self._c_gc_rounds = reg.counter("wal_gc_rounds")
+        reg.gauge("wal_used_blocks", fn=self.used_blocks)
+        reg.gauge("wal_free_blocks", fn=lambda: len(self.free))
         # highest sequence number ever appended — the durable sequence
         # horizon. Checkpointed with the mapping table and advanced by
         # tail recovery, so a reopened store never reissues a seq that a
@@ -103,6 +114,10 @@ class WAL:
         if not os.path.exists(path):
             with open(path, "wb"):
                 pass
+
+    @property
+    def bytes_written(self) -> int:
+        return self._c_bytes_written.value
 
     # ---------- append path ----------
     def append(self, key: int, seq: int, tomb: bool, val: np.ndarray):
@@ -157,7 +172,8 @@ class WAL:
             f.seek(phys * BLOCK)
             f.write(data)
         self._dirty = True
-        self.bytes_written += BLOCK
+        self._c_bytes_written.inc(BLOCK)
+        self._c_blocks_flushed.inc()
         self.vlog.blocks.append(
             BlockMap(phys=phys, epoch=epoch, written=True,
                      bitmap=(1 << n) - 1)
@@ -169,6 +185,7 @@ class WAL:
             with open(self.path, "rb") as f:
                 os.fsync(f.fileno())
             self._dirty = False
+            self._c_fsyncs.inc()
 
     def sync(self):
         """Flush buffered records to blocks and fsync them to disk: after
@@ -221,6 +238,7 @@ class WAL:
         :meth:`release_quarantine` after the commit.
         """
         self.sync()
+        self._c_gc_rounds.inc()
         new = VirtualLog(timestamp=self.vlog.timestamp + 1)
         rewrite: list[tuple[int, int, int, np.ndarray]] = []
         freed = []

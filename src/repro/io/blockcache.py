@@ -13,7 +13,11 @@ surviving file), but a reused name never resolves to stale blocks.
 
 Capacity is a byte budget, not an entry count: eviction pops
 least-recently-used granules until the budget holds. Hit/miss/eviction
-counters feed ``RemixDB.stats()["cache"]``.
+counters live in a :class:`repro.obs.metrics.MetricsRegistry` (names
+``cache_*``); the legacy attributes (``cache.hits`` …) and the
+``stats()`` dict read straight from the registry instruments, so
+``RemixDB.stats()["cache"]`` is bit-compatible with the pre-registry
+layout.
 
 Payloads are any immutable bytes-like object. In ``cache_mode="copy"``
 (the default) they are heap ``bytes``; in ``cache_mode="mmap"``
@@ -29,11 +33,20 @@ served to a reader counts as a *prefetch hit*; a tagged block evicted
 (or cleared) before anyone read it counts as *prefetch waste*. The
 counters surface in ``stats()`` so cold-scan pipelining can prove it
 fetches no block the eager path would not have fetched.
+
+Tracing: when a trace is active on the calling thread (see
+:mod:`repro.obs.tracing`), :meth:`get_or_load` records a ``cache_fetch``
+span (with hit/miss and byte count); the miss path's ``loader()`` runs
+inside it, so ``disk_read`` leaf spans from the SSTable reader nest
+underneath.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from typing import Callable, Hashable
+
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 
 DEFAULT_CAPACITY = 64 << 20  # 64 MB
 
@@ -41,19 +54,50 @@ DEFAULT_CAPACITY = 64 << 20  # 64 MB
 class BlockCache:
     """Bytes-budgeted LRU over immutable, already-verified file blocks."""
 
-    def __init__(self, capacity_bytes: int = DEFAULT_CAPACITY):
+    def __init__(self, capacity_bytes: int = DEFAULT_CAPACITY,
+                 registry: "_metrics.MetricsRegistry | None" = None):
         if capacity_bytes <= 0:
             raise ValueError("cache capacity must be positive")
         self.capacity_bytes = int(capacity_bytes)
         self._blocks: OrderedDict[Hashable, bytes] = OrderedDict()
         self.cached_bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
         self._prefetched: set[Hashable] = set()
-        self.prefetch_issued = 0
-        self.prefetch_hits = 0
-        self.prefetch_waste = 0
+        reg = registry if registry is not None else _metrics.MetricsRegistry()
+        self.registry = reg
+        self._c_hits = reg.counter("cache_hits")
+        self._c_misses = reg.counter("cache_misses")
+        self._c_evictions = reg.counter("cache_evictions")
+        self._c_pf_issued = reg.counter("cache_prefetch_issued")
+        self._c_pf_hits = reg.counter("cache_prefetch_hits")
+        self._c_pf_waste = reg.counter("cache_prefetch_waste")
+        reg.gauge("cache_entries", fn=lambda: len(self._blocks))
+        reg.gauge("cache_cached_bytes", fn=lambda: self.cached_bytes)
+        reg.gauge("cache_capacity_bytes", fn=lambda: self.capacity_bytes)
+
+    # legacy counter attributes — live views over the registry
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evictions.value
+
+    @property
+    def prefetch_issued(self) -> int:
+        return self._c_pf_issued.value
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self._c_pf_hits.value
+
+    @property
+    def prefetch_waste(self) -> int:
+        return self._c_pf_waste.value
 
     def __len__(self) -> int:
         return len(self._blocks)
@@ -69,13 +113,13 @@ class BlockCache:
         """Cached payload for ``key`` (marks it most-recently-used)."""
         data = self._blocks.get(key)
         if data is None:
-            self.misses += 1
+            self._c_misses.inc()
             return None
         self._blocks.move_to_end(key)
-        self.hits += 1
+        self._c_hits.inc()
         if key in self._prefetched:
             self._prefetched.discard(key)
-            self.prefetch_hits += 1
+            self._c_pf_hits.inc()
         return data
 
     def put(self, key: Hashable, data: bytes) -> None:
@@ -93,17 +137,27 @@ class BlockCache:
         while self.cached_bytes > self.capacity_bytes:
             vkey, victim = self._blocks.popitem(last=False)
             self.cached_bytes -= len(victim)
-            self.evictions += 1
+            self._c_evictions.inc()
             if vkey in self._prefetched:
                 self._prefetched.discard(vkey)
-                self.prefetch_waste += 1
+                self._c_pf_waste.inc()
 
     def get_or_load(self, key: Hashable, loader: Callable[[], bytes]) -> bytes:
         """``get`` with a miss-path ``loader()`` whose result is cached."""
-        data = self.get(key)
-        if data is None:
-            data = loader()
-            self.put(key, data)
+        tr = _tracing.current()
+        if tr is None:
+            data = self.get(key)
+            if data is None:
+                data = loader()
+                self.put(key, data)
+            return data
+        with tr.span("cache_fetch") as sp:
+            data = self.get(key)
+            hit = data is not None
+            if data is None:
+                data = loader()
+                self.put(key, data)
+            sp.args.update(hit=hit, bytes=len(data))
         return data
 
     def prefetch(self, key: Hashable, loader: Callable[[], bytes]) -> None:
@@ -121,12 +175,12 @@ class BlockCache:
         self.put(key, data)
         if key in self._blocks:  # may be budget-rejected (oversized payload)
             self._prefetched.add(key)
-            self.prefetch_issued += 1
+            self._c_pf_issued.inc()
 
     def clear(self) -> None:
         self._blocks.clear()
         self.cached_bytes = 0
-        self.prefetch_waste += len(self._prefetched)
+        self._c_pf_waste.inc(len(self._prefetched))
         self._prefetched.clear()
 
     def stats(self) -> dict:

@@ -20,8 +20,11 @@ from __future__ import annotations
 
 import struct
 import threading
+from collections import OrderedDict
 
 import numpy as np
+
+from repro.obs import tracing as _tracing
 
 MAGIC = 0x31424B43  # 'CKB1' little-endian
 _HDR = struct.Struct("<IIHH")
@@ -91,7 +94,7 @@ class CKBReader:
 
     RESTART_CHUNK = 512  # restart keys materialized per span fetch
 
-    def __init__(self, length: int, fetch):
+    def __init__(self, length: int, fetch, memo_entries: int | None = None):
         self.length = int(length)
         self._fetch = fetch
         magic, n, kb, interval = _HDR.unpack_from(fetch(0, _HDR.size), 0)
@@ -115,17 +118,39 @@ class CKBReader:
         self._rk_valid: np.ndarray | None = None
         # interval-decode memo (8-byte keys): keys of fully decoded
         # restart intervals, so repeated batched seeks over a warm
-        # working set pay the entry-stream decode once per interval
-        self._iv_keys: np.ndarray | None = None
-        self._iv_valid: np.ndarray | None = None
+        # working set pay the entry-stream decode once per interval.
+        # Bounded LRU: ``memo_entries`` caps decoded *key* entries held
+        # (None = unbounded, e.g. small in-memory CKBs); table handles
+        # derive the budget from the block-cache byte budget, so the memo
+        # can no longer outgrow the cache it shadows.
+        self._iv: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.memo_entries_budget = (
+            None if memo_entries is None else max(int(memo_entries), 1)
+        )
+        self.memo_evictions = 0
         # guards both memos (restart chunks + decoded intervals): the op
         # layer's async worker pool reads one table from several threads
         self._memo_lock = threading.Lock()
 
     @classmethod
-    def from_bytes(cls, buf: bytes | memoryview) -> "CKBReader":
+    def from_bytes(cls, buf: bytes | memoryview,
+                   memo_entries: int | None = None) -> "CKBReader":
         mv = memoryview(buf)
-        return cls(len(mv), lambda lo, hi: bytes(mv[lo:hi]))
+        return cls(len(mv), lambda lo, hi: bytes(mv[lo:hi]),
+                   memo_entries=memo_entries)
+
+    def memo_stats(self) -> dict:
+        """Size/eviction accounting of the interval-decode memo (feeds
+        the ``ckb_memo_{entries,bytes,evictions}`` registry gauges)."""
+        with self._memo_lock:
+            rows = len(self._iv)
+            rk = 0 if self._rk64 is None else self._rk64.nbytes
+            return dict(
+                entries=rows * self.interval,
+                bytes=rows * self.interval * 8 + rk,
+                evictions=self.memo_evictions,
+                budget_entries=self.memo_entries_budget,
+            )
 
     def _restart_offsets(self) -> np.ndarray:
         if self._restarts is None:
@@ -256,16 +281,31 @@ class CKBReader:
         js = np.asarray(js, np.int64)
         ii = self.interval
         with self._memo_lock:
-            if self._iv_keys is None:
-                self._iv_keys = np.zeros((self.n_restarts, ii), np.uint64)
-                self._iv_valid = np.zeros(self.n_restarts, bool)
             all_counts = np.minimum(self.n - js * ii, ii).astype(np.int64)
-            todo = js[~self._iv_valid[js]]
+            memo = self._iv
+            todo = np.array(
+                [j for j in js.tolist() if j not in memo], np.int64
+            )
             if len(todo):
-                keys, counts = self._decode_intervals_uncached(todo)
-                self._iv_keys[todo] = keys
-                self._iv_valid[todo] = True
-            return self._iv_keys[js], all_counts
+                tr = _tracing.current()
+                t0 = _tracing.now() if tr is not None else 0.0
+                keys, _ = self._decode_intervals_uncached(todo)
+                if tr is not None:
+                    tr.leaf("ckb_decode", t0, _tracing.now(),
+                            intervals=len(todo), rows=int(len(todo)) * ii)
+                for r, j in enumerate(todo.tolist()):
+                    memo[j] = keys[r]
+            out = np.empty((len(js), ii), np.uint64)
+            for r, j in enumerate(js.tolist()):
+                out[r] = memo[j]  # copies the row: safe to evict below
+                memo.move_to_end(j)
+            budget = self.memo_entries_budget
+            if budget is not None:
+                max_rows = max(1, budget // ii)
+                while len(memo) > max_rows:
+                    memo.popitem(last=False)
+                    self.memo_evictions += 1
+            return out, all_counts
 
     def _decode_intervals_uncached(self, js: np.ndarray
                                    ) -> tuple[np.ndarray, np.ndarray]:

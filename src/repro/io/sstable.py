@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.io.checksum import crc32c
 from repro.io.ckb import decode_ckb, encode_ckb
+from repro.obs import tracing as _tracing
 
 MAGIC = b"RMIXSST1"
 FOOTER_MAGIC = b"RMIXFTR1"
@@ -192,6 +193,8 @@ class SSTableReader:
 
     def _load_block(self, idx: int, f) -> bytes:
         """Read granule ``idx`` from ``f`` and verify its CRC32C."""
+        tr = _tracing.current()
+        t0 = _tracing.now() if tr is not None else 0.0
         bb = self.block_bytes
         lo = self._data_start + idx * bb
         hi = min(lo + bb, self._data_end)
@@ -200,6 +203,8 @@ class SSTableReader:
         if crc32c(chunk) != int(self._crcs[idx]):
             raise ValueError(f"{self.path}: block {idx} checksum mismatch")
         self.disk_bytes_read += hi - lo
+        if tr is not None:
+            tr.leaf("disk_read", t0, _tracing.now(), bytes=hi - lo, block=idx)
         return chunk
 
     def _mmap_block(self, idx: int) -> memoryview:
@@ -215,10 +220,15 @@ class SSTableReader:
         hi = min(lo + bb, self._data_end)
         view = memoryview(self._mm)[lo:hi]
         if idx not in self._verified:
+            tr = _tracing.current()
+            t0 = _tracing.now() if tr is not None else 0.0
             if crc32c(view) != int(self._crcs[idx]):
                 raise ValueError(f"{self.path}: block {idx} checksum mismatch")
             self._verified.add(idx)
             self.disk_bytes_read += hi - lo
+            if tr is not None:
+                tr.leaf("disk_read", t0, _tracing.now(),
+                        bytes=hi - lo, block=idx, mmap=True)
         return view
 
     def _block_loader(self, idx: int):

@@ -1,0 +1,35 @@
+"""Unified observability layer: metrics, tracing, structured events.
+
+Three pillars, one package (see ``docs/OBSERVABILITY.md``):
+
+* :mod:`repro.obs.metrics` — lock-cheap counters/gauges/log-bucketed
+  histograms in a :class:`MetricsRegistry`; legacy ``stats()`` dicts are
+  bit-compatible views over it, and snapshots render to Prometheus text.
+* :mod:`repro.obs.tracing` — sampled per-batch span trees through the op
+  executor down to cache/disk/CKB leaf spans; Chrome trace_event export.
+* :mod:`repro.obs.events` — bounded ring of structured lifecycle events
+  (flush, compaction, WAL GC, publish, promotion) + optional JSONL sink.
+"""
+from repro.obs.events import NULL_EVENTS, Event, EventLog, NullEventLog
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    MultiGauge,
+    NULL_INSTRUMENT,
+    diff_snapshots,
+    load_snapshot,
+    merge_snapshots,
+    render_prometheus,
+    save_snapshot,
+)
+from repro.obs.tracing import Sampler, Span, Trace, activate, current
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "MultiGauge",
+    "NULL_INSTRUMENT", "diff_snapshots", "load_snapshot", "merge_snapshots",
+    "render_prometheus", "save_snapshot",
+    "Event", "EventLog", "NullEventLog", "NULL_EVENTS",
+    "Sampler", "Span", "Trace", "activate", "current",
+]

@@ -139,22 +139,34 @@ class KVServeEngine:
         config=None,
         max_inflight_bytes: int = 256 << 20,
         submit_workers: int = 2,
+        metrics: bool = True,
+        trace_sample_rate: float = 0.0,
     ):
         from repro.db.executor import Executor
         from repro.db.store import RemixDB, RemixDBConfig
         from repro.io.blockcache import BlockCache
+        from repro.obs.events import EventLog, NULL_EVENTS
+        from repro.obs.metrics import MetricsRegistry
 
         if not shards:
             raise ValueError("KVServeEngine needs at least one shard")
-        self.cache = BlockCache(cache_bytes)
+        # serving-tier observability: the shared cache and the cross-shard
+        # executor record into this registry; each shard store keeps its
+        # own (metrics() merges them under per-shard labels)
+        self.registry = MetricsRegistry(enabled=metrics)
+        self.events = EventLog() if metrics else NULL_EVENTS
+        self.cache = BlockCache(cache_bytes, registry=self.registry)
         self.lows: list[int] = []
         self.shards: list[RemixDB] = []
         for lo, db in sorted(shards, key=lambda s: s[0]):
             if not isinstance(db, RemixDB):
+                cfg0 = config or RemixDBConfig()
                 cfg = dataclasses.replace(
-                    config or RemixDBConfig(),
+                    cfg0,
                     data_dir=str(db),
                     block_cache=self.cache,
+                    metrics=cfg0.metrics and metrics,
+                    trace_sample_rate=trace_sample_rate,
                 )
                 db = RemixDB(cfg)
             elif db.storage is not None:
@@ -171,6 +183,9 @@ class KVServeEngine:
             list(zip(self.lows, self.shards)),
             max_inflight_bytes=max_inflight_bytes,
             workers=submit_workers,
+            registry=self.registry,
+            events=self.events,
+            trace_sample_rate=trace_sample_rate,
         )
 
     def _route(self, key: int) -> "object":
@@ -285,3 +300,16 @@ class KVServeEngine:
             ),
             stores=per,
         )
+
+    def metrics(self) -> dict:
+        """One labelled observability snapshot for the whole serving
+        node: the serving tier's registry (shared cache + cross-shard
+        executor) stamped ``tier="serve"``, plus every shard store's
+        registry stamped with its lower key bound (``shard="<lo>"``).
+        Render with :func:`repro.obs.render_prometheus`."""
+        from repro.obs.metrics import merge_snapshots
+
+        parts = [(self.registry.snapshot(), dict(tier="serve"))]
+        for lo, db in zip(self.lows, self.shards):
+            parts.append((db.registry.snapshot(), dict(shard=str(lo))))
+        return merge_snapshots(*parts)

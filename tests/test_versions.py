@@ -227,10 +227,10 @@ def test_snapshot_taken_mid_flush_sees_pre_flush_state(tmp_path, monkeypatch):
     grabbed = {}
     real_execute = S.execute
 
-    def spy(plan, cfg, storage=None):
+    def spy(plan, cfg, storage=None, **kw):
         if "snap" not in grabbed:  # mid-flush: frozen, not yet published
             grabbed["snap"] = db.snapshot()
-        return real_execute(plan, cfg, storage=storage)
+        return real_execute(plan, cfg, storage=storage, **kw)
 
     monkeypatch.setattr(S, "execute", spy)
     db.flush()

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Inspect observability snapshots (``RemixDB.metrics()`` /
+``KVServeEngine.metrics()`` JSON dumps, see docs/OBSERVABILITY.md).
+
+    obstool.py show snap.json [--prom] [--filter SUBSTR]
+    obstool.py diff before.json after.json [--filter SUBSTR]
+
+``show`` pretty-prints every sample (or the Prometheus text exposition
+with ``--prom``); ``diff`` prints per-sample deltas — counter increases,
+histogram count/sum growth with current p50/p99, gauge before→after.
+``--filter`` keeps samples whose metric name contains the substring.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "src")
+)
+
+from repro.obs.metrics import (  # noqa: E402
+    _fmt_labels,
+    diff_snapshots,
+    load_snapshot,
+    render_prometheus,
+)
+
+
+def _keep(snapshot: dict, substr: str | None) -> dict:
+    if not substr:
+        return snapshot
+    return {
+        "metrics": [
+            s for s in snapshot.get("metrics", []) if substr in s["name"]
+        ]
+    }
+
+
+def _show(args) -> int:
+    snap = _keep(load_snapshot(args.snapshot), args.filter)
+    if args.prom:
+        sys.stdout.write(render_prometheus(snap))
+        return 0
+    for s in snap.get("metrics", []):
+        head = f"{s['name']}{_fmt_labels(s['labels'])}"
+        if s["type"] == "histogram":
+            print(
+                f"{head}  count={s['count']} sum={s['sum']:.6g} "
+                f"p50={s['p50']:.6g} p95={s['p95']:.6g} "
+                f"p99={s['p99']:.6g} max={s['max']:.6g}"
+            )
+        else:
+            print(f"{head}  {s['type']}={s['value']}")
+    return 0
+
+
+def _diff(args) -> int:
+    before = _keep(load_snapshot(args.before), args.filter)
+    after = _keep(load_snapshot(args.after), args.filter)
+    changed = 0
+    for row in diff_snapshots(before, after)["diff"]:
+        head = f"{row['name']}{_fmt_labels(row['labels'])}"
+        if "status" in row:
+            print(f"{head}  [{row['status']}]")
+            changed += 1
+        elif row["type"] == "histogram":
+            if row["count_delta"] or row["sum_delta"]:
+                print(
+                    f"{head}  +count={row['count_delta']} "
+                    f"+sum={row['sum_delta']:.6g} "
+                    f"p50={row['p50']:.6g} p99={row['p99']:.6g}"
+                )
+                changed += 1
+        elif row["type"] == "counter":
+            if row["delta"]:
+                print(f"{head}  +{row['delta']}")
+                changed += 1
+        elif row["before"] != row["after"]:
+            print(f"{head}  {row['before']} -> {row['after']}")
+            changed += 1
+    print(f"# {changed} sample(s) changed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="obstool", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ps = sub.add_parser("show", help="pretty-print one snapshot")
+    ps.add_argument("snapshot")
+    ps.add_argument("--prom", action="store_true",
+                    help="Prometheus text exposition format")
+    ps.add_argument("--filter", default=None,
+                    help="keep metrics whose name contains this substring")
+    ps.set_defaults(fn=_show)
+    pd = sub.add_parser("diff", help="delta between two snapshots")
+    pd.add_argument("before")
+    pd.add_argument("after")
+    pd.add_argument("--filter", default=None)
+    pd.set_defaults(fn=_diff)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
