@@ -53,7 +53,7 @@ class _LSMBase:
         self.put_batch([key], [val])
 
     def _mem_to_table(self) -> Table:
-        keys, vals, seq, tomb, _ = self.mem.to_arrays()
+        keys, vals, seq, tomb, *_ = self.mem.to_arrays()
         self.mem = MemTable(vw=self.cfg.vw)
         return Table(keys=keys, vals=vals, seq=seq, tomb=tomb)
 

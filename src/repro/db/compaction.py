@@ -89,6 +89,11 @@ class ExecResult:
     # old Version keep a stable view.
     new_partitions: list[Partition] | None = None
     carried: Table | None = None  # aborted new data (stays in MemTable/WAL)
+    # merge-side GC accounting: input rows dropped because an excised
+    # span covered them / because their TTL had expired (store emits the
+    # ttl_expired_dropped counter from the latter)
+    rows_excised: int = 0
+    rows_expired: int = 0
 
 
 def _persist_tables(tables: list[Table], storage) -> None:
@@ -100,7 +105,8 @@ def _persist_tables(tables: list[Table], storage) -> None:
 
     for t in tables:
         name = storage.write_table(
-            CK.pack_u64(t.keys), t.vals, t.seq, t.tomb
+            CK.pack_u64(t.keys), t.vals, t.seq, t.tomb,
+            exp=t.exp if t.ttl_present() else None,
         )
         t.path = storage.table_path(name)
 
@@ -143,7 +149,12 @@ def _execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
         order = np.argsort([t.n for t in p.tables])
         chosen = [p.tables[i] for i in order[: plan.major_inputs]]
         keep = [p.tables[i] for i in order[plan.major_inputs :]]
-        merged = merge_tables(chosen + [plan.new])
+        # excised spans mask their covered input rows out of the merge
+        # (the outputs are then span-free); expired-TTL rows convert to
+        # tombstones, which must keep hiding older versions in ``keep``
+        st: dict = {}
+        merged = merge_tables(chosen + [plan.new], excised=p.excised,
+                              stats=st)
         outs = chunk_table(merged, cfg.table_cap)
         _persist_tables(outs, storage)
         p2 = p.clone_with_tables(keep + outs)  # table set changed: scratch
@@ -152,11 +163,16 @@ def _execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
             p2.persist_index(storage)
         written = sum(t.bytes() for t in outs)
         return ExecResult(
-            bytes_written=written + p2.remix_bytes, new_partitions=[p2]
+            bytes_written=written + p2.remix_bytes, new_partitions=[p2],
+            rows_excised=st.get("rows_excised", 0),
+            rows_expired=st.get("rows_expired", 0),
         )
     if plan.kind == "split":
-        # full merge (tombstones can be dropped: whole partition rewritten)
-        merged = merge_tables(p.tables + [plan.new], drop_tombs=True)
+        # full merge (tombstones can be dropped: whole partition rewritten,
+        # so excised/expired rows and the tombstones themselves all go)
+        st = {}
+        merged = merge_tables(p.tables + [plan.new], drop_tombs=True,
+                              excised=p.excised, stats=st)
         outs = chunk_table(merged, cfg.table_cap)
         _persist_tables(outs, storage)
         written = sum(t.bytes() for t in outs)
@@ -173,5 +189,7 @@ def _execute(plan: Plan, cfg: CompactionConfig, storage=None) -> ExecResult:
             parts.append(np_)
         if not parts:  # everything deleted
             parts = [Partition(lo=p.lo, tables=[], d=p.d)]
-        return ExecResult(bytes_written=written, new_partitions=parts)
+        return ExecResult(bytes_written=written, new_partitions=parts,
+                          rows_excised=st.get("rows_excised", 0),
+                          rows_expired=st.get("rows_expired", 0))
     raise ValueError(plan.kind)

@@ -29,6 +29,8 @@ import bisect
 import numpy as np
 
 from repro.core import keys as CK
+from repro.db import clock
+from repro.db.memtable import entry_dead
 from repro.db.sharded import partition_spans, route_one
 
 _MAX_WIDTH = 4096  # widening cap over tombstone/old-version runs
@@ -219,6 +221,14 @@ class RemixCursor:
                                   side="right" if hi >= 1 << 64 else "left"))
         clipped = cut < len(kk)
         kk, vv = kk[:cut], vv[:cut]
+        # snapshot-visible range tombstones hide any remaining table
+        # entries they cover (partial-coverage spans and promoted-path
+        # windows; fully-covered cold spans were skipped structurally)
+        if self.snap.ranges and len(kk):
+            m = np.ones(len(kk), bool)
+            for rlo, rhi, _ in self.snap.ranges:
+                m &= ~((kk >= rlo) & (kk < rhi))
+            kk, vv = kk[m], vv[m]
         # adaptive widening, two cases sharing one rule: an all-invalid
         # window (tombstone/old-version run) must grow so long dead runs
         # cost O(log) decodes, and a productive stream grows as read-ahead
@@ -241,6 +251,7 @@ class RemixCursor:
         live entries, ascending, to the buffer — the common case (no
         overlay entry in range) passes the window through untouched."""
         okeys, overlay = self._okeys, self.snap.overlay
+        now = clock.now()
         oend = self._oi
         while oend < len(okeys) and okeys[oend] <= bound:
             oend += 1
@@ -260,7 +271,7 @@ class RemixCursor:
                     ti += 1  # overlay shadows the table entry
                 self._oi += 1
                 e = overlay[okey]
-                if not e.tomb:
+                if not entry_dead(e, now):
                     out_k.append(okey)
                     out_v.append(np.asarray(e.val, np.uint32))
             else:

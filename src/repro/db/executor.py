@@ -56,7 +56,7 @@ from repro.db.ops import (
     OpStatus,
     WRITE_KINDS,
 )
-from repro.db.sharded import route_host
+from repro.db.sharded import partition_spans, route_host
 from repro.obs import events as _events
 from repro.obs import metrics as _metrics
 from repro.obs import tracing as _tracing
@@ -522,38 +522,14 @@ class Executor:
         live = self._precheck(fut, deadlines, results, stage.ops)
         if not live:
             return
-        # rows per shard, in op order (cross-shard keys are disjoint, so
-        # per-shard order equals the sequential legacy order)
-        per: dict[int, list[tuple[np.ndarray, np.ndarray, bool]]] = {}
-        for i in live:
-            op = batch.ops[i]
-            tomb = op.kind is OpKind.DELETE
-            if op.keys is None:
-                keys = np.array([op.key], np.uint64)
-                vals = (
-                    np.zeros((1, self.vw), np.uint32)
-                    if tomb
-                    else np.asarray(op.val, np.uint32).reshape(1, self.vw)
-                )
-            else:
-                keys = np.asarray(op.keys, np.uint64)
-                vals = (
-                    np.zeros((len(keys), self.vw), np.uint32)
-                    if tomb or op.val is None
-                    else np.asarray(op.val, np.uint32).reshape(
-                        len(keys), self.vw
-                    )
-                )
-            if len(self.lows) == 1:
-                per.setdefault(0, []).append((keys, vals, tomb))
-            else:
-                sids = route_host(self.lows, keys)
-                for s in np.unique(sids):
-                    m = sids == s
-                    per.setdefault(int(s), []).append(
-                        (keys[m], vals[m], tomb)
-                    )
-        try:
+        # Put/Delete rows accumulate per shard and group-commit together;
+        # a DeleteRange or Cas is a *write edge* — accumulated rows flush
+        # first so per-shard effects equal the sequential legacy order
+        # (a Cas must observe every earlier write in its own batch)
+        per: dict[int, list[tuple]] = {}
+        pending: list[int] = []
+
+        def commit_pending():
             for shard in sorted(per):
                 chunks = per[shard]
                 keys = np.concatenate([c[0] for c in chunks])
@@ -561,15 +537,85 @@ class Executor:
                 tombs = np.concatenate(
                     [np.full(len(c[0]), c[2], bool) for c in chunks]
                 )
+                exps = np.concatenate([c[3] for c in chunks])
                 # one WAL group commit + MemTable apply per shard
                 with _span(trace, f"shard{shard}:commit", rows=len(keys)):
-                    self.stores[shard]._apply_writes(keys, vals, tombs)
+                    self.stores[shard]._apply_writes(keys, vals, tombs,
+                                                     exps=exps)
+            per.clear()
+            for j in pending:
+                results[j] = OpResult(status=OpStatus.OK)
+            pending.clear()
+
+        try:
+            for i in live:
+                op = batch.ops[i]
+                if op.kind is OpKind.DELETE_RANGE:
+                    commit_pending()
+                    with _span(trace, "delete_range"):
+                        self._apply_delete_range_op(op)
+                    results[i] = OpResult(status=OpStatus.OK)
+                    continue
+                if op.kind is OpKind.CAS:
+                    commit_pending()
+                    shard = self._route_one(op.key)
+                    with _span(trace, f"shard{shard}:cas"):
+                        ok, actual = self.stores[shard]._apply_cas(
+                            op.key, op.expect, op.val, exp=int(op.exp)
+                        )
+                    results[i] = OpResult(status=OpStatus.OK, found=ok,
+                                          value=actual)
+                    continue
+                tomb = op.kind is OpKind.DELETE
+                if op.keys is None:
+                    keys = np.array([op.key], np.uint64)
+                    vals = (
+                        np.zeros((1, self.vw), np.uint32)
+                        if tomb
+                        else np.asarray(op.val, np.uint32).reshape(
+                            1, self.vw
+                        )
+                    )
+                else:
+                    keys = np.asarray(op.keys, np.uint64)
+                    vals = (
+                        np.zeros((len(keys), self.vw), np.uint32)
+                        if tomb or op.val is None
+                        else np.asarray(op.val, np.uint32).reshape(
+                            len(keys), self.vw
+                        )
+                    )
+                exps = np.broadcast_to(
+                    np.asarray(op.exp, np.uint32), (len(keys),)
+                ).copy()
+                pending.append(i)
+                if len(self.lows) == 1:
+                    per.setdefault(0, []).append((keys, vals, tomb, exps))
+                else:
+                    sids = route_host(self.lows, keys)
+                    for s in np.unique(sids):
+                        m = sids == s
+                        per.setdefault(int(s), []).append(
+                            (keys[m], vals[m], tomb, exps[m])
+                        )
+            commit_pending()
         except Exception as e:
             for i in live:
-                results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
+                if results[i] is None:
+                    results[i] = OpResult(status=OpStatus.ERROR,
+                                          error=repr(e), exc=e)
             return
-        for i in live:
-            results[i] = OpResult(status=OpStatus.OK)
+
+    def _apply_delete_range_op(self, op) -> None:
+        """Fan one DeleteRange out across shards, clipped to each shard's
+        key span — shards outside [start, end) are untouched."""
+        if len(self.lows) == 1:
+            self.stores[0]._apply_delete_range(op.start, op.end)
+            return
+        for si, (lo, hi) in enumerate(partition_spans(self.lows)):
+            l, h = max(op.start, lo), min(op.end, hi)
+            if l < h:
+                self.stores[si]._apply_delete_range(l, h)
 
     # ---- reads ----
     def _exec_read_stage(self, fut, batch, deadlines, results, stage,

@@ -5,7 +5,15 @@ can retain frequently-updated keys in the MemTable/WAL instead of repeatedly
 rewriting them into table files. Counters saturate at 255 and are halved when
 a key is carried over by a compaction.
 
-Keys are 64-bit ints; values are fixed-width uint32 word vectors.
+Keys are 64-bit ints; values are fixed-width uint32 word vectors. Entries
+carry an optional absolute TTL expiry (``exp`` unix seconds, 0 = none).
+
+Range tombstones (DeleteRange) live beside the point entries as a list of
+``(lo, hi, seq)`` triples: live entries covered at delete time are eagerly
+converted to point tombstones (entries are *replaced*, never mutated, so
+snapshot dict copies keep the pre-delete Entry objects), and the triple
+itself hides every table row in [lo, hi) until the next flush turns it
+into a manifest-level excised span.
 """
 from __future__ import annotations
 
@@ -20,31 +28,65 @@ class Entry:
     tomb: bool
     val: np.ndarray  # (VW,) uint32
     count: int  # 8-bit update counter
+    exp: int = 0  # absolute TTL expiry, unix seconds (0 = no TTL)
+
+
+def entry_dead(e: Entry, now: float) -> bool:
+    """True when the entry is a tombstone or its TTL has expired."""
+    return e.tomb or (e.exp != 0 and e.exp <= now)
 
 
 class MemTable:
     def __init__(self, vw: int = 2):
         self.vw = vw
         self.data: dict[int, Entry] = {}
+        self.ranges: list[tuple[int, int, int]] = []  # (lo, hi, seq)
 
     def __len__(self) -> int:
         return len(self.data)
 
-    def put(self, key: int, val: np.ndarray, seq: int, tomb: bool = False):
+    def put(self, key: int, val: np.ndarray, seq: int, tomb: bool = False,
+            exp: int = 0):
         prev = self.data.get(key)
         count = 1 if prev is None else min(255, prev.count + 1)
-        self.data[key] = Entry(seq=seq, tomb=tomb, val=val, count=count)
+        self.data[key] = Entry(seq=seq, tomb=tomb, val=val, count=count,
+                               exp=int(exp))
 
-    def put_batch(self, keys, vals, seq0: int, tomb=None) -> int:
+    def put_batch(self, keys, vals, seq0: int, tomb=None, exp=None) -> int:
         """Vectorized put; returns the next unused sequence number."""
         keys = np.asarray(keys, np.uint64)
         vals = np.asarray(vals, np.uint32).reshape(len(keys), self.vw)
         tomb = np.zeros(len(keys), bool) if tomb is None else np.asarray(tomb)
+        exp = (
+            np.zeros(len(keys), np.uint32) if exp is None
+            else np.asarray(exp, np.uint32)
+        )
         seq = seq0
-        for k, v, t in zip(keys.tolist(), vals, tomb.tolist()):
-            self.put(k, v, seq, t)
+        for k, v, t, e in zip(keys.tolist(), vals, tomb.tolist(),
+                              exp.tolist()):
+            self.put(k, v, seq, t, e)
             seq += 1
         return seq
+
+    def delete_range(self, lo: int, hi: int, seq: int):
+        """Record a range tombstone [lo, hi) at sequence ``seq``.
+
+        Covered live entries with an older seq are eagerly replaced by
+        point tombstones: after this, a covered key never resurfaces from
+        the overlay, and table rows are hidden by the (lo, hi, seq) triple
+        until the flush attaches it to the partitions as an excised span.
+        """
+        for k, e in list(self.data.items()):
+            if lo <= k < hi and e.seq < seq and not e.tomb:
+                self.data[k] = Entry(
+                    seq=seq, tomb=True,
+                    val=np.zeros(self.vw, np.uint32), count=e.count,
+                )
+        self.ranges.append((int(lo), int(hi), int(seq)))
+
+    def covers(self, key: int) -> bool:
+        """True when any buffered range tombstone covers ``key``."""
+        return any(lo <= key < hi for lo, hi, _ in self.ranges)
 
     def carry_over(self, key: int, entry: Entry):
         """Re-insert a compaction-excluded hot key (counter halving, §4.2)."""
@@ -52,7 +94,7 @@ class MemTable:
         if cur is None:
             self.data[key] = Entry(
                 seq=entry.seq, tomb=entry.tomb, val=entry.val,
-                count=max(1, entry.count // 2),
+                count=max(1, entry.count // 2), exp=entry.exp,
             )
         else:
             # newer update already buffered: fold the halved old count in
@@ -81,4 +123,5 @@ class MemTable:
         seq = np.array([e.seq for _, e in items], np.uint32)
         tomb = np.array([e.tomb for _, e in items], bool)
         counts = np.array([e.count for _, e in items], np.int32)
-        return keys, vals, seq, tomb, counts
+        exp = np.array([e.exp for _, e in items], np.uint32)
+        return keys, vals, seq, tomb, counts, exp

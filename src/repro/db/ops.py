@@ -27,6 +27,18 @@ import enum
 
 import numpy as np
 
+from repro.db import clock
+
+
+def _ttl_to_exp(ttl) -> int | np.ndarray:
+    """seconds-from-now (scalar or per-key array) -> absolute u32 expiry."""
+    if ttl is None:
+        return 0
+    now = int(clock.now())
+    if np.ndim(ttl) == 0:
+        return now + int(ttl)
+    return (np.asarray(ttl, np.int64) + now).astype(np.uint32)
+
 
 class OpKind(enum.Enum):
     GET = "get"
@@ -34,10 +46,14 @@ class OpKind(enum.Enum):
     SCAN = "scan"
     PUT = "put"
     DELETE = "delete"
+    DELETE_RANGE = "delete_range"
+    CAS = "cas"
 
 
 READ_KINDS = frozenset((OpKind.GET, OpKind.MULTIGET, OpKind.SCAN))
-WRITE_KINDS = frozenset((OpKind.PUT, OpKind.DELETE))
+WRITE_KINDS = frozenset(
+    (OpKind.PUT, OpKind.DELETE, OpKind.DELETE_RANGE, OpKind.CAS)
+)
 
 
 class OpStatus(enum.Enum):
@@ -65,12 +81,15 @@ class Op:
     kind: OpKind
     key: int = 0  # Get / scalar Put / scalar Delete
     keys: np.ndarray | None = None  # MultiGet / vectorized Put / Delete
-    start: int = 0  # Scan lower bound
+    start: int = 0  # Scan / DeleteRange lower bound (inclusive)
     n: int = 0  # Scan result budget
-    val: np.ndarray | None = None  # Put value row(s)
+    val: np.ndarray | None = None  # Put value row(s) / Cas new value
     with_vals: bool = True  # Scan: materialize value rows too
     deadline_ms: float | None = None  # relative to submit()
     priority: int = 0  # scheduling hint (higher first among reads)
+    end: int = 0  # DeleteRange upper bound (exclusive)
+    expect: np.ndarray | None = None  # Cas expected value (None = absent)
+    exp: int | np.ndarray = 0  # Put/Cas absolute TTL expiry (0 = none)
 
     # ---------------- factories ----------------
     @classmethod
@@ -95,12 +114,18 @@ class Op:
                    priority=priority)
 
     @classmethod
-    def put(cls, key, val, *, deadline_ms: float | None = None,
-            priority: int = 0) -> "Op":
-        """Scalar (``key`` int) or vectorized (``key`` array) upsert."""
+    def put(cls, key, val, *, ttl: float | None = None,
+            deadline_ms: float | None = None, priority: int = 0) -> "Op":
+        """Scalar (``key`` int) or vectorized (``key`` array) upsert.
+
+        ``ttl`` (seconds, scalar or per-key array) converts to an
+        absolute expiry against :func:`repro.db.clock.now` at op
+        construction; after it passes, reads treat the key as absent.
+        """
+        exp = _ttl_to_exp(ttl)
         if np.ndim(key) == 0:
             return cls(OpKind.PUT, key=int(key),
-                       val=np.asarray(val, np.uint32),
+                       val=np.asarray(val, np.uint32), exp=exp,
                        deadline_ms=deadline_ms, priority=priority)
         keys = np.asarray(key, np.uint64)
         vals = np.asarray(val, np.uint32)
@@ -108,7 +133,7 @@ class Op:
             vals = vals.reshape(len(keys), -1)
         else:
             vals = vals.reshape(0, vals.shape[-1] if vals.ndim else 1)
-        return cls(OpKind.PUT, keys=keys, val=vals,
+        return cls(OpKind.PUT, keys=keys, val=vals, exp=exp,
                    deadline_ms=deadline_ms, priority=priority)
 
     @classmethod
@@ -120,6 +145,31 @@ class Op:
         return cls(OpKind.DELETE, keys=np.asarray(key, np.uint64),
                    deadline_ms=deadline_ms, priority=priority)
 
+    @classmethod
+    def delete_range(cls, start: int, end: int, *,
+                     deadline_ms: float | None = None,
+                     priority: int = 0) -> "Op":
+        """Delete every key in [start, end) as one range tombstone —
+        O(1) written regardless of how many keys the span covers."""
+        if end < start:
+            raise ValueError("delete_range needs start <= end")
+        return cls(OpKind.DELETE_RANGE, start=int(start), end=int(end),
+                   deadline_ms=deadline_ms, priority=priority)
+
+    @classmethod
+    def cas(cls, key: int, expect, val, *, ttl: float | None = None,
+            deadline_ms: float | None = None, priority: int = 0) -> "Op":
+        """Compare-and-swap: install ``val`` (or delete, when ``val`` is
+        None) iff the key's current visible value equals ``expect``
+        (``expect=None`` = expect-absent). The result's ``found`` is the
+        success flag and ``value`` the actual pre-op value on conflict."""
+        return cls(
+            OpKind.CAS, key=int(key),
+            expect=None if expect is None else np.asarray(expect, np.uint32),
+            val=None if val is None else np.asarray(val, np.uint32),
+            exp=_ttl_to_exp(ttl), deadline_ms=deadline_ms, priority=priority,
+        )
+
     # ---------------- introspection ----------------
     @property
     def is_read(self) -> bool:
@@ -129,6 +179,8 @@ class Op:
         """Rows a write op commits (0 for reads)."""
         if self.kind not in WRITE_KINDS:
             return 0
+        if self.kind is OpKind.DELETE_RANGE:
+            return 1  # one range-tombstone record, whatever it covers
         return 1 if self.keys is None else len(self.keys)
 
     def cost_bytes(self, vw: int) -> int:
@@ -146,6 +198,8 @@ class Op:
         bits = [self.kind.value]
         if self.kind is OpKind.SCAN:
             bits.append(f"start={self.start}, n={self.n}")
+        elif self.kind is OpKind.DELETE_RANGE:
+            bits.append(f"start={self.start}, end={self.end}")
         elif self.keys is not None:
             bits.append(f"keys={len(self.keys)}")
         else:
@@ -197,6 +251,12 @@ class Batch:
     def delete(self, key, **kw) -> "Batch":
         return self.add(Op.delete(key, **kw))
 
+    def delete_range(self, start: int, end: int, **kw) -> "Batch":
+        return self.add(Op.delete_range(start, end, **kw))
+
+    def cas(self, key: int, expect, val, **kw) -> "Batch":
+        return self.add(Op.cas(key, expect, val, **kw))
+
     def __len__(self) -> int:
         return len(self.ops)
 
@@ -221,7 +281,9 @@ class OpResult:
     - MultiGet: ``found (Q,)`` / ``vals (Q, VW)``
     - Scan: ``keys (M,)`` / ``vals (M, VW)`` (vals None with
       ``with_vals=False``), M <= n
-    - Put / Delete: status only
+    - Put / Delete / DeleteRange: status only
+    - Cas: ``found`` = swap succeeded; on conflict ``value`` holds the
+      actual current value (None when the key was absent)
     """
 
     status: OpStatus = OpStatus.OK
@@ -241,10 +303,14 @@ class OpResult:
         return self.status is OpStatus.OK
 
     def raise_if_error(self) -> None:
-        """Re-raise an ERROR op's original exception (wrapper helper)."""
+        """Re-raise an ERROR op's original exception (wrapper helper).
+
+        The captured traceback is reattached so the re-raise points at
+        the frame that actually failed inside the executor, not here.
+        """
         if self.status is OpStatus.ERROR:
             if self.exc is not None:
-                raise self.exc
+                raise self.exc.with_traceback(self.exc.__traceback__)
             raise RuntimeError(self.error or "op failed")
 
 

@@ -29,6 +29,7 @@ from repro.core.runs import (
     ranges_to_rows,
 )
 from repro.core.view import NEWEST_BIT, PLACEHOLDER
+from repro.db import clock
 
 KEY_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 
@@ -103,11 +104,14 @@ class Table:
         path: str | None = None,
         cache_mode: str = "copy",
         ckb_decode: bool = True,
+        exp: np.ndarray | None = None,  # (N,) uint32 TTL expiry (0 = none)
     ):
         if keys is None and path is None:
             raise ValueError("Table needs in-memory arrays or a file path")
         self._keys, self._vals = keys, vals
         self._seq, self._tomb = seq, tomb
+        self._exp = exp
+        self._ttl_any: bool | None = None
         self.path = path
         self.cache_mode = cache_mode
         # batched seeks decode the prefix-compressed CKB entry stream
@@ -317,6 +321,72 @@ class Table:
         return self._tomb
 
     @property
+    def exp(self) -> np.ndarray:
+        """(N,) uint32 absolute TTL expiries; zeros when none were set."""
+        if self._exp is None:
+            if self.path is not None:
+                self._exp = self._rd().read_exp()
+            else:
+                self._exp = np.zeros(self.n, np.uint32)
+        return self._exp
+
+    def ttl_present(self) -> bool:
+        """Whether any row of this table carries a TTL (cheap: lazy
+        handles answer from the file header flag, no section read)."""
+        if self._ttl_any is None:
+            if self._exp is not None:
+                self._ttl_any = bool(np.any(self._exp))
+            elif self.path is not None:
+                self._ttl_any = bool(self._rd().has_exp)
+            else:
+                self._ttl_any = False
+        return self._ttl_any
+
+    # ---- liveness (tombstone OR expired TTL) ----
+    def dead(self, now: float | None = None) -> np.ndarray:
+        """(N,) bool: rows hidden from reads — tombstones plus rows whose
+        TTL expired as of ``now`` (defaults to ``clock.now()``)."""
+        if not self.ttl_present():
+            return self.tomb
+        if now is None:
+            now = clock.now()
+        e = self.exp
+        return self.tomb | ((e != 0) & (e <= np.uint32(int(now))))
+
+    def dead_rows(self, lo: int, hi: int,
+                  now: float | None = None) -> np.ndarray:
+        """Rows [lo, hi) of the combined liveness column (cold path):
+        tomb | expired, fetching the exp section only when the table
+        carries TTLs at all."""
+        tomb = self.rows("tomb", lo, hi)
+        if not self.ttl_present():
+            return tomb
+        if now is None:
+            now = clock.now()
+        e = self.rows("exp", lo, hi)
+        return tomb | ((e != 0) & (e <= np.uint32(int(now))))
+
+    def dead_rows_scattered(self, rows,
+                            now: float | None = None) -> np.ndarray:
+        """Scattered-row counterpart of :meth:`dead_rows`."""
+        tomb = self.rows_scattered("tomb", rows)
+        if not self.ttl_present():
+            return tomb
+        if now is None:
+            now = clock.now()
+        e = self.rows_scattered("exp", rows)
+        return tomb | ((e != 0) & (e <= np.uint32(int(now))))
+
+    def min_future_exp(self, now: float) -> int | None:
+        """Smallest TTL expiry still in the future, or None: the instant
+        a device index built at ``now`` goes stale."""
+        if not self.ttl_present():
+            return None
+        e = self.exp
+        fut = e[(e != 0) & (e > np.uint32(int(now)))]
+        return int(fut.min()) if fut.size else None
+
+    @property
     def n(self) -> int:
         if self._n is None:  # header-only read; no section is loaded
             self._n = self._rd().n
@@ -341,22 +411,111 @@ class Table:
         return self.n * (key_bytes + self.vw * 4 + 5)
 
 
-def merge_tables(tables: list[Table], drop_tombs: bool = False) -> Table:
-    """Sort-merge tables, newest version per key wins (tiered major merge)."""
+@dataclasses.dataclass
+class ExcisedSpan:
+    """One committed range tombstone: every row with key in [lo, hi) of a
+    *covered* table is dead, unconditionally.
+
+    Coverage is by table identity: a span attaches at flush covering
+    exactly the tables that existed then (all of whose seqs precede the
+    delete's), so no seq comparison is ever needed on the read path —
+    newer writes land in tables born later, which the span does not
+    cover. Compaction shrinks the coverage set (merges drop covered rows
+    from their inputs); a span whose coverage empties is garbage."""
+
+    lo: int
+    hi: int  # exclusive
+    seq: int
+    tables: tuple
+
+    def __post_init__(self):
+        self._ids = frozenset(id(t) for t in self.tables)
+
+    def covers_table(self, t: Table) -> bool:
+        return id(t) in self._ids
+
+    def retain(self, tables: list[Table]) -> "ExcisedSpan":
+        """The span restricted to the handles surviving in ``tables``."""
+        kept = tuple(t for t in tables if id(t) in self._ids)
+        return ExcisedSpan(self.lo, self.hi, self.seq, kept)
+
+
+def excise_rows(t: Table, spans: list[ExcisedSpan]) -> tuple[Table, int]:
+    """Copy of ``t`` with rows covered by ``spans`` removed; returns the
+    copy (or ``t`` itself when nothing is covered) and the row count
+    dropped. Dropping (not tombstoning) is exact: any older version of a
+    covered key lives in a table some covering span also covers."""
+    cov = None
+    for sp in spans:
+        if sp.covers_table(t):
+            m = (t.keys >= np.uint64(sp.lo)) & (t.keys < np.uint64(sp.hi))
+            cov = m if cov is None else (cov | m)
+    if cov is None or not cov.any():
+        return t, 0
+    keep = ~cov
+    return (
+        Table(keys=t.keys[keep], vals=t.vals[keep], seq=t.seq[keep],
+              tomb=t.tomb[keep], exp=t.exp[keep]),
+        int(cov.sum()),
+    )
+
+
+def merge_tables(
+    tables: list[Table],
+    drop_tombs: bool = False,
+    excised: list[ExcisedSpan] | None = None,
+    now: float | None = None,
+    stats: dict | None = None,
+) -> Table:
+    """Sort-merge tables, newest version per key wins (tiered major merge).
+
+    ``excised`` spans drop covered input rows before the merge (outputs
+    are then *not* covered — the caller's clone drops the merged handles
+    from every span's coverage set). Rows whose TTL expired as of ``now``
+    are GC'd: converted to tombstones (they must keep hiding older
+    versions that may survive in unmerged tables) and, with
+    ``drop_tombs``, removed outright. ``stats`` (optional dict) receives
+    ``rows_excised`` / ``rows_expired`` counts.
+    """
+    n_exc = 0
+    if excised:
+        masked = []
+        for t in tables:
+            t2, dropped = excise_rows(t, excised)
+            n_exc += dropped
+            masked.append(t2)
+        tables = masked
     keys = np.concatenate([t.keys for t in tables])
     vals = np.concatenate([t.vals for t in tables])
     seq = np.concatenate([t.seq for t in tables])
     tomb = np.concatenate([t.tomb for t in tables])
+    exp = np.concatenate([t.exp for t in tables])
     neg = np.uint64(0xFFFFFFFFFFFFFFFF) - seq.astype(np.uint64)
     order = np.lexsort([neg, keys])
-    keys, vals, seq, tomb = keys[order], vals[order], seq[order], tomb[order]
+    keys, vals, seq = keys[order], vals[order], seq[order]
+    tomb, exp = tomb[order], exp[order]
     keep = np.ones(len(keys), bool)
     keep[1:] = keys[1:] != keys[:-1]
-    keys, vals, seq, tomb = keys[keep], vals[keep], seq[keep], tomb[keep]
+    keys, vals, seq = keys[keep], vals[keep], seq[keep]
+    tomb, exp = tomb[keep], exp[keep]
+    if now is None:
+        now = clock.now()
+    expired = (exp != 0) & (exp <= np.uint32(int(now))) & ~tomb
+    n_ttl = int(expired.sum())
+    if n_ttl:
+        tomb = tomb | expired
+        vals = vals.copy()
+        vals[expired] = 0
+        exp = exp.copy()
+        exp[expired] = 0
     if drop_tombs:
         live = ~tomb
-        keys, vals, seq, tomb = keys[live], vals[live], seq[live], tomb[live]
-    return Table(keys=keys, vals=vals, seq=seq, tomb=tomb)
+        keys, vals, seq = keys[live], vals[live], seq[live]
+        tomb, exp = tomb[live], exp[live]
+    if stats is not None:
+        stats["rows_excised"] = stats.get("rows_excised", 0) + n_exc
+        stats["rows_expired"] = stats.get("rows_expired", 0) + n_ttl
+    return Table(keys=keys, vals=vals, seq=seq, tomb=tomb, exp=exp)
 
 
 def chunk_table(t: Table, cap: int) -> list[Table]:
@@ -369,6 +528,7 @@ def chunk_table(t: Table, cap: int) -> list[Table]:
             vals=t.vals[i : i + cap],
             seq=t.seq[i : i + cap],
             tomb=t.tomb[i : i + cap],
+            exp=t.exp[i : i + cap],
         )
         for i in range(0, t.n, cap)
     ]
@@ -382,6 +542,12 @@ class Partition:
         self._remix: Remix | None = None
         self._runset: RunSet | None = None
         self.remix_bytes = 0  # last REMIX build size (for WA accounting)
+        # committed range tombstones covering (subsets of) self.tables
+        self.excised: list[ExcisedSpan] = []
+        # earliest future TTL expiry baked into the built device index:
+        # past this instant the runset's tomb marks are stale and index()
+        # rebuilds them (REMIX structure is unaffected by liveness)
+        self._ttl_next: float | None = None
         # last built (unpadded) REMIX + the tables it covered: a minor
         # compaction that only appends tables rebuilds incrementally from
         # it + the tables' CKBs instead of re-sorting everything (§4.2)
@@ -422,10 +588,59 @@ class Partition:
         if carry_built:
             p2._built_remix = self._built_remix
             p2._built_tables = list(self._built_tables)
+        # spans follow the surviving covered handles; a span whose whole
+        # coverage set was compacted away (its rows dropped in the merge)
+        # is garbage-collected here
+        p2.excised = [
+            s2 for s in self.excised if (s2 := s.retain(tables)).tables
+        ]
         p2.cold_gets = self.cold_gets
         p2.cold_scans = self.cold_scans
         p2.cold_served_rows = self.cold_served_rows
         return p2
+
+    def attach_excised(self, lo: int, hi: int, seq: int) -> None:
+        """Attach a freshly flushed range tombstone covering every table
+        this partition holds *right now* (their rows all predate it)."""
+        if self.tables and lo < hi:
+            self.excised.append(
+                ExcisedSpan(int(lo), int(hi), int(seq), tuple(self.tables))
+            )
+
+    def full_spans(self) -> list[tuple[int, int]]:
+        """Merged sorted [lo, hi) spans covering *all* current tables —
+        the spans a cursor can skip structurally (nothing in the
+        partition can be live inside them)."""
+        spans = sorted(
+            (s.lo, s.hi)
+            for s in self.excised
+            if all(s.covers_table(t) for t in self.tables)
+        )
+        out: list[tuple[int, int]] = []
+        for lo, hi in spans:
+            if out and lo <= out[-1][1]:
+                out[-1] = (out[-1][0], max(hi, out[-1][1]))
+            else:
+                out.append((lo, hi))
+        return out
+
+    def _span_dead(self, r: int, keys: np.ndarray) -> np.ndarray:
+        """(M,) bool: which of run ``r``'s emitted keys an excised span
+        hides (partial-coverage fallback — full coverage is skipped
+        structurally upstream)."""
+        out = np.zeros(len(keys), bool)
+        t = self.tables[r]
+        for sp in self.excised:
+            if sp.covers_table(t):
+                out |= (keys >= np.uint64(sp.lo)) & (keys < np.uint64(sp.hi))
+        return out
+
+    def _covered(self, r: int, key: int) -> bool:
+        t = self.tables[r]
+        return any(
+            sp.covers_table(t) and sp.lo <= key < sp.hi
+            for sp in self.excised
+        )
 
     def preload_index(self, remix: Remix):
         """Adopt a deserialized REMIX for the current table list (recovery
@@ -541,15 +756,15 @@ class Partition:
         )
         return g, cur, nxt
 
-    @staticmethod
-    def _gather_emit(er, erow, windows, vw: int):
+    def _gather_emit(self, er, erow, windows, vw: int):
         """Emit live (key, value) rows for one walked window.
 
         ``er``/``erow`` are the emitted runs/absolute rows in view order;
         ``windows[r]`` answers run ``r``'s rows (``RowWindow.gather``).
         Shared by the scalar and batched scan paths so both stay
         bit-identical by construction: gather per run, scatter back into
-        view order, drop tombstones.
+        view order, drop dead rows (tombstones, expired TTLs, and keys an
+        excised span hides).
         """
         kk = np.empty(len(er), np.uint64)
         vv = np.empty((len(er), vw), np.uint32)
@@ -557,6 +772,8 @@ class Partition:
         for r in np.unique(er):
             m = er == r
             kk[m], vv[m], dead[m] = windows[r].gather(erow[m])
+            if self.excised:
+                dead[m] |= self._span_dead(r, kk[m])
         live = ~dead
         return kk[live], vv[live]
 
@@ -643,7 +860,9 @@ class Partition:
         t = self.tables[run]
         if not np.array_equal(t.key_at(row), qw):
             return False, None
-        if bool(t.rows("tomb", row, row + 1)[0]):
+        if self._covered(run, int(key)):
+            return False, None
+        if bool(t.dead_rows(row, row + 1)[0]):
             return False, None
         return True, t.rows("vals", row, row + 1)[0]
 
@@ -705,7 +924,9 @@ class Partition:
             rv = rr[match]
             if not len(qi):
                 continue
-            live = ~t.rows_scattered("tomb", rv)
+            live = ~t.dead_rows_scattered(rv)
+            if self.excised:
+                live &= ~self._span_dead(r, keys[qi])
             found[qi] = live
             if live.any():
                 vals[qi[live]] = t.rows_scattered("vals", rv[live])
@@ -800,7 +1021,9 @@ class Partition:
                 t = self.tables[r]
                 kk[m] = CK.unpack_u64(t.rows("keys", lo2, hi2))[idx]
                 vv2[m] = t.rows("vals", lo2, hi2)[idx]
-                dead[m] = t.rows("tomb", lo2, hi2)[idx]
+                dead[m] = t.dead_rows(lo2, hi2)[idx]
+                if self.excised:
+                    dead[m] |= self._span_dead(r, kk[m])
             live = ~dead
             ks_out.append(kk[live])
             vs_out.append(vv2[live])
@@ -809,13 +1032,9 @@ class Partition:
         return np.concatenate(ks_out), np.concatenate(vs_out)
 
     # ---- cursor continuation (streaming scans without re-seeking) ----
-    def cold_cursor_seek(self, start: int) -> dict:
-        """Continuation state for a streaming cold scan: the view position
-        of ``start``'s lower bound plus the per-run next-row pointers.
-
-        One anchors binary search + one bounded CKB seek per run — paid
-        exactly once per cursor; every subsequent window is a pure
-        selector-stream decode (:meth:`cold_cursor_window`)."""
+    def _cursor_state(self, start: int) -> dict:
+        """Bare continuation state (no skip table): the view position of
+        ``start``'s lower bound plus the per-run next-row pointers."""
         hx = self._host_index()
         g = max(
             int(np.searchsorted(hx["anch64"], np.uint64(start), side="right"))
@@ -833,6 +1052,33 @@ class Partition:
         )
         return dict(pos=self._seek_slot(hx, g, cur, nextrow), nextrow=nextrow)
 
+    def cold_cursor_seek(self, start: int) -> dict:
+        """Continuation state for a streaming cold scan: the view position
+        of ``start``'s lower bound plus the per-run next-row pointers.
+
+        One anchors binary search + one bounded CKB seek per run — paid
+        exactly once per cursor; every subsequent window is a pure
+        selector-stream decode (:meth:`cold_cursor_window`).
+
+        Excised spans covering *all* tables additionally contribute a
+        ``skips`` table of view-position intervals: everything inside
+        them is dead by construction, so the window walk jumps over them
+        structurally — no selector decode, no key/value block reads —
+        resuming with the span-end seek's next-row pointers."""
+        state = self._cursor_state(start)
+        spans = self.full_spans() if self.excised else ()
+        if spans:
+            skips = []
+            for lo, hi in spans:
+                a = self._cursor_state(lo)
+                b = self._cursor_state(hi)
+                if b["pos"] > a["pos"]:
+                    skips.append((int(a["pos"]), int(b["pos"]),
+                                  b["nextrow"]))
+            if skips:
+                state["skips"] = sorted(skips)
+        return state
+
     def cold_cursor_window(self, state: dict, width: int,
                            prefetch_depth: int = 0):
         """Walk the next ``width`` view slots from ``state`` (no seek).
@@ -847,6 +1093,16 @@ class Partition:
         self.cold_scans += 1
         vw = self.tables[0].vw if self.tables else 2
         pos0 = int(state["pos"])
+        # structural skip: jump excised view intervals, clamp the walk so
+        # a window never enters one (its blocks are never touched)
+        for slo, shi, nrow in state.get("skips", ()):
+            if slo <= pos0 < shi:
+                pos0 = shi
+                state["pos"] = shi
+                state["nextrow"] = nrow.copy()
+            elif pos0 < slo:
+                width = min(width, slo - pos0)
+                break
         if pos0 >= hx["n_slots"]:
             return np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), False
         pos, stop, valid, win, rows_abs, newest = self._walk_from(
@@ -878,6 +1134,22 @@ class Partition:
             ):
                 return False
         return True
+
+    def _dead_fetcher(self, r: int):
+        """Section fetcher for run ``r`` whose "tomb" answers are the
+        combined liveness column (tomb | expired TTL) — lets RowWindow
+        stay liveness-agnostic. Free when the table carries no TTLs."""
+        t = self.tables[r]
+        if not t.ttl_present():
+            return t.rows_scattered
+        now = clock.now()
+
+        def fetch(section, rows):
+            if section == "tomb":
+                return t.dead_rows_scattered(rows, now)
+            return t.rows_scattered(section, rows)
+
+        return fetch
 
     def cold_scan_batch(self, starts, width: int) -> list[tuple]:
         """Batched :meth:`cold_scan`: one vectorized anchors search and
@@ -918,9 +1190,7 @@ class Partition:
                 ranges_by_run[r].append((int(rr[0]), int(rr[-1]) + 1))
             walks.append((er, erow, stop < n_slots))
         windows = [
-            RowWindow.from_scattered(
-                ranges_by_run[r], self.tables[r].rows_scattered
-            )
+            RowWindow.from_scattered(ranges_by_run[r], self._dead_fetcher(r))
             for r in range(nrun)
         ]
         out = []
@@ -947,6 +1217,16 @@ class Partition:
         store shares the same compiled query executables (shape-stable
         kernels — one jit per bucket instead of one per partition).
         """
+        # TTL staleness: tomb marks were baked at build time; once the
+        # clock passes the earliest future expiry, rebuild the runset
+        # (the REMIX itself is liveness-independent and gets reused)
+        if (
+            self._remix is not None
+            and self._ttl_next is not None
+            and clock.now() >= self._ttl_next
+        ):
+            self._remix = None
+            self._runset = None
         if self._remix is None:
             tabs = self.tables or [
                 Table(
@@ -957,23 +1237,22 @@ class Partition:
                 )
             ]
             d = max(self.d, len(tabs))  # paper requires D >= R
+            now = clock.now()
+            runs = [
+                make_run(t.keys, t.vals, seq=t.seq,
+                         tomb=self._build_dead(t, now), sort=False)
+                for t in tabs
+            ]
+            nexts = [t.min_future_exp(now) for t in tabs]
+            self._ttl_next = min(
+                (x for x in nexts if x is not None), default=None
+            )
             remix = self._try_incremental(tabs, d)
             if remix is not None:
                 from repro.core.runs import stack_runs
 
-                runset = stack_runs(
-                    [
-                        make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb,
-                                 sort=False)
-                        for t in tabs
-                    ]
-                )
+                runset = stack_runs(runs)
             else:
-                runs = [
-                    make_run(t.keys, t.vals, seq=t.seq, tomb=t.tomb,
-                             sort=False)
-                    for t in tabs
-                ]
                 remix, runset = build_remix(runs, d=d)
                 self.last_build_kind = "scratch"
             self._built_remix = remix
@@ -981,6 +1260,20 @@ class Partition:
             self.remix_bytes = int(remix.storage_bytes())
             self._remix, self._runset = _pad_index(remix, runset, d)
         return self._remix, self._runset
+
+    def _build_dead(self, t: Table, now: float) -> np.ndarray:
+        """Liveness column baked into the device runset for table ``t``:
+        tombstones, TTL-expired rows, and rows an excised span covers.
+        Exact for point/scan results: a covered or expired newest version
+        decodes as a tombstone slot, and any newer uncovered version
+        lives in a later-born table the span doesn't cover."""
+        dead = t.dead(now)
+        for sp in self.excised:
+            if sp.covers_table(t):
+                m = (t.keys >= np.uint64(sp.lo)) & (t.keys < np.uint64(sp.hi))
+                if m.any():
+                    dead = dead | m
+        return dead
 
     def _try_incremental(self, tabs: list[Table], d: int) -> Remix | None:
         """Reuse/extend the last built REMIX when this rebuild only appended

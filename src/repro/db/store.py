@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import keys as CK
 from repro.core import query as Q
+from repro.db import clock
 from repro.db.compaction import (
     CompactionConfig,
     Plan,
@@ -58,12 +59,12 @@ from repro.db.compaction import (
     plan_partition,
 )
 from repro.db.cursor import RemixCursor
-from repro.db.memtable import MemTable
+from repro.db.memtable import MemTable, entry_dead
 from repro.db.ops import Batch, Op, OpInterrupted
-from repro.db.partition import Partition, Table
+from repro.db.partition import ExcisedSpan, Partition, Table
 from repro.db.sharded import partition_spans, route_host, route_one
 from repro.db.version import Snapshot, VersionSet
-from repro.db.wal import WAL
+from repro.db.wal import FLAG_RANGE, FLAG_TOMB, WAL, unpack_range_hi
 from repro.obs.events import EventLog, NULL_EVENTS
 from repro.obs.metrics import MetricsRegistry, merge_snapshots
 
@@ -232,6 +233,11 @@ class RemixDB:
         self._c_table_bytes = reg.counter("db_table_bytes_written")
         self._c_comp_rounds = reg.counter("db_compaction_rounds")
         self._c_comp_bytes = reg.counter("db_compaction_bytes_written")
+        # tentpole op counters (asserted in tests/test_obs.py)
+        self._c_delete_range = reg.counter("delete_range")
+        self._c_cas_conflict = reg.counter("cas_conflict")
+        self._c_ttl_dropped = reg.counter("ttl_expired_dropped")
+        self._c_rtomb_drop = reg.counter("range_tombstone_drop")
         self._comp_kinds: set[str] = set()  # plan kinds seen so far
         self._h_flush = reg.histogram("db_flush_seconds")
         reg.gauge("db_memtable_entries", fn=lambda: len(self.mem))
@@ -292,6 +298,9 @@ class RemixDB:
         # MemTable (the data mid-compaction) instead of the drained live
         # one — a snapshot taken mid-flush must still see pre-flush state
         self._flush_overlay: dict | None = None
+        # the frozen MemTable's range tombstones, visible to readers for
+        # the same window: they become partition excised spans at publish
+        self._flush_ranges: list | None = None
         self.versions = VersionSet(on_release=self._on_version_release,
                                    registry=self.registry)
         self.versions.publish(
@@ -394,6 +403,16 @@ class RemixDB:
                 t.attach_cache(self.block_cache)
                 tables.append(t)
             p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
+            by_name = dict(zip(pe["tables"], tables))
+            for se in pe.get("excised", []):
+                span_tabs = tuple(
+                    by_name[nm] for nm in se["tables"] if nm in by_name
+                )
+                if span_tabs:
+                    p.excised.append(ExcisedSpan(
+                        int(se["lo"]), int(se["hi"]), int(se["seq"]),
+                        span_tabs,
+                    ))
             if pe.get("remix"):
                 p.remix_name = pe["remix"]
                 p.preload_index(
@@ -434,6 +453,17 @@ class RemixDB:
                     lo=p.lo,
                     tables=[os.path.basename(t.path) for t in p.tables],
                     remix=p.remix_name,
+                    excised=[
+                        dict(
+                            lo=s.lo, hi=s.hi, seq=s.seq,
+                            tables=[
+                                os.path.basename(t.path)
+                                for t in s.tables
+                                if t.path is not None
+                            ],
+                        )
+                        for s in p.excised
+                    ],
                 )
                 for p in parts
             ],
@@ -535,21 +565,33 @@ class RemixDB:
         return r
 
     # ---------------- write path ----------------
-    def put(self, key: int, val) -> None:
+    def put(self, key: int, val, ttl: float | None = None) -> None:
         # eager shape/dtype validation so bad input raises here, with
         # the original exception type, not inside the executor
         val = np.asarray(val, np.uint32).reshape(self.cfg.vw)
-        self._run_one(Op.put(int(key), val))
+        self._run_one(Op.put(int(key), val, ttl=ttl))
 
     def delete(self, key: int) -> None:
         self._run_one(Op.delete(int(key)))
 
-    def put_batch(self, keys, vals) -> None:
+    def delete_range(self, start: int, end: int) -> None:
+        """Delete every key in [start, end) with one range tombstone."""
+        self._run_one(Op.delete_range(int(start), int(end)))
+
+    def cas(self, key: int, expect, val, ttl: float | None = None):
+        """Compare-and-swap: install ``val`` (or delete it, when ``val``
+        is None) iff the key's current value equals ``expect`` (None =
+        expect-absent). Returns ``(ok, actual)`` — ``actual`` is the
+        conflicting current value (None when absent) on failure."""
+        r = self._run_one(Op.cas(int(key), expect, val, ttl=ttl))
+        return bool(r.found), r.value
+
+    def put_batch(self, keys, vals, ttl=None) -> None:
         keys = np.asarray(keys, np.uint64)
         vals = np.asarray(vals, np.uint32).reshape(len(keys), self.cfg.vw)
-        self._run_one(Op.put(keys, vals))
+        self._run_one(Op.put(keys, vals, ttl=ttl))
 
-    def _apply_writes(self, keys, vals, tombs) -> None:
+    def _apply_writes(self, keys, vals, tombs, exps=None) -> None:
         """The physical write primitive: one group-committed row chunk.
 
         A single WAL ``append_batch`` (group commit under the configured
@@ -564,17 +606,79 @@ class RemixDB:
             return
         vals = np.asarray(vals, np.uint32).reshape(n, self.cfg.vw)
         tombs = np.asarray(tombs, bool)
+        exps = (
+            np.zeros(n, np.uint32) if exps is None
+            else np.broadcast_to(
+                np.asarray(exps, np.uint32), (n,)
+            ).copy()
+        )
         with self._write_lock:
             seqs = np.arange(self.seq, self.seq + n, dtype=np.uint64)
-            self.wal.append_batch(keys, seqs, tombs, vals)
+            self.wal.append_batch(keys, seqs, tombs, vals, exps=exps)
             # MemTable inserts take the state lock so concurrent readers
             # can materialize a stable view of the live overlay (cursor
             # seeks iterate it; dict iteration must not race a resize)
             with self._state_lock:
                 self.seq = self.mem.put_batch(keys, vals, self.seq,
-                                              tomb=tombs)
+                                              tomb=tombs, exp=exps)
             self._c_user_bytes.inc(n * (8 + 4 * self.cfg.vw))
         self._maybe_flush()
+
+    def _apply_delete_range(self, lo: int, hi: int) -> None:
+        """Physical primitive for one DeleteRange op: a single WAL range
+        record + the MemTable range tombstone, under the write lock."""
+        lo, hi = int(lo), int(hi)
+        if hi <= lo:
+            return
+        with self._write_lock:
+            s = self.seq
+            self.wal.append_range(lo, hi, s)
+            with self._state_lock:
+                self.mem.delete_range(lo, hi, s)
+                self.seq = s + 1
+            self._c_user_bytes.inc(8 + 4 * self.cfg.vw)
+        self._c_delete_range.inc()
+        self._maybe_flush()
+
+    def _apply_cas(self, key: int, expect, val, exp: int = 0):
+        """Physical primitive for one Cas op. Atomicity rides the write
+        lock: the read of the current committed value and the conditional
+        append happen with every other writer excluded. Returns
+        ``(ok, actual)`` where ``actual`` is the pre-op value (None when
+        absent) — reported back on conflict."""
+        key = int(key)
+        with self._write_lock:
+            with self._view() as v:
+                cur = self._get_at(v, key)
+            if expect is None:
+                ok = cur is None
+            else:
+                ok = cur is not None and np.array_equal(
+                    np.asarray(cur, np.uint32).reshape(-1),
+                    np.asarray(expect, np.uint32).reshape(-1),
+                )
+            if not ok:
+                self._c_cas_conflict.inc()
+                return False, cur
+            tomb = val is None
+            row = (
+                np.zeros((1, self.cfg.vw), np.uint32)
+                if tomb
+                else np.asarray(val, np.uint32).reshape(1, self.cfg.vw)
+            )
+            seqs = np.array([self.seq], np.uint64)
+            self.wal.append_batch(
+                np.array([key], np.uint64), seqs, np.array([tomb]), row,
+                exps=np.array([exp], np.uint32),
+            )
+            with self._state_lock:
+                self.seq = self.mem.put_batch(
+                    np.array([key], np.uint64), row, self.seq,
+                    tomb=np.array([tomb]), exp=np.array([exp], np.uint32),
+                )
+            self._c_user_bytes.inc(8 + 4 * self.cfg.vw)
+        self._maybe_flush()
+        return True, cur
 
     def _maybe_flush(self):
         if len(self.mem) >= self.cfg.memtable_entries:
@@ -641,6 +745,7 @@ class RemixDB:
         finally:
             with self._state_lock:
                 self._flush_overlay = None
+                self._flush_ranges = None
                 self._in_flush = False
 
     def _freeze(self):
@@ -648,8 +753,8 @@ class RemixDB:
         start-of-flush edge shared by both flush modes. Returns the
         ``_compact`` arguments, or None when there is nothing to flush."""
         with self._state_lock:
-            keys, vals, seq, tomb, counts = self.mem.to_arrays()
-            if len(keys) == 0:
+            keys, vals, seq, tomb, counts, exp = self.mem.to_arrays()
+            if len(keys) == 0 and not self.mem.ranges:
                 return None
             hot = counts > self.cfg.hot_threshold
             frozen = self.mem
@@ -658,10 +763,11 @@ class RemixDB:
             # live MemTable would make the data under compaction invisible
             self.mem = MemTable(vw=self.cfg.vw)
             self._flush_overlay = frozen.data
+            self._flush_ranges = list(frozen.ranges)
             self._in_flush = True
         self.events.emit("flush", entries=int(len(keys)),
-                         hot=int(hot.sum()))
-        return (frozen, keys, vals, seq, tomb, hot)
+                         hot=int(hot.sum()), ranges=len(frozen.ranges))
+        return (frozen, keys, vals, seq, tomb, exp, hot)
 
     def _flush_locked(self) -> dict:
         frozen = self._freeze()
@@ -672,9 +778,48 @@ class RemixDB:
         finally:
             with self._state_lock:
                 self._flush_overlay = None
+                self._flush_ranges = None
                 self._in_flush = False
 
-    def _compact(self, frozen, keys, vals, seq, tomb, hot) -> dict:
+    def _fold_flush_ranges(self, p: Partition, span, ranges) -> Partition:
+        """Clip this flush's range tombstones to one partition and fold
+        them in, returning a clone: tables falling entirely inside a
+        range are dropped whole (their files are never read again), the
+        remainder get an excised span pinned to the surviving tables."""
+        plo, phi = span
+        clipped = [
+            (max(lo, plo), min(hi, phi), s)
+            for lo, hi, s in ranges
+            if max(lo, plo) < min(hi, phi)
+        ]
+        if not clipped:
+            return p
+        keep, dropped = [], 0
+        for t in p.tables:
+            if t.n and any(
+                rl <= int(CK.unpack_u64(t.key_at(0)))
+                and int(CK.unpack_u64(t.key_at(t.n - 1))) < rh
+                for rl, rh, _ in clipped
+            ):
+                dropped += 1
+            else:
+                keep.append(t)
+        base = p
+        # table list unchanged: the persisted REMIX still describes the
+        # clone exactly (covered rows are hidden structurally at read
+        # time), so the cold-serving state survives the fold
+        p = p.clone_with_tables(keep, carry_built=not dropped)
+        if not dropped:
+            p.remix_name = base.remix_name
+        else:
+            self._c_rtomb_drop.inc(dropped)
+            self.events.emit("range_tombstone_drop", lo=int(p.lo),
+                             tables=int(dropped))
+        for rl, rh, rs in clipped:
+            p.attach_excised(rl, rh, rs)
+        return p
+
+    def _compact(self, frozen, keys, vals, seq, tomb, exp, hot) -> dict:
         t_round = time.monotonic()
         # hot keys skip compaction; carried over with halved counters
         # (under the state lock: with background compaction, writers may
@@ -682,27 +827,37 @@ class RemixDB:
         with self._state_lock:
             for k in np.asarray(keys[hot], np.uint64).tolist():
                 self.mem.carry_over(int(k), frozen.data[int(k)])
-        keys, vals, seq, tomb = (
-            keys[~hot], vals[~hot], seq[~hot], tomb[~hot],
+        keys, vals, seq, tomb, exp = (
+            keys[~hot], vals[~hot], seq[~hot], tomb[~hot], exp[~hot],
         )
-        # route new data to partitions of the current version
+        # route new data to partitions of the current version; range
+        # tombstones frozen with this MemTable fold into per-partition
+        # excised spans (on clones — published only at the version edge)
         base = self.versions.current.partitions
+        spans = partition_spans([p.lo for p in base])
         pidx = route_host([p.lo for p in base], keys)
         plans: list[Plan] = []
+        clones: list[Partition] = []
         for i, p in enumerate(base):
             m = pidx == i
-            t = Table(keys=keys[m], vals=vals[m], seq=seq[m], tomb=tomb[m])
+            if frozen.ranges:
+                p = self._fold_flush_ranges(p, spans[i], frozen.ranges)
+            clones.append(p)
+            t = Table(keys=keys[m], vals=vals[m], seq=seq[m], tomb=tomb[m],
+                      exp=exp[m])
             plans.append(plan_partition(p, t, self.cfg.compaction))
         apply_abort_budget(plans, self.cfg.compaction)
         kinds: dict[str, int] = {}
         round_bytes = 0
         new_parts: list[Partition] = []
-        for p, pl in zip(base, plans):
+        for p, pl in zip(clones, plans):
             kinds[pl.kind] = kinds.get(pl.kind, 0) + 1
             res = execute(pl, self.cfg.compaction, storage=self.storage,
                           registry=self.registry)
             self._c_table_bytes.inc(res.bytes_written)
             round_bytes += res.bytes_written
+            if res.rows_expired:
+                self._c_ttl_dropped.inc(res.rows_expired)
             if res.carried is not None:  # aborted: back into the MemTable
                 with self._state_lock:
                     for j in range(res.carried.n):
@@ -725,7 +880,9 @@ class RemixDB:
         with self._write_lock:
             with self._state_lock:
                 live_keys = set(self.mem.data.keys())
-            self.wal.gc(live_keys, defer_free=self.storage is not None)
+                live_range_seqs = {s for _, _, s in self.mem.ranges}
+            self.wal.gc(live_keys, defer_free=self.storage is not None,
+                        live_range_seqs=live_range_seqs)
             self.events.emit("wal_gc", live_keys=len(live_keys),
                              used_blocks=self.wal.used_blocks())
             if self.storage is not None:
@@ -739,6 +896,7 @@ class RemixDB:
         with self._state_lock:
             v = self.versions.publish(new_parts, seq_horizon=self.seq)
             self._flush_overlay = None
+            self._flush_ranges = None
         self.events.emit("version_publish", vid=v.vid,
                          partitions=len(new_parts))
         if self.storage is not None:
@@ -771,7 +929,8 @@ class RemixDB:
                 if self._flush_overlay is not None
                 else self.mem.data
             )
-            return Snapshot(self, v, dict(src), seq=self.seq, pinned=True)
+            return Snapshot(self, v, dict(src), seq=self.seq, pinned=True,
+                            ranges=self._live_ranges())
 
     @contextlib.contextmanager
     def _view(self):
@@ -788,11 +947,23 @@ class RemixDB:
                 else self.mem.data
             )
             snap = Snapshot(self, v, src, seq=self.seq, pinned=True,
-                            shared=True)
+                            shared=True, ranges=self._live_ranges())
         try:
             yield snap
         finally:
             snap.close()
+
+    def _live_ranges(self) -> tuple:
+        """Unflushed range tombstones a new view must honor (call under
+        ``_state_lock``): the frozen MemTable's while a flush is in
+        flight (they become partition spans only at publish), else the
+        live MemTable's."""
+        src = (
+            self._flush_ranges
+            if self._flush_overlay is not None
+            else self.mem.ranges
+        )
+        return tuple(src or ())
 
     def cursor(self, start: int = 0, width: int = 64) -> RemixCursor:
         """A streaming cursor (seek/peek/next/skip/next_batch, §3.2) over
@@ -851,7 +1022,9 @@ class RemixDB:
     def _get_at(self, view: Snapshot, key: int):
         e = view.overlay.get(int(key))
         if e is not None:
-            return None if e.tomb else e.val
+            return None if entry_dead(e, clock.now()) else e.val
+        if view.ranges and view.covers(int(key)):
+            return None  # hidden by an unflushed range tombstone
         parts = view.partitions
         p = parts[route_one(parts, int(key))]
         if self._cold_ok(p):
@@ -872,12 +1045,13 @@ class RemixDB:
         found = np.zeros(len(keys), bool)
         vals = np.zeros((len(keys), self.cfg.vw), np.uint32)
         rest = []
+        now = clock.now()
         for i, k in enumerate(keys.tolist()):
             e = view.overlay.get(k)
             if e is not None:
-                found[i] = not e.tomb
+                found[i] = not entry_dead(e, now)
                 vals[i] = e.val
-            else:
+            elif not (view.ranges and view.covers(k)):
                 rest.append(i)
         parts = view.partitions
         if rest:
@@ -982,8 +1156,9 @@ class RemixDB:
         # path pipelines value/tomb blocks ahead (Fig 10, prefetch_depth)
         # — the batched window path instead coalesces across queries,
         # which only wins with > 1 scan sharing granules. Batches over a
-        # non-empty overlay merge per query through the cursor too.
-        if q == 1 or view.overlay:
+        # non-empty overlay (entries or unflushed range tombstones)
+        # merge per query through the cursor too.
+        if q == 1 or view.overlay or view.ranges:
             return [row_fallback(qi) for qi in range(q)]
         out: list = [None] * q
         parts = view.partitions
@@ -1115,8 +1290,14 @@ class RemixDB:
         return merge_snapshots(*parts)
 
     def recover_memtable(self) -> MemTable:
-        """Rebuild the MemTable from the WAL's live virtual log (§4.3)."""
+        """Rebuild the MemTable from the WAL's live virtual log (§4.3).
+
+        Replays in sequence order so a range tombstone re-hides exactly
+        the older point entries it hid before the crash."""
         mem = MemTable(vw=self.cfg.vw)
-        for k, s, t, v in sorted(self.wal.replay(), key=lambda r: r[1]):
-            mem.put(k, v, s, t)
+        for k, s, fl, e, v in sorted(self.wal.replay(), key=lambda r: r[1]):
+            if fl & FLAG_RANGE:
+                mem.delete_range(k, unpack_range_hi(v), s)
+            else:
+                mem.put(k, v, s, tomb=bool(fl & FLAG_TOMB), exp=int(e))
         return mem

@@ -158,10 +158,15 @@ class Snapshot:
     """
 
     def __init__(self, store, version: Version, overlay: dict,
-                 seq: int, pinned: bool = False, shared: bool = False):
+                 seq: int, pinned: bool = False, shared: bool = False,
+                 ranges: tuple = ()):
         self.store = store
         self.version = version
         self.overlay = overlay  # key -> MemTable Entry (frozen iff copied)
+        # overlay range tombstones (lo, hi, seq): DeleteRanges buffered in
+        # the (frozen) MemTable at creation — they hide every table row in
+        # [lo, hi) until a flush converts them to partition excised spans
+        self.ranges = tuple(ranges)
         # sequence horizon at creation: every write with seq < this is
         # visible (version.seq_horizon covers the table state; overlay
         # entries extend visibility up to this snapshot's horizon)
@@ -177,6 +182,12 @@ class Snapshot:
     @property
     def partitions(self):
         return self.version.partitions
+
+    def covers(self, key: int) -> bool:
+        """Whether an overlay range tombstone hides table rows at ``key``
+        (overlay *entries* for the key take precedence — check them
+        first; any entry newer than the range was written after it)."""
+        return any(lo <= key < hi for lo, hi, _ in self.ranges)
 
     # ---- reads (delegating to the store's shared query engine) ----
     def get(self, key: int):

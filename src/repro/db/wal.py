@@ -10,7 +10,12 @@ every physical overwrite, so recovery can distinguish remapped-valid blocks
 from stale *unwritten* blocks, exactly as in the paper.
 
 Record format inside a block (fixed width): key u64 | seq u32 | flags u32 |
-VW*u32 value. Records never span blocks.
+exp u32 | VW*u32 value. Records never span blocks. ``flags`` bit 0 is the
+point-tombstone bit; bit 1 marks a *range tombstone* (DeleteRange): key
+holds the inclusive lower bound, the first two value words pack the
+exclusive upper bound (lo 32 bits then hi 32 bits), and ``exp`` is unused.
+``exp`` on ordinary records is the absolute TTL expiry in unix seconds
+(0 = no TTL).
 
 Durability is a policy knob (``sync_policy``), mirroring the usual LSM
 WAL options:
@@ -41,9 +46,26 @@ from repro.obs import metrics as _metrics
 BLOCK = 4096
 HDR = 8  # 1-bit epoch in byte 0 + u16 record count + padding
 
+FLAG_TOMB = 1  # record is a point tombstone
+FLAG_RANGE = 2  # record is a range tombstone (key=lo, val[0:2]=hi)
+
 
 def _rec_size(vw: int) -> int:
-    return 8 + 4 + 4 + 4 * vw
+    return 8 + 4 + 4 + 4 + 4 * vw
+
+
+def pack_range_hi(hi: int, vw: int) -> np.ndarray:
+    """Encode a range tombstone's exclusive upper bound in the value words."""
+    if vw < 2:
+        raise ValueError("range tombstones need vw >= 2")
+    v = np.zeros(vw, np.uint32)
+    v[0] = hi & 0xFFFFFFFF
+    v[1] = (hi >> 32) & 0xFFFFFFFF
+    return v
+
+
+def unpack_range_hi(val: np.ndarray) -> int:
+    return int(val[0]) | (int(val[1]) << 32)
 
 
 @dataclasses.dataclass
@@ -94,7 +116,7 @@ class WAL:
         self.quarantine: list[int] = []
         self.next_phys = 0
         self.vlog = VirtualLog(timestamp=1)
-        self._pending: list[tuple[int, int, int, np.ndarray]] = []
+        self._pending: list[tuple[int, int, int, int, np.ndarray]] = []
         self._dirty = False  # blocks written since the last fsync
         # physical write accounting (for WA ratios) — registry-backed;
         # the legacy ``wal.bytes_written`` attribute reads it back out
@@ -120,8 +142,12 @@ class WAL:
         return self._c_bytes_written.value
 
     # ---------- append path ----------
-    def append(self, key: int, seq: int, tomb: bool, val: np.ndarray):
-        self._pending.append((key, seq, int(tomb), np.asarray(val, np.uint32)))
+    def append(self, key: int, seq: int, tomb: bool, val: np.ndarray,
+               exp: int = 0, flags: int | None = None):
+        fl = (FLAG_TOMB if tomb else 0) if flags is None else flags
+        self._pending.append(
+            (key, seq, fl, int(exp), np.asarray(val, np.uint32))
+        )
         self.max_seq = max(self.max_seq, int(seq))
         if self.sync_policy == "always":
             self._flush_pending()
@@ -131,9 +157,18 @@ class WAL:
             if self.sync_policy == "block":
                 self._fsync()
 
-    def append_batch(self, keys, seqs, tombs, vals):
-        for k, s, t, v in zip(keys, seqs, tombs, vals):
-            self._pending.append((int(k), int(s), int(t), v))
+    def append_range(self, lo: int, hi: int, seq: int):
+        """Durably record a DeleteRange [lo, hi) at sequence ``seq``."""
+        self.append(lo, seq, False, pack_range_hi(hi, self.vw),
+                    flags=FLAG_RANGE)
+
+    def append_batch(self, keys, seqs, tombs, vals, exps=None):
+        if exps is None:
+            exps = (0,) * len(keys)
+        for k, s, t, v, e in zip(keys, seqs, tombs, vals, exps):
+            self._pending.append(
+                (int(k), int(s), FLAG_TOMB if t else 0, int(e), v)
+            )
             self.max_seq = max(self.max_seq, int(s))
         flushed = False
         while len(self._pending) >= self.recs_per_block:
@@ -164,8 +199,8 @@ class WAL:
         self.epoch_bits[phys] = epoch
         buf = io.BytesIO()
         buf.write(struct.pack("<BxH4x", epoch, n))
-        for k, s, t, v in recs:
-            buf.write(struct.pack("<QII", k, s, t))
+        for k, s, fl, e, v in recs:
+            buf.write(struct.pack("<QIII", k, s, fl, e))
             buf.write(np.asarray(v, np.uint32).tobytes())
         data = buf.getvalue().ljust(BLOCK, b"\0")
         with open(self.path, "r+b") as f:
@@ -203,16 +238,17 @@ class WAL:
         recs = []
         off = HDR
         for _ in range(n):
-            k, s, t = struct.unpack_from("<QII", data, off)
+            k, s, fl, e = struct.unpack_from("<QIII", data, off)
             v = np.frombuffer(
-                data, np.uint32, count=self.vw, offset=off + 16
+                data, np.uint32, count=self.vw, offset=off + 20
             ).copy()
-            recs.append((k, s, bool(t), v))
+            recs.append((k, s, fl, e, v))
             off += self.rec_size
         return epoch, recs
 
     def replay(self):
-        """Yield all live records of the current virtual log, in log order."""
+        """Yield all live records ``(key, seq, flags, exp, val)`` of the
+        current virtual log, in log order."""
         self.sync()
         for bm in self.vlog.blocks:
             if not bm.written:
@@ -225,8 +261,11 @@ class WAL:
                     yield rec
 
     # ---------- garbage collection ----------
-    def gc(self, live_keys: set[int], defer_free: bool = False):
-        """Build a new virtual log keeping only records of ``live_keys``.
+    def gc(self, live_keys: set[int], defer_free: bool = False,
+           live_range_seqs: set[int] | None = None):
+        """Build a new virtual log keeping only records of ``live_keys``
+        (plus range tombstones whose seq is in ``live_range_seqs`` — ranges
+        already committed to the manifest as excised spans are droppable).
 
         Blocks with >= 1/4 valid records are remapped with a masking bitmap;
         others are freed and their survivors rewritten (batched re-append).
@@ -239,9 +278,16 @@ class WAL:
         """
         self.sync()
         self._c_gc_rounds.inc()
+        ranges = live_range_seqs if live_range_seqs is not None else set()
         new = VirtualLog(timestamp=self.vlog.timestamp + 1)
-        rewrite: list[tuple[int, int, int, np.ndarray]] = []
+        rewrite: list[tuple[int, int, int, int, np.ndarray]] = []
         freed = []
+
+        def _alive(k, s, fl):
+            if fl & FLAG_RANGE:
+                return s in ranges
+            return k in live_keys
+
         for bm in self.vlog.blocks:
             if not bm.written:
                 continue
@@ -250,8 +296,8 @@ class WAL:
                 continue
             live = [
                 i
-                for i, (k, s, t, v) in enumerate(recs)
-                if (bm.bitmap >> i & 1) and k in live_keys
+                for i, (k, s, fl, e, v) in enumerate(recs)
+                if (bm.bitmap >> i & 1) and _alive(k, s, fl)
             ]
             if len(recs) and len(live) * 4 >= len(recs):
                 bitmap = 0
@@ -263,8 +309,7 @@ class WAL:
                 )
             else:
                 for i in live:
-                    k, s, t, v = recs[i]
-                    rewrite.append((k, s, int(t), v))
+                    rewrite.append(recs[i])
                 freed.append(bm.phys)
                 # record as unwritten in the new mapping table with the
                 # *inverted* epoch so a scan detects it as not-yet-written
@@ -338,7 +383,7 @@ class WAL:
                 continue
             self.epoch_bits[phys] = epoch
             self.max_seq = max(
-                self.max_seq, max(int(s) for _, s, _, _ in recs)
+                self.max_seq, max(int(s) for _, s, _, _, _ in recs)
             )
             if phys in self.free:
                 self.free.remove(phys)

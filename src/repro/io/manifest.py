@@ -154,14 +154,14 @@ class Storage:
         self._next_id += 1
         return name
 
-    def write_table(self, keys, vals, seq, tomb) -> str:
+    def write_table(self, keys, vals, seq, tomb, exp=None, rtombs=None) -> str:
         """Write one table file; returns its manifest-relative name."""
         from repro.io.sstable import write_sstable
 
         name = self.alloc_table_name()
         self.bytes_written += write_sstable(
             self.table_path(name), keys, vals, seq, tomb,
-            with_ckb=self.with_ckb,
+            exp=exp, rtombs=rtombs, with_ckb=self.with_ckb,
         )
         return name
 

@@ -29,16 +29,21 @@ from repro.obs import tracing as _tracing
 
 MAGIC = b"RMIXSST1"
 FOOTER_MAGIC = b"RMIXFTR1"
-VERSION = 1
+VERSION = 2
 FLAG_CKB = 1
+FLAG_EXP = 2  # file carries a per-row TTL expiry section
 
 DEFAULT_BLOCK = 1 << 16  # 64 KB checksum granule
 
-_HEADER = struct.Struct("<8sHHHHQI12x")  # magic, ver, kw, vw, flags, n, blk
-_FOOTER_FIXED = struct.Struct("<6QII")  # 5 section offsets, ckb_len, nblk, blk
+# magic, ver, kw, vw, flags, n, blk, n_rtombs
+_HEADER = struct.Struct("<8sHHHHQII8x")
+# 7 section offsets, ckb_len, nblk, blk
+_FOOTER_FIXED = struct.Struct("<8QII")
 _FOOTER_TAIL = struct.Struct("<II8s")  # footer_crc, footer_len, magic
 
-SECTIONS = ("keys", "vals", "seq", "tomb", "ckb")
+SECTIONS = ("keys", "vals", "seq", "tomb", "exp", "rtombs", "ckb")
+
+_RTOMB = struct.Struct("<3Q")  # lo, hi (exclusive), seq
 
 
 def write_sstable(
@@ -47,13 +52,20 @@ def write_sstable(
     vals: np.ndarray,
     seq: np.ndarray,
     tomb: np.ndarray,
+    exp: np.ndarray | None = None,
+    rtombs=None,
     with_ckb: bool = True,
     block_bytes: int = DEFAULT_BLOCK,
 ) -> int:
     """Write one table file atomically; returns bytes written.
 
     ``keys``: (N, KW) uint32 sorted ascending (word 0 most significant);
-    ``vals``: (N, VW) uint32; ``seq``: (N,) uint32; ``tomb``: (N,) bool.
+    ``vals``: (N, VW) uint32; ``seq``: (N,) uint32; ``tomb``: (N,) bool;
+    ``exp``: optional (N,) uint32 absolute TTL expiries (all-zero or None
+    omits the section and clears FLAG_EXP); ``rtombs``: optional iterable
+    of ``(lo, hi, seq)`` range tombstones born from the same flush as this
+    table's rows (the manifest's excised spans stay authoritative — the
+    section is a colocated, crash-independent record of the deletes).
     """
     keys = np.ascontiguousarray(np.asarray(keys, np.uint32))
     vals = np.ascontiguousarray(np.asarray(vals, np.uint32))
@@ -68,6 +80,14 @@ def write_sstable(
         tomb.astype(np.uint8).tobytes(),
     ]
     flags = 0
+    if exp is not None and np.any(np.asarray(exp)):
+        exp = np.ascontiguousarray(np.asarray(exp, np.uint32))
+        sections.append(exp.astype("<u4").tobytes())
+        flags |= FLAG_EXP
+    else:
+        sections.append(b"")
+    rt = [(int(lo), int(hi), int(s)) for lo, hi, s in (rtombs or ())]
+    sections.append(b"".join(_RTOMB.pack(*r) for r in rt))
     if with_ckb:
         sections.append(encode_ckb(keys))
         flags |= FLAG_CKB
@@ -84,12 +104,14 @@ def write_sstable(
         for i in range(0, max(1, len(data)), block_bytes)
     ]
     footer = _FOOTER_FIXED.pack(
-        *offs, len(sections[4]), len(crcs), block_bytes
+        *offs, len(sections[6]), len(crcs), block_bytes
     ) + np.asarray(crcs, "<u4").tobytes()
     footer += _FOOTER_TAIL.pack(
         crc32c(footer), len(footer) + _FOOTER_TAIL.size, FOOTER_MAGIC
     )
-    header = _HEADER.pack(MAGIC, VERSION, kw, vw, flags, n, block_bytes)
+    header = _HEADER.pack(
+        MAGIC, VERSION, kw, vw, flags, n, block_bytes, len(rt)
+    )
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(header)
@@ -131,8 +153,8 @@ class SSTableReader:
         self._cache_key = (path, st.st_ino, st.st_mtime_ns)
         with open(path, "rb") as f:
             hdr = f.read(_HEADER.size)
-            (magic, ver, self.kw, self.vw, self.flags, self.n, self.block_bytes
-             ) = _HEADER.unpack(hdr)
+            (magic, ver, self.kw, self.vw, self.flags, self.n,
+             self.block_bytes, self.n_rtombs) = _HEADER.unpack(hdr)
             if magic != MAGIC or ver != VERSION:
                 raise ValueError(f"{path}: not an SSTable (v{VERSION}) file")
             f.seek(-_FOOTER_TAIL.size, os.SEEK_END)
@@ -145,9 +167,9 @@ class SSTableReader:
             if crc32c(body) != fcrc:
                 raise ValueError(f"{path}: footer checksum mismatch")
             fixed = _FOOTER_FIXED.unpack_from(body, 0)
-            self._offs = dict(zip(SECTIONS, fixed[:5]))
-            self._ckb_len = fixed[5]
-            n_blocks, bb = fixed[6], fixed[7]
+            self._offs = dict(zip(SECTIONS, fixed[:7]))
+            self._ckb_len = fixed[7]
+            n_blocks, bb = fixed[8], fixed[9]
             self._crcs = np.frombuffer(
                 body, "<u4", count=n_blocks, offset=_FOOTER_FIXED.size
             )
@@ -161,6 +183,11 @@ class SSTableReader:
     @property
     def has_ckb(self) -> bool:
         return bool(self.flags & FLAG_CKB)
+
+    @property
+    def has_exp(self) -> bool:
+        """Whether the file carries per-row TTL expiries (any nonzero)."""
+        return bool(self.flags & FLAG_EXP)
 
     @property
     def n_blocks(self) -> int:
@@ -181,6 +208,8 @@ class SSTableReader:
             vals=self.n * self.vw * 4,
             seq=self.n * 4,
             tomb=self.n,
+            exp=self.n * 4 if self.has_exp else 0,
+            rtombs=self.n_rtombs * _RTOMB.size,
             ckb=self._ckb_len,
         )
         off = self._offs[name]
@@ -367,6 +396,22 @@ class SSTableReader:
     def read_tomb(self) -> np.ndarray:
         return np.frombuffer(self._read_checked("tomb"), np.uint8).astype(bool)
 
+    def read_exp(self) -> np.ndarray:
+        """(N,) uint32 absolute TTL expiries (zeros when FLAG_EXP clear)."""
+        if not self.has_exp:
+            return np.zeros(self.n, np.uint32)
+        return np.frombuffer(self._read_checked("exp"), "<u4").astype(
+            np.uint32
+        )
+
+    def read_rtombs(self) -> list[tuple[int, int, int]]:
+        """Range tombstones ``(lo, hi, seq)`` recorded with this table."""
+        raw = self._read_checked("rtombs")
+        return [
+            _RTOMB.unpack_from(raw, i * _RTOMB.size)
+            for i in range(self.n_rtombs)
+        ]
+
     def read_ckb_keys(self) -> np.ndarray | None:
         """Decode the CKB trailer to (N, KW) uint32, or None if absent."""
         if not self.has_ckb:
@@ -375,7 +420,9 @@ class SSTableReader:
 
     def row_bytes(self, name: str) -> int:
         """Fixed row width (bytes) of a columnar section."""
-        return dict(keys=self.kw * 4, vals=self.vw * 4, seq=4, tomb=1)[name]
+        return dict(
+            keys=self.kw * 4, vals=self.vw * 4, seq=4, tomb=1, exp=4
+        )[name]
 
     def section_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
         """Rows [lo, hi) of a columnar section, via block-granular reads.
@@ -404,7 +451,7 @@ class SSTableReader:
             return out.view("<u4").reshape(-1, self.kw)
         if name == "vals":
             return out.view("<u4").reshape(-1, self.vw)
-        if name == "seq":
+        if name in ("seq", "exp"):
             return out.view("<u4").ravel()
         return out.ravel().astype(bool)
 

@@ -282,6 +282,27 @@ class KVServeEngine:
 
         self._run_one(Op.delete(int(key)))
 
+    def delete_range(self, start: int, end: int) -> None:
+        """Range tombstone over ``[start, end)``; the executor clips the
+        span to each owning shard (one WAL record per touched shard)."""
+        from repro.db.ops import Op
+
+        self._run_one(Op.delete_range(int(start), int(end)))
+
+    def cas(self, key: int, expect, val, *, ttl=None):
+        """Atomic compare-and-swap on the owning shard. Returns
+        ``(swapped, actual)`` — on conflict ``actual`` is the current
+        value (None when absent)."""
+        from repro.db.ops import Op
+
+        vw = self.shards[0].cfg.vw
+        if expect is not None:
+            expect = np.asarray(expect, np.uint32).reshape(vw)
+        if val is not None:
+            val = np.asarray(val, np.uint32).reshape(vw)
+        r = self._run_one(Op.cas(int(key), expect, val, ttl=ttl))
+        return bool(r.found), r.value
+
     def flush(self) -> list[dict]:
         """Flush every shard (memtable freeze + compaction round each)."""
         return [db.flush() for db in self.shards]

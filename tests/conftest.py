@@ -1,0 +1,38 @@
+"""Shared test configuration.
+
+Hypothesis profiles (when hypothesis is installed):
+
+- ``ci`` (default): derandomized with a fixed seed and no deadline, so
+  tier-1 CI runs are deterministic and immune to machine-speed flakes;
+- ``nightly``: 500+ examples per property/state machine, randomized —
+  the nightly CI job selects it via ``HYPOTHESIS_PROFILE=nightly``.
+
+Every hypothesis failure prints its reproduction seed; re-running with
+``--hypothesis-seed=<seed>`` (or the printed ``@reproduce_failure``
+decorator) replays the shrunk counterexample exactly.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci",
+        derandomize=True,
+        deadline=None,
+        max_examples=25,
+        stateful_step_count=30,
+        suppress_health_check=[HealthCheck.too_slow],
+        print_blob=True,
+    )
+    settings.register_profile(
+        "nightly",
+        deadline=None,
+        max_examples=500,
+        stateful_step_count=50,
+        suppress_health_check=[HealthCheck.too_slow],
+        print_blob=True,
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:  # hypothesis-based tests importorskip individually
+    pass

@@ -1,0 +1,295 @@
+"""DeleteRange / TTL / CAS acceptance tests.
+
+The headline assertion: a cold scan across a range-deleted span does NO
+per-key tombstone merging — the REMIX cursor walk skips the excised view
+interval structurally, so zero keys/vals-section granules inside the
+covered row range are ever read (CKB reads at the span boundaries are
+the allowed price of computing the skip).
+"""
+import numpy as np
+import pytest
+
+from repro.db import clock
+from repro.db.compaction import CompactionConfig
+from repro.db.store import RemixDB, RemixDBConfig
+from repro.io import sstable
+
+
+def _cfg(**kw):
+    return RemixDBConfig(
+        vw=2,
+        memtable_entries=kw.pop("memtable_entries", 1 << 15),
+        compaction=kw.pop(
+            "compaction", CompactionConfig(table_cap=1 << 15, t_max=4)
+        ),
+        hot_threshold=255,
+        **kw,
+    )
+
+
+@pytest.fixture(autouse=True)
+def _reset_clock():
+    yield
+    clock.reset()
+
+
+@pytest.fixture
+def small_granules(monkeypatch):
+    """Write tables with 4 KB checksum granules so block accounting is
+    fine-grained (512 rows per keys/vals granule at vw=2)."""
+    real = sstable.write_sstable
+
+    def patched(*a, **kw):
+        kw.setdefault("block_bytes", 4096)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(sstable, "write_sstable", patched)
+
+
+class _GranuleRecorder:
+    """Record every (reader, granule) touched through either read path."""
+
+    def __init__(self, monkeypatch):
+        self.touched = []
+        rblk = sstable.SSTableReader.read_block
+        rrng = sstable.SSTableReader.read_range
+        rec = self.touched
+
+        def rec_blk(reader, idx):
+            rec.append((reader, idx))
+            return rblk(reader, idx)
+
+        def rec_rng(reader, lo, hi):
+            if hi > lo:
+                bb = reader.block_bytes
+                for bi in range(
+                    (lo - reader._data_start) // bb,
+                    (hi - reader._data_start - 1) // bb + 1,
+                ):
+                    rec.append((reader, bi))
+            return rrng(reader, lo, hi)
+
+        monkeypatch.setattr(sstable.SSTableReader, "read_block", rec_blk)
+        monkeypatch.setattr(sstable.SSTableReader, "read_range", rec_rng)
+
+
+def test_cold_scan_skips_excised_span_structurally(
+    tmp_path, small_granules, monkeypatch
+):
+    """Acceptance: touched keys/vals granules in the excised span == 0.
+
+    8192 dense keys, one table, range [2048, 6144) deleted (granule-
+    aligned: 512 rows per 4 KB block). A full cursor drain off the cold
+    path must return exactly the survivors while never reading a keys-
+    or vals-section granule of the covered rows.
+    """
+    d = str(tmp_path / "db")
+    db = RemixDB.open(d, _cfg())
+    n = 8192
+    ks = np.arange(n, dtype=np.uint64)
+    vs = np.stack([ks.astype(np.uint32), ks.astype(np.uint32) + 1], 1)
+    db.put_batch(ks, vs)
+    db.flush()
+    db.delete_range(2048, 6144)
+    db.flush()
+    db.close()
+
+    db = RemixDB.open(d, _cfg())  # tables cold, REMIX recovered
+    try:
+        p = db.versions.current.partitions[0]
+        assert db._cold_ok(p), "must exercise the cold cursor path"
+        assert p.full_spans() == [(2048, 6144)]
+        state = p.cold_cursor_seek(0)
+        assert [(a, b) for a, b, _ in state["skips"]], "skip table empty"
+        covered = []
+        for t in p.tables:
+            r = t._rd()
+            covered.append(
+                (
+                    r,
+                    set(r.section_row_blocks("keys", 2048, 6144))
+                    | set(r.section_row_blocks("vals", 2048, 6144)),
+                )
+            )
+        rec = _GranuleRecorder(monkeypatch)
+        with db.cursor(width=64) as cur:
+            cur.seek(0)
+            got = [k for k, _ in cur]
+        assert got == [k for k in range(n) if not 2048 <= k < 6144]
+        assert rec.touched, "cold drain must read some granules"
+        overlap = [
+            i
+            for r, cov in covered
+            for rr, i in rec.touched
+            if rr is r and i in cov
+        ]
+        assert overlap == [], f"read covered granules: {sorted(set(overlap))}"
+    finally:
+        db.close()
+
+
+def test_whole_table_drop_at_flush(tmp_path):
+    """A table entirely inside a clipped range is dropped whole at the
+    fold (no merge, no read), observable via the range_tombstone_drop
+    event and the disappearing table handle."""
+    d = str(tmp_path / "db")
+    db = RemixDB.open(d, _cfg(memtable_entries=256))
+    ks = np.arange(1000, 1200, dtype=np.uint64)
+    db.put_batch(ks, np.stack([ks, ks], 1).astype(np.uint32))
+    db.flush()
+    n_before = sum(len(p.tables) for p in db.versions.current.partitions)
+    assert n_before >= 1
+    db.delete_range(0, 5000)  # covers every flushed table
+    db.flush()
+    try:
+        n_after = sum(
+            len(p.tables) for p in db.versions.current.partitions
+        )
+        assert n_after == 0
+        assert db.events.list(kind="range_tombstone_drop")
+        kk, _ = db.scan(0, 10_000)
+        assert len(kk) == 0
+    finally:
+        db.close()
+
+
+def test_partial_span_scan_and_get_parity(tmp_path):
+    """A range covering only *some* tables of a partition falls back to
+    per-key excision in the emit path — scan, cursor and point gets must
+    agree exactly."""
+    d = str(tmp_path / "db")
+    db = RemixDB.open(
+        d,
+        _cfg(
+            memtable_entries=256,
+            compaction=CompactionConfig(table_cap=256, t_max=6),
+        ),
+    )
+    try:
+        # two generations of tables with interleaved key ranges
+        ks1 = np.arange(0, 600, 2, dtype=np.uint64)
+        db.put_batch(ks1, np.stack([ks1, ks1], 1).astype(np.uint32))
+        db.flush()
+        db.delete_range(100, 400)  # covers the first generation only
+        ks2 = np.arange(1, 600, 2, dtype=np.uint64)
+        db.put_batch(ks2, np.stack([ks2, ks2], 1).astype(np.uint32))
+        db.flush()
+        live = sorted(
+            set(int(k) for k in ks1 if not 100 <= k < 400)
+            | set(int(k) for k in ks2)
+        )
+        kk, _ = db.scan(0, 10_000)
+        assert [int(k) for k in kk] == live
+        with db.cursor(width=16) as cur:
+            cur.seek(0)
+            assert [k for k, _ in cur] == live
+        assert db.get(200) is None  # even gen, covered
+        assert db.get(201) is not None  # odd gen, written after
+        f, _ = db.get_batch(np.array([200, 201, 98, 350], np.uint64))
+        assert list(f) == [False, True, True, False]
+    finally:
+        db.close()
+
+
+def test_ttl_expiry_and_compaction_gc(tmp_path):
+    """Expired rows vanish from reads immediately and are physically
+    dropped (counter: ttl_expired_dropped) when a merge rewrites them."""
+    t = [1000.0]
+    clock.set_source(lambda: t[0])
+    d = str(tmp_path / "db")
+    db = RemixDB.open(
+        d,
+        _cfg(
+            memtable_entries=128,
+            compaction=CompactionConfig(table_cap=128, t_max=2),
+        ),
+    )
+    try:
+        ks = np.arange(0, 100, dtype=np.uint64)
+        db.put_batch(ks, np.stack([ks, ks], 1).astype(np.uint32), ttl=60)
+        ks2 = np.arange(100, 200, dtype=np.uint64)
+        db.put_batch(ks2, np.stack([ks2, ks2], 1).astype(np.uint32))
+        db.flush()
+        assert db.get(5) is not None
+        t[0] = 1061.0  # past the expiry
+        assert db.get(5) is None
+        kk, _ = db.scan(0, 1000)
+        assert [int(k) for k in kk] == list(range(100, 200))
+        # churn until a merge rewrites the expired rows
+        for i in range(6):
+            ks3 = np.arange(0, 100, dtype=np.uint64)
+            db.put_batch(
+                ks3, np.full((100, 2), 7 + i, np.uint32), ttl=1
+            )
+            t[0] += 5.0
+            db.flush()
+        dropped = sum(
+            s["value"]
+            for s in db.registry.snapshot()["metrics"]
+            if s["name"] == "ttl_expired_dropped"
+        )
+        assert dropped > 0
+        kk, _ = db.scan(0, 1000)
+        assert [int(k) for k in kk] == list(range(100, 200))
+    finally:
+        db.close()
+
+
+def test_cas_semantics(tmp_path):
+    """CAS: expect-absent create, conflict reports the actual value,
+    conditional delete, and TTL-expired counts as absent."""
+    t = [1000.0]
+    clock.set_source(lambda: t[0])
+    db = RemixDB.open(str(tmp_path / "db"), _cfg())
+    try:
+        v1 = np.array([1, 1], np.uint32)
+        v2 = np.array([2, 2], np.uint32)
+        ok, cur = db.cas(5, None, v1)
+        assert ok and cur is None
+        ok, cur = db.cas(5, None, v2)  # expect-absent on a present key
+        assert not ok and list(cur.reshape(-1)) == [1, 1]
+        ok, cur = db.cas(5, v2, v2)  # wrong expectation
+        assert not ok and list(cur.reshape(-1)) == [1, 1]
+        ok, _ = db.cas(5, v1, v2)
+        assert ok and list(db.get(5).reshape(-1)) == [2, 2]
+        ok, _ = db.cas(5, v2, None)  # conditional delete
+        assert ok and db.get(5) is None
+        # expired-TTL key behaves as absent for expect-None
+        db.put(6, v1, ttl=10)
+        t[0] = 1011.0
+        ok, cur = db.cas(6, None, v2)
+        assert ok and cur is None
+        assert list(db.get(6).reshape(-1)) == [2, 2]
+    finally:
+        db.close()
+
+
+def test_serve_engine_cross_shard_delete_range_and_cas(tmp_path):
+    """DeleteRange fans out clipped per shard; CAS routes to the owner."""
+    from repro.serve.engine import KVServeEngine
+
+    dirs = [str(tmp_path / f"s{i}") for i in range(3)]
+    eng = KVServeEngine(
+        list(zip([0, 1000, 2000], dirs)), config=_cfg(memtable_entries=256)
+    )
+    try:
+        ks = np.arange(0, 3000, 7, dtype=np.uint64)
+        eng.put_batch(ks, np.stack([ks, ks], 1).astype(np.uint32))
+        eng.flush()
+        eng.delete_range(500, 2500)  # clips into all three shards
+        kk, _ = eng.scan(0, 1000)
+        assert all(not 500 <= int(k) < 2500 for k in kk)
+        assert eng.get(497) is not None and eng.get(504) is None
+        assert eng.get(2506) is not None  # 7·358, past the range
+        ok, cur = eng.cas(5000, None, np.array([4, 4], np.uint32))
+        assert ok and cur is None
+        ok, cur = eng.cas(
+            5000, np.array([9, 9], np.uint32), np.array([5, 5], np.uint32)
+        )
+        assert not ok and list(cur.reshape(-1)) == [4, 4]
+        ok, _ = eng.cas(5000, np.array([4, 4], np.uint32), None)
+        assert ok and eng.get(5000) is None
+    finally:
+        eng.close()
+        for db in eng.shards:
+            db.close()

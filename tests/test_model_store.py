@@ -1,0 +1,329 @@
+"""Model-based differential tests: RemixDB vs an in-memory reference.
+
+The reference (:class:`ModelStore`) implements the full write surface —
+put, delete, delete_range, CAS, TTL — as a plain dict with last-writer-
+wins semantics. The harness drives both stores through the same op
+sequence (interleaving flushes, compactions, snapshots, clock advances
+and reopens) and asserts the merged views agree after every step.
+
+Two drivers share one op vocabulary:
+
+- a seeded ``random.Random`` walk (always runs; each failure message
+  carries the seed, so shrinking by hand means re-running one seed);
+- a hypothesis ``RuleBasedStateMachine`` (skipped when hypothesis is not
+  installed; the nightly CI profile runs 500+ examples — see
+  ``tests/conftest.py``).
+"""
+import os
+import random
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.db import clock
+from repro.db.compaction import CompactionConfig
+from repro.db.store import RemixDB, RemixDBConfig
+
+VW = 2
+KEYSPACE = 600
+T0 = 1_000_000  # controlled epoch for the patchable clock
+
+
+def _cfg(memtable_entries=128, table_cap=128, t_max=3):
+    return RemixDBConfig(
+        vw=VW,
+        memtable_entries=memtable_entries,
+        compaction=CompactionConfig(table_cap=table_cap, t_max=t_max),
+        hot_threshold=255,
+    )
+
+
+@pytest.fixture(autouse=True)
+def _reset_clock():
+    yield
+    clock.reset()
+
+
+class ModelStore:
+    """Reference last-writer-wins semantics over a dict.
+
+    TTL is an absolute expiry stamp; an expired entry is
+    indistinguishable from an absent one (so CAS with ``expect=None``
+    succeeds on it, mirroring the store).
+    """
+
+    def __init__(self):
+        self.data = {}  # key -> (val tuple, exp)
+
+    def put(self, k, v, exp=0):
+        self.data[int(k)] = (tuple(int(x) for x in v), int(exp))
+
+    def delete(self, k):
+        self.data.pop(int(k), None)
+
+    def delete_range(self, lo, hi):
+        for k in [k for k in self.data if lo <= k < hi]:
+            del self.data[k]
+
+    def get(self, k, now):
+        e = self.data.get(int(k))
+        if e is None:
+            return None
+        v, exp = e
+        if exp and exp <= now:
+            return None
+        return v
+
+    def cas(self, k, expect, val, now, exp=0):
+        cur = self.get(k, now)
+        if (cur is None) != (expect is None) or (
+            cur is not None and cur != tuple(int(x) for x in expect)
+        ):
+            return False, cur
+        if val is None:
+            self.delete(k)
+        else:
+            self.put(k, val, exp)
+        return True, cur
+
+    def items(self, now):
+        return sorted(
+            (k, self.get(k, now))
+            for k in self.data
+            if self.get(k, now) is not None
+        )
+
+
+def _assert_agree(db, model, now, ctx=""):
+    """Full differential check: scan, cursor stream, and point gets."""
+    want = model.items(now)
+    kk, vv = db.scan(0, KEYSPACE + 10)
+    got = [(int(k), tuple(int(x) for x in v)) for k, v in zip(kk, vv)]
+    assert got == want, f"scan != model {ctx}"
+    with db.cursor(width=7) as cur:
+        cur.seek(0)
+        stream = [(k, tuple(int(x) for x in v)) for k, v in cur]
+    assert stream == want, f"cursor != model {ctx}"
+    probes = [k for k, _ in want[:16]] + [0, KEYSPACE // 2, KEYSPACE - 1]
+    for k in probes:
+        g = db.get(k)
+        m = model.get(k, now)
+        g = None if g is None else tuple(int(x) for x in g.reshape(-1))
+        assert g == m, f"get({k}) = {g} != {m} {ctx}"
+
+
+def _rand_val(rng):
+    return [rng.randrange(1, 1 << 31) for _ in range(VW)]
+
+
+def _step(db, model, rng, t, pending):
+    """Apply one random op to both stores; returns the new clock time.
+
+    ``pending`` collects (snapshot, frozen-model-items, taken-at) pairs
+    verified and closed by the caller.
+    """
+    r = rng.random()
+    now = int(clock.now())
+    if r < 0.30:  # put (sometimes with TTL)
+        k, v = rng.randrange(KEYSPACE), _rand_val(rng)
+        ttl = rng.choice([None, None, 5, 50])
+        db.put(k, np.array(v, np.uint32), ttl=ttl)
+        model.put(k, v, exp=0 if ttl is None else now + ttl)
+    elif r < 0.40:  # point delete
+        k = rng.randrange(KEYSPACE)
+        db.delete(k)
+        model.delete(k)
+    elif r < 0.52:  # delete_range
+        lo = rng.randrange(KEYSPACE)
+        hi = min(KEYSPACE, lo + rng.randrange(1, KEYSPACE // 3))
+        db.delete_range(lo, hi)
+        model.delete_range(lo, hi)
+    elif r < 0.64:  # CAS (expect drawn from the model half the time)
+        k = rng.randrange(KEYSPACE)
+        cur = model.get(k, now)
+        expect = cur if rng.random() < 0.5 else (
+            None if rng.random() < 0.5 else _rand_val(rng))
+        val = None if rng.random() < 0.2 else _rand_val(rng)
+        ok_m, cur_m = model.cas(k, expect, val, now)
+        ok_d, cur_d = db.cas(
+            k,
+            None if expect is None else np.array(expect, np.uint32),
+            None if val is None else np.array(val, np.uint32),
+        )
+        cur_d = None if cur_d is None else tuple(
+            int(x) for x in cur_d.reshape(-1))
+        assert (ok_d, cur_d) == (ok_m, cur_m), f"cas({k})"
+    elif r < 0.74:  # advance the clock (expires TTLs)
+        t += rng.randrange(1, 40)
+        clock.set_source(lambda t=t: float(t))
+    elif r < 0.86:  # flush (freeze + compaction round)
+        db.flush()
+    else:  # pin a snapshot to verify later
+        frozen = ModelStore()
+        frozen.data = dict(model.data)
+        pending.append((db.snapshot(), frozen))
+    return t
+
+
+def _verify_snapshots(pending):
+    # a snapshot freezes the *data*, not the clock: TTL expiry stays
+    # read-time, so the frozen model is evaluated at the current time
+    now = int(clock.now())
+    for snap, frozen in pending:
+        kk, vv = snap.scan(0, KEYSPACE + 10)
+        got = [(int(k), tuple(int(x) for x in v)) for k, v in zip(kk, vv)]
+        assert got == frozen.items(now), "snapshot drifted from its view"
+        snap.close()
+    pending.clear()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_differential_random_walk(tmp_path, seed):
+    """Seeded random walk over the full op surface, checked every step
+    against the model, with a reopen (crash-free recovery) at the end."""
+    rng = random.Random(seed)
+    clock.set_source(lambda: float(T0))
+    t = T0
+    d = str(tmp_path / f"walk{seed}")
+    db = RemixDB.open(d, _cfg())
+    model = ModelStore()
+    pending = []
+    try:
+        for i in range(140):
+            t = _step(db, model, rng, t, pending)
+            if i % 7 == 0:
+                _assert_agree(db, model, int(clock.now()),
+                              ctx=f"(seed={seed} step={i})")
+        _verify_snapshots(pending)
+        _assert_agree(db, model, int(clock.now()), ctx=f"(seed={seed})")
+        # reopen: WAL replay + manifest recovery must agree too
+        db.close()
+        db = RemixDB.open(d, _cfg())
+        _assert_agree(db, model, int(clock.now()),
+                      ctx=f"(seed={seed} reopened)")
+    finally:
+        _verify_snapshots(pending)
+        db.close()
+
+
+@pytest.mark.nightly
+@pytest.mark.parametrize("seed", range(20))
+def test_differential_random_walk_long(tmp_path, seed):
+    """Nightly: longer walks over more seeds (deeper compaction trees)."""
+    rng = random.Random(1000 + seed)
+    clock.set_source(lambda: float(T0))
+    t = T0
+    d = str(tmp_path / f"long{seed}")
+    db = RemixDB.open(d, _cfg(memtable_entries=64, table_cap=64))
+    model = ModelStore()
+    pending = []
+    try:
+        for i in range(600):
+            t = _step(db, model, rng, t, pending)
+            if i % 25 == 0:
+                _assert_agree(db, model, int(clock.now()),
+                              ctx=f"(seed={seed} step={i})")
+        _verify_snapshots(pending)
+        db.close()
+        db = RemixDB.open(d, _cfg(memtable_entries=64, table_cap=64))
+        _assert_agree(db, model, int(clock.now()),
+                      ctx=f"(seed={seed} reopened)")
+    finally:
+        _verify_snapshots(pending)
+        db.close()
+
+
+# ------------------------------------------------------------------
+# hypothesis stateful machine (CI: deterministic profile; nightly: 500+
+# examples — tests/conftest.py registers the profiles)
+# ------------------------------------------------------------------
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        invariant,
+        rule,
+    )
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    keys_st = st.integers(0, KEYSPACE - 1)
+    vals_st = st.lists(
+        st.integers(1, 1 << 31), min_size=VW, max_size=VW
+    )
+
+    class StoreMachine(RuleBasedStateMachine):
+        """Differential state machine: every rule applies one op to both
+        stores; the invariant compares the merged views."""
+
+        def __init__(self):
+            super().__init__()
+            self.dir = tempfile.mkdtemp(prefix="remix-model-")
+            self.t = T0
+            clock.set_source(lambda: float(self.t))
+            self.db = RemixDB.open(self.dir, _cfg())
+            self.model = ModelStore()
+
+        # ---- write surface ----
+        @rule(k=keys_st, v=vals_st, ttl=st.sampled_from([None, 5, 50]))
+        def put(self, k, v, ttl):
+            self.db.put(k, np.array(v, np.uint32), ttl=ttl)
+            self.model.put(k, v, exp=0 if ttl is None else self.t + ttl)
+
+        @rule(k=keys_st)
+        def delete(self, k):
+            self.db.delete(k)
+            self.model.delete(k)
+
+        @rule(lo=keys_st, n=st.integers(1, KEYSPACE // 3))
+        def delete_range(self, lo, n):
+            hi = min(KEYSPACE, lo + n)
+            self.db.delete_range(lo, hi)
+            self.model.delete_range(lo, hi)
+
+        @rule(k=keys_st, v=vals_st, use_cur=st.booleans(),
+              to_none=st.booleans())
+        def cas(self, k, v, use_cur, to_none):
+            expect = self.model.get(k, self.t) if use_cur else v
+            val = None if to_none else v
+            ok_m, cur_m = self.model.cas(k, expect, val, self.t)
+            ok_d, cur_d = self.db.cas(
+                k,
+                None if expect is None else np.array(expect, np.uint32),
+                None if val is None else np.array(val, np.uint32),
+            )
+            cur_d = None if cur_d is None else tuple(
+                int(x) for x in cur_d.reshape(-1))
+            assert (ok_d, cur_d) == (ok_m, cur_m)
+
+        # ---- lifecycle edges ----
+        @rule(dt=st.integers(1, 40))
+        def advance_clock(self, dt):
+            self.t += dt
+
+        @rule()
+        def flush(self):
+            self.db.flush()
+
+        @rule()
+        def reopen(self):
+            self.db.close()
+            self.db = RemixDB.open(self.dir, _cfg())
+
+        @invariant()
+        def agrees(self):
+            _assert_agree(self.db, self.model, self.t)
+
+        def teardown(self):
+            try:
+                self.db.close()
+            finally:
+                clock.reset()
+                shutil.rmtree(self.dir, ignore_errors=True)
+
+    TestStoreMachine = StoreMachine.TestCase

@@ -234,7 +234,8 @@ def test_store_stats_keys_unchanged(tmp_path):
         "workers", "admission", "shards",
     }
     assert eng["ops"] == {
-        "get": 1, "multiget": 0, "scan": 0, "put": 1, "delete": 0
+        "get": 1, "multiget": 0, "scan": 0, "put": 1, "delete": 0,
+        "delete_range": 0, "cas": 0,
     }
     assert set(eng["admission"]) == {
         "max_bytes", "inflight_bytes", "peak_bytes", "admitted", "waits"
@@ -436,3 +437,67 @@ def test_ckb_memo_bounded(tmp_path):
     assert vals["ckb_memo_evictions"] == db._ckb_memo("evictions")
     assert vals["ckb_memo_bytes"] > 0
     db.close()
+
+
+def test_write_surface_counters_and_drop_event(tmp_path):
+    """The new write-surface instruments: delete_range / cas_conflict /
+    ttl_expired_dropped counters, plus the range_tombstone_drop event
+    from a fold that retires whole tables."""
+    from repro.db import clock
+    from repro.db.compaction import CompactionConfig
+    from repro.db.store import RemixDB, RemixDBConfig
+
+    t = [1000.0]
+    clock.set_source(lambda: t[0])
+    db = RemixDB.open(
+        str(tmp_path / "db"),
+        RemixDBConfig(
+            memtable_entries=128,
+            compaction=CompactionConfig(table_cap=128, t_max=2),
+            hot_threshold=255,
+        ),
+    )
+
+    def counter(name):
+        return sum(
+            s["value"]
+            for s in db.registry.snapshot()["metrics"]
+            if s["name"] == name
+        )
+
+    try:
+        keys = np.arange(0, 100, dtype=np.uint64)
+        db.put_batch(
+            keys, np.stack([keys, keys], 1).astype(np.uint32), ttl=30
+        )
+        db.flush()
+        # two range deletes
+        db.delete_range(10, 40)
+        db.delete_range(50, 60)
+        assert counter("delete_range") == 2
+        # one CAS conflict, one success: only the conflict counts
+        ok, _ = db.cas(5, np.array([9, 9], np.uint32),
+                       np.array([1, 1], np.uint32))
+        assert not ok
+        ok, _ = db.cas(5, np.array([5, 5], np.uint32),
+                       np.array([1, 1], np.uint32))
+        assert ok
+        assert counter("cas_conflict") == 1
+        # whole-table drop: everything is covered by one range
+        db.delete_range(0, 1000)
+        db.flush()
+        drops = db.events.list(kind="range_tombstone_drop")
+        assert drops and drops[0].fields["tables"] >= 1
+        assert counter("range_tombstone_drop") >= 1
+        # expire TTL rows, churn a merge over them, and watch the GC
+        t[0] = 1031.0
+        for i in range(6):
+            db.put_batch(
+                keys, np.full((100, 2), i + 1, np.uint32), ttl=1
+            )
+            t[0] += 5.0
+            db.flush()
+        assert counter("ttl_expired_dropped") > 0
+    finally:
+        clock.reset()
+        db.close()

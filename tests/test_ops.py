@@ -474,3 +474,70 @@ def test_executor_stats_and_priority_plan():
     s = eng.stats()
     assert s["batches"] >= 1 and s["ops"]["get"] >= 2
     assert s["admission"]["inflight_bytes"] == 0
+
+
+def test_op_error_reraise_preserves_traceback():
+    """OpResult.raise_if_error must re-raise the ORIGINAL traceback: the
+    innermost frame is the one that failed inside the executor, not
+    raise_if_error itself."""
+    import traceback
+
+    db = RemixDB(_mem_cfg())
+    _fill(db, n=20)
+
+    def boom(view, qk):
+        raise RuntimeError("injected read failure")
+
+    orig = db._get_batch_at
+    db._get_batch_at = boom
+    try:
+        res = db.submit(
+            Batch([Op.multiget(np.array([7, 14], np.uint64))]), sync=True
+        ).result()
+        r = res.results[0]
+        assert r.status is OpStatus.ERROR and r.exc is not None
+        with pytest.raises(RuntimeError, match="injected read failure"):
+            r.raise_if_error()
+        tb = traceback.extract_tb(r.exc.__traceback__)
+        assert tb[-1].name == "boom", (
+            f"innermost frame is {tb[-1].name!r}, original lost"
+        )
+        # the legacy wrapper path re-raises through raise_if_error too
+        try:
+            db.get_batch(np.array([7], np.uint64))
+            assert False, "expected the injected failure"
+        except RuntimeError as e:
+            frames = traceback.extract_tb(e.__traceback__)
+            assert frames[-1].name == "boom"
+    finally:
+        db._get_batch_at = orig
+
+
+def test_delete_range_and_cas_op_kinds():
+    """DELETE_RANGE and CAS flow through the op layer with the same
+    batch-order semantics as the other write kinds."""
+    db = RemixDB(_mem_cfg())
+    keys = np.arange(0, 100, dtype=np.uint64)
+    db.put_batch(keys, np.stack([keys, keys], 1).astype(np.uint32))
+    res = db.submit(
+        Batch([
+            Op.put(200, [5, 5]),
+            Op.delete_range(10, 60),
+            Op.get(20),  # sequential semantics: sees the range delete
+            Op.cas(200, np.array([5, 5], np.uint32), [6, 6]),
+            Op.get(200),
+        ]),
+        sync=True,
+    ).result()
+    assert res.ok
+    assert not res.results[2].found
+    assert res.results[3].found  # swap succeeded
+    assert list(res.results[4].value.reshape(-1)) == [6, 6]
+    # conflict: found=False and the actual value is reported
+    r = db.submit(
+        Batch([Op.cas(200, np.array([5, 5], np.uint32), [7, 7])]),
+        sync=True,
+    ).result().results[0]
+    assert not r.found and list(r.value.reshape(-1)) == [6, 6]
+    with pytest.raises(ValueError):
+        Op.delete_range(60, 10)
