@@ -29,6 +29,7 @@ def main() -> None:
         fig17_ycsb,
         kernels_bench,
         rebuild_bench,
+        scrub_bench,
         table1_storage,
     )
 
@@ -41,6 +42,8 @@ def main() -> None:
         "fig17": fig17_ycsb.run,
         "kernels": kernels_bench.run,
         "rebuild": rebuild_bench.run,
+        # scrub throughput, paced scrub, REMIX repair round trip
+        "scrub": scrub_bench.run,
         "cache": cache_bench.run,
         # also emits results/BENCH_queries.json (the perf trajectory file)
         "batch": batch_bench.run,

@@ -57,11 +57,25 @@ from repro.db.ops import (
     WRITE_KINDS,
 )
 from repro.db.sharded import partition_spans, route_host
+from repro.io.faults import (
+    CorruptionError,
+    TransientIOError,
+    UnavailableSpanError,
+)
 from repro.obs import events as _events
 from repro.obs import metrics as _metrics
 from repro.obs import tracing as _tracing
 
 log = logging.getLogger(__name__)
+
+# the typed storage failures (io.faults taxonomy): these mark the
+# touching op IO_ERROR and trigger per-op isolation within a vectorized
+# group, instead of the generic whole-group ERROR
+_IO_ERRORS = (CorruptionError, TransientIOError, UnavailableSpanError)
+
+
+def _status_for(e: BaseException) -> OpStatus:
+    return OpStatus.IO_ERROR if isinstance(e, _IO_ERRORS) else OpStatus.ERROR
 
 
 def _span(trace, name, **args):
@@ -244,6 +258,7 @@ class Executor:
         self._c_deadline = reg.counter("engine_ops_deadline_exceeded")
         self._c_cancelled_ops = reg.counter("engine_ops_cancelled")
         self._c_errors = reg.counter("engine_ops_errors")
+        self._c_io_errors = reg.counter("engine_ops_io_errors")
         self._c_batch_failures = reg.counter("engine_batch_failures")
         self._c_ops = {
             k.value: reg.counter("engine_ops", kind=k.value) for k in OpKind
@@ -393,6 +408,7 @@ class Executor:
         self._c_deadline.inc(stats["deadline_exceeded"])
         self._c_cancelled_ops.inc(stats["cancelled"])
         self._c_errors.inc(stats["errors"])
+        self._c_io_errors.inc(stats["io_errors"])
         if t_sub is not None:
             self._h_batch.observe(time.monotonic() - t_sub)
         if trace is not None:
@@ -418,6 +434,7 @@ class Executor:
             deadline_exceeded=by_status.get("deadline_exceeded", 0),
             cancelled=by_status.get("cancelled", 0),
             errors=by_status.get("error", 0),
+            io_errors=by_status.get("io_error", 0),
         )
 
     # ---------------- planning ----------------
@@ -600,9 +617,13 @@ class Executor:
                         )
             commit_pending()
         except Exception as e:
+            # a write stage commits as one WAL group append per shard, so
+            # a typed I/O failure (e.g. fsync giving up) fails the whole
+            # stage — but with the typed status so callers can tell a
+            # storage fault from a logic error
             for i in live:
                 if results[i] is None:
-                    results[i] = OpResult(status=OpStatus.ERROR,
+                    results[i] = OpResult(status=_status_for(e),
                                           error=repr(e), exc=e)
             return
 
@@ -680,7 +701,8 @@ class Executor:
                     view(g.shard), batch.ops[i].key
                 )
             except Exception as e:
-                results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
+                results[i] = OpResult(status=_status_for(e), error=repr(e),
+                                      exc=e)
                 return
             results[i] = OpResult(
                 status=OpStatus.OK, found=val is not None, value=val
@@ -689,6 +711,12 @@ class Executor:
         qk = np.concatenate(keys)
         try:
             found, vals = self.stores[g.shard]._get_batch_at(view(g.shard), qk)
+        except _IO_ERRORS:
+            # containment: one corrupt granule must fail only the ops
+            # whose keys touch it — re-execute the group per op so the
+            # rest of the batch completes normally
+            self._points_isolated(batch, results, g, view, gets, mgets, mg)
+            return
         except Exception as e:
             for i in gets:
                 results[i] = OpResult(status=OpStatus.ERROR, error=repr(e), exc=e)
@@ -709,6 +737,35 @@ class Executor:
             mg[i][1][pos] = vals[off : off + m]
             off += m
 
+    def _points_isolated(self, batch, results, g, view, gets, mgets, mg):
+        """Per-op fallback after a typed I/O failure in the vectorized
+        point group: each op re-reads alone, so only ops whose keys land
+        on the corrupt granule end IO_ERROR."""
+        for i in gets:
+            try:
+                val = self.stores[g.shard]._get_at(
+                    view(g.shard), batch.ops[i].key
+                )
+            except Exception as e:
+                results[i] = OpResult(status=_status_for(e), error=repr(e),
+                                      exc=e)
+                continue
+            results[i] = OpResult(
+                status=OpStatus.OK, found=val is not None, value=val
+            )
+        for i, pos in mgets:
+            try:
+                f, v = self.stores[g.shard]._get_batch_at(
+                    view(g.shard),
+                    np.asarray(batch.ops[i].keys, np.uint64)[pos],
+                )
+            except Exception as e:
+                results[i] = OpResult(status=_status_for(e), error=repr(e),
+                                      exc=e)
+                continue
+            mg[i][0][pos] = f
+            mg[i][1][pos] = v
+
     def _exec_scans(self, fut, batch, deadlines, results, g, view):
         for (n, with_vals), idxs in g.scans.items():
             live = self._precheck(fut, deadlines, results, idxs)
@@ -725,12 +782,32 @@ class Executor:
                     view(g.shard), starts, n,
                     with_vals=with_vals, interrupts=checks,
                 )
+            except _IO_ERRORS:
+                # containment: re-run each scan alone so only the ones
+                # crossing the corrupt granule end IO_ERROR; survivors
+                # rejoin the common drain/fan-out loop below
+                rows = []
+                for i, chk in zip(live, checks):
+                    try:
+                        kk, vv = self.stores[g.shard]._scan_at(
+                            view(g.shard), batch.ops[i].start, n,
+                            interrupt=chk,
+                        )
+                        rows.append((kk, vv if with_vals else None))
+                    except OpInterrupted as e2:
+                        rows.append(e2)
+                    except Exception as e2:
+                        results[i] = OpResult(status=_status_for(e2),
+                                              error=repr(e2), exc=e2)
+                        rows.append(None)
             except Exception as e:
                 for i in live:
                     results[i] = OpResult(status=OpStatus.ERROR,
                                           error=repr(e), exc=e)
                 continue
             for i, row in zip(live, rows):
+                if row is None:  # failed in the isolation fallback
+                    continue
                 if isinstance(row, OpInterrupted):
                     results[i] = OpResult(status=row.status)
                     continue
@@ -744,7 +821,7 @@ class Executor:
                     results[i] = OpResult(status=e.status)
                     continue
                 except Exception as e:
-                    results[i] = OpResult(status=OpStatus.ERROR,
+                    results[i] = OpResult(status=_status_for(e),
                                           error=repr(e), exc=e)
                     continue
                 results[i] = OpResult(status=OpStatus.OK, keys=kk, vals=vv)
@@ -789,6 +866,7 @@ class Executor:
             deadline_exceeded=self._c_deadline.value,
             cancelled_ops=self._c_cancelled_ops.value,
             errors=self._c_errors.value,
+            io_errors=self._c_io_errors.value,
         )
         out["queue_depth"] = qd
         out["workers"] = wk

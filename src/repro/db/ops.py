@@ -61,6 +61,10 @@ class OpStatus(enum.Enum):
     DEADLINE_EXCEEDED = "deadline_exceeded"
     CANCELLED = "cancelled"
     ERROR = "error"
+    # a typed storage failure (CorruptionError / exhausted
+    # TransientIOError / UnavailableSpanError): the corrupt granule
+    # fails only the ops that touch it, never the whole batch
+    IO_ERROR = "io_error"
 
 
 class OpInterrupted(Exception):
@@ -303,12 +307,13 @@ class OpResult:
         return self.status is OpStatus.OK
 
     def raise_if_error(self) -> None:
-        """Re-raise an ERROR op's original exception (wrapper helper).
+        """Re-raise an ERROR/IO_ERROR op's original exception (wrapper
+        helper).
 
         The captured traceback is reattached so the re-raise points at
         the frame that actually failed inside the executor, not here.
         """
-        if self.status is OpStatus.ERROR:
+        if self.status in (OpStatus.ERROR, OpStatus.IO_ERROR):
             if self.exc is not None:
                 raise self.exc.with_traceback(self.exc.__traceback__)
             raise RuntimeError(self.error or "op failed")

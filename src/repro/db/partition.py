@@ -119,6 +119,7 @@ class Table:
         self.ckb_decode = ckb_decode
         self._reader = None
         self._cache = None
+        self._ioctx = None
         self._ckb = None
         self._n: int | None = None if keys is None else len(keys)
 
@@ -145,12 +146,20 @@ class Table:
         if self._reader is not None:
             self._reader.attach_cache(cache)
 
+    def attach_io(self, ioctx) -> None:
+        """Route this handle's reads through an ``IOContext`` (fault
+        injection + bounded transient-error retry)."""
+        self._ioctx = ioctx
+        if self._reader is not None:
+            self._reader.attach_io(ioctx)
+
     def _rd(self):
         if self._reader is None:
             from repro.io.sstable import SSTableReader
 
             self._reader = SSTableReader(
-                self.path, cache=self._cache, mode=self.cache_mode
+                self.path, cache=self._cache, mode=self.cache_mode,
+                io=self._ioctx,
             )
         return self._reader
 

@@ -65,6 +65,8 @@ from repro.db.partition import ExcisedSpan, Partition, Table
 from repro.db.sharded import partition_spans, route_host, route_one
 from repro.db.version import Snapshot, VersionSet
 from repro.db.wal import FLAG_RANGE, FLAG_TOMB, WAL, unpack_range_hi
+from repro.io.faults import (CorruptionError, IOContext,
+                             UnavailableSpanError)
 from repro.obs.events import EventLog, NULL_EVENTS
 from repro.obs.metrics import MetricsRegistry, merge_snapshots
 
@@ -148,6 +150,23 @@ class RemixDBConfig:
     # share a MetricsRegistry across components (e.g. per-shard labelled
     # registries from a serving tier); None creates a private one
     registry: object | None = dataclasses.field(default=None, repr=False)
+    # ---- durability / fault injection (docs/ARCHITECTURE.md) ----
+    # deterministic fault-injection plan (repro.io.FaultPlan) threaded
+    # under every reader/writer of this store's files; None = no faults
+    fault_plan: object | None = dataclasses.field(default=None, repr=False)
+    # bounded retry budget for transient read/fsync faults (TransientIO-
+    # Error): per site, with exponential backoff between attempts
+    io_retries: int = 2
+    io_retry_backoff_s: float = 0.0
+    # background integrity scrub cadence (seconds); 0 disables the
+    # thread — db.scrub(full=True) stays available synchronously
+    scrub_interval_s: float = 0.0
+    # byte-budget rate limit for background scrub passes (bytes/sec of
+    # at-rest reads); 0 = unthrottled. Full/sync scrubs ignore it.
+    scrub_bytes_per_sec: int = 0
+    # age after which quarantined files (GC'd orphans + unrecoverable
+    # tables) are purged for good; checked at each scrub pass and close
+    quarantine_purge_age_s: float = 7 * 24 * 3600.0
 
 
 
@@ -194,6 +213,33 @@ class RemixDB:
             else NULL_EVENTS
         )
         self.mem = MemTable(vw=self.cfg.vw)
+        # durability plumbing: one IOContext (fault plan + bounded retry)
+        # threaded under every file this store reads or writes
+        self._c_io_retry = self.registry.counter("io_retry")
+        self._c_io_giveup = self.registry.counter("io_giveup")
+        self._c_corruption = self.registry.counter("corruption_detected")
+        self._c_scrub_passes = self.registry.counter("scrub_passes")
+        self._c_scrub_bytes = self.registry.counter("scrub_bytes_read")
+        self._c_repair_remix = self.registry.counter("repair_remix_rebuilt")
+        self._c_quarantined = self.registry.counter(
+            "repair_table_quarantined"
+        )
+        self._c_quarantine_purged = self.registry.counter(
+            "quarantine_purged"
+        )
+        self.io = IOContext(
+            plan=self.cfg.fault_plan,
+            retries=self.cfg.io_retries,
+            backoff_s=self.cfg.io_retry_backoff_s,
+            on_retry=self._c_io_retry.inc,
+            on_giveup=self._c_io_giveup.inc,
+        )
+        # key spans whose backing table was quarantined as unrecoverable:
+        # reads over them raise UnavailableSpanError (graceful
+        # degradation) instead of silently missing rows; persisted in the
+        # manifest so degradation survives restarts
+        self._unavailable: list[dict] = []
+        self._last_scrub: dict | None = None
         self.storage = None
         self.block_cache = None
         state = None
@@ -201,7 +247,8 @@ class RemixDB:
             from repro.io.blockcache import BlockCache
             from repro.io.manifest import Storage
 
-            self.storage = Storage(self.cfg.data_dir, with_ckb=self.cfg.ckb)
+            self.storage = Storage(self.cfg.data_dir, with_ckb=self.cfg.ckb,
+                                   io=self.io)
             # explicit None check: an empty BlockCache is falsy (len == 0)
             self.block_cache = (
                 self.cfg.block_cache
@@ -217,7 +264,7 @@ class RemixDB:
             wal_path = os.path.join(wal_dir, "wal.log")
         self.wal = WAL(wal_path, vw=self.cfg.vw,
                        sync_policy=self.cfg.sync_policy,
-                       registry=self.registry)
+                       registry=self.registry, ioctx=self.io)
         self.seq = 1
         # registry-backed accounting; the legacy attribute names
         # (user_bytes, table_bytes_written, compaction_totals, ...) are
@@ -317,6 +364,23 @@ class RemixDB:
             self.storage.gc_orphans(set())
             if self.wal.recover_tail():
                 self._replay_wal()
+        # optional background scrubber (rate-limited integrity pass)
+        self._scrub_stop = threading.Event()
+        self._scrub_thread: threading.Thread | None = None
+        if self.storage is not None and self.cfg.scrub_interval_s > 0:
+            self._scrub_thread = threading.Thread(
+                target=self._scrub_loop, name="remixdb-scrub", daemon=True
+            )
+            self._scrub_thread.start()
+
+    def _scrub_loop(self) -> None:
+        while not self._scrub_stop.wait(self.cfg.scrub_interval_s):
+            try:
+                self.scrub(full=False)
+            except Exception:
+                # scrubbing must never take the store down; failures are
+                # visible through io_giveup / events
+                pass
 
     @classmethod
     def open(cls, data_dir: str, config: RemixDBConfig | None = None
@@ -401,6 +465,7 @@ class RemixDB:
                     ckb_decode=self.cfg.ckb_decode,
                 )
                 t.attach_cache(self.block_cache)
+                t.attach_io(self.io)
                 tables.append(t)
             p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
             by_name = dict(zip(pe["tables"], tables))
@@ -415,10 +480,24 @@ class RemixDB:
                     ))
             if pe.get("remix"):
                 p.remix_name = pe["remix"]
-                p.preload_index(
-                    load_remix(self.storage.remix_path(pe["remix"]))
-                )
+                try:
+                    p.preload_index(
+                        load_remix(self.storage.remix_path(pe["remix"]),
+                                   io=self.io)
+                    )
+                except CorruptionError as e:
+                    # a corrupt REMIX never blocks open: queries rebuild
+                    # the index from the (verified) tables, and the next
+                    # scrub() re-persists it from the CKBs
+                    self._c_corruption.inc()
+                    self.events.emit(
+                        "corruption", target="remix",
+                        file=os.path.basename(e.file),
+                        section=e.section, blocks=[], detail=e.detail,
+                    )
             parts.append(p)
+        # degraded spans (quarantined tables) survive restarts
+        self._unavailable = [dict(s) for s in state.get("unavailable", [])]
         if not parts:
             parts = [Partition(lo=0, d=self.cfg.d)]
         self.seq = int(state.get("seq", 1))
@@ -468,6 +547,7 @@ class RemixDB:
                 for p in parts
             ],
             wal=self.wal.save_state(),
+            unavailable=[dict(s) for s in self._unavailable],
         )
         self.storage.commit(state)
 
@@ -522,6 +602,10 @@ class RemixDB:
     def close(self) -> None:
         """Flush WAL buffers and, in persistent mode, commit a manifest so
         reopening needs no tail scan. The MemTable stays in the WAL."""
+        if self._scrub_thread is not None:
+            self._scrub_stop.set()
+            self._scrub_thread.join(timeout=5.0)
+            self._scrub_thread = None
         if self._ops_engine is not None:
             self._ops_engine.close()
         if self.cfg.background_compaction:
@@ -532,6 +616,191 @@ class RemixDB:
             self.wal.release_quarantine()
             self._gc_files()
         self.events.close()
+
+    # ---------------- durability: scrub / repair / health ----------------
+    def scrub(self, full: bool = True, repair: bool = True) -> dict:
+        """One integrity pass over the committed state; self-heals.
+
+        Verifies every table checksum granule, every persisted REMIX and
+        manifest/CURRENT agreement against a pinned Version (concurrent
+        flushes never race it). ``full=True`` runs unthrottled (the
+        synchronous operator call); ``full=False`` paces reads at
+        ``cfg.scrub_bytes_per_sec`` (the background loop). With
+        ``repair=True`` a corrupt REMIX is rebuilt from the tables' CKBs
+        (§3.4 redundancy) and committed as a new manifest version, and a
+        table with unrecoverable granules is quarantined — dropped from
+        the manifest with its key span recorded so reads over it degrade
+        to :class:`UnavailableSpanError` instead of silently missing
+        rows. Also age-purges the quarantine directory. Returns the
+        :class:`~repro.db.scrub.ScrubReport` as a dict.
+        """
+        from repro.db.scrub import RateLimiter, scrub_version
+
+        if self.storage is None:
+            return dict(clean=True, files_checked=0, bytes_read=0,
+                        findings=[], repaired=[], quarantined=[],
+                        duration_s=0.0)
+        limiter = RateLimiter(0 if full else self.cfg.scrub_bytes_per_sec)
+        with self.snapshot() as snap:
+            rep = scrub_version(self.storage, snap.version.partitions,
+                                limiter)
+        self._c_scrub_passes.inc()
+        self._c_scrub_bytes.inc(rep.bytes_read)
+        if rep.findings:
+            self._c_corruption.inc(len(rep.findings))
+            for f in rep.findings:
+                fd = f.to_dict()
+                fd["target"] = fd.pop("kind")  # "kind" is emit()'s own
+                self.events.emit("corruption", **fd)
+            if repair:
+                self._repair(rep)
+        purged = self.storage.purge_quarantine(
+            self.cfg.quarantine_purge_age_s
+        )
+        if purged:
+            self._c_quarantine_purged.inc(len(purged))
+            self.events.emit("quarantine_purge", removed=len(purged))
+        out = rep.to_dict()
+        self._last_scrub = dict(
+            clean=out["clean"],
+            files_checked=out["files_checked"],
+            bytes_read=out["bytes_read"],
+            findings=len(rep.findings),
+            repaired=len(rep.repaired),
+            quarantined=len(rep.quarantined),
+        )
+        self.events.emit("scrub", **self._last_scrub)
+        return out
+
+    def _table_span(self, p: Partition, t: Table) -> tuple[int, int | None]:
+        """Inclusive key span a quarantined table may have covered.
+
+        Prefers the table's own first/last key (via the CKB); if those
+        bytes are themselves unreadable, degrade the whole partition
+        span — over-refusing is safe, silently missing rows is not.
+        """
+        try:
+            lo = int(CK.unpack_u64(t.key_at(0)))
+            hi = int(CK.unpack_u64(t.key_at(t.n - 1)))
+            return lo, hi
+        except Exception:
+            parts = self.partitions
+            idx = next(
+                (i for i, q in enumerate(parts) if q is p), None
+            )
+            if idx is not None and idx + 1 < len(parts):
+                return parts[idx].lo, parts[idx + 1].lo - 1
+            return (p.lo, None)
+
+    def _repair(self, rep) -> None:
+        """Apply repairs for a scrub's findings via a manifest version
+        edge (never in place): REMIX rebuild from CKBs for ``remix``
+        findings, quarantine + degraded-span bookkeeping for ``table``
+        findings. ``manifest`` findings are surfaced only — the manifest
+        is the root of trust, there is nothing to rebuild it from.
+        """
+        from repro.db.scrub import rebuild_remix
+
+        bad_tables = {
+            f.file for f in rep.findings if f.kind == "table"
+        }
+        bad_remix = {
+            os.path.basename(f.file)
+            for f in rep.findings if f.kind == "remix"
+        }
+        if not bad_tables and not bad_remix:
+            return
+        with self._flush_lock:
+            parts = self.versions.current.partitions
+            new_parts: list[Partition] = []
+            changed = False
+            for p in parts:
+                bad_in_p = [t for t in p.tables if t.path in bad_tables]
+                remix_bad = bool(p.remix_name) and p.remix_name in bad_remix
+                if not bad_in_p and not remix_bad:
+                    new_parts.append(p)
+                    continue
+                changed = True
+                for t in bad_in_p:
+                    lo, hi = self._table_span(p, t)
+                    nm = os.path.basename(t.path)
+                    self._unavailable.append(
+                        dict(lo=int(lo),
+                             hi=None if hi is None else int(hi),
+                             tables=[nm])
+                    )
+                    self._c_quarantined.inc()
+                    rep.quarantined.append(nm)
+                    self.events.emit("quarantine", file=nm, lo=int(lo),
+                                     hi=hi if hi is None else int(hi))
+                keep = [t for t in p.tables if t.path not in bad_tables]
+                p2 = p.clone_with_tables(keep)
+                if keep and (remix_bad or bad_in_p):
+                    # rebuild the index from the surviving tables' CKBs
+                    # (no value bytes read) and persist it under a fresh
+                    # name — the corrupt file is never overwritten
+                    remix = rebuild_remix(
+                        keep, d=max(self.cfg.d, len(keep))
+                    )
+                    nm = self.storage.write_remix(remix)
+                    p2.remix_name = nm
+                    p2.preload_index(remix)
+                    if remix_bad:
+                        self._c_repair_remix.inc()
+                        rep.repaired.append(nm)
+                        self.events.emit("repair", target="remix",
+                                         partition=int(p.lo), file=nm)
+                new_parts.append(p2)
+            if not changed:
+                return
+            # the version edge: commit, publish, then GC — dropped files
+            # move to quarantine/ once their last pinned Version releases
+            with self._write_lock:
+                self._commit(new_parts)
+            with self._state_lock:
+                self.versions.publish(new_parts, seq_horizon=self.seq)
+            self._gc_files(from_flush=True)
+
+    def health(self) -> dict:
+        """Operator-facing durability summary: degradation status, the
+        unavailable key spans, quarantine backlog, and the retry /
+        corruption / scrub / repair counters."""
+        qdir = (
+            self.storage.quarantine_dir if self.storage is not None
+            else None
+        )
+        qfiles = (
+            len(os.listdir(qdir))
+            if qdir is not None and os.path.isdir(qdir) else 0
+        )
+        parts = self.partitions
+        pl = []
+        for i, p in enumerate(parts):
+            p_hi = parts[i + 1].lo - 1 if i + 1 < len(parts) else None
+            deg = any(
+                (p_hi is None or int(s["lo"]) <= p_hi)
+                and (s.get("hi") is None or p.lo <= int(s["hi"]))
+                for s in self._unavailable
+            )
+            pl.append(dict(lo=int(p.lo), tables=len(p.tables),
+                           degraded=deg))
+        return dict(
+            status="degraded" if self._unavailable else "ok",
+            unavailable=[dict(s) for s in self._unavailable],
+            quarantine_files=qfiles,
+            partitions=pl,
+            io=dict(retries=self._c_io_retry.value,
+                    giveups=self._c_io_giveup.value),
+            corruption_detected=self._c_corruption.value,
+            scrub=dict(passes=self._c_scrub_passes.value,
+                       bytes_read=self._c_scrub_bytes.value,
+                       last=self._last_scrub),
+            repair=dict(
+                remix_rebuilt=self._c_repair_remix.value,
+                tables_quarantined=self._c_quarantined.value,
+                quarantine_purged=self._c_quarantine_purged.value,
+            ),
+        )
 
     # ---------------- operation layer (API v2) ----------------
     def engine(self):
@@ -1019,12 +1288,38 @@ class RemixDB:
         r = self._run_one(Op.get(int(key)))
         return r.value if r.found else None
 
+    # ---- graceful degradation over quarantined spans ----
+    def _check_unavailable_point(self, key: int) -> None:
+        """Raise :class:`UnavailableSpanError` if ``key`` falls in a span
+        whose backing table was quarantined as unrecoverable — a typed
+        refusal, never a silent miss."""
+        for s in self._unavailable:
+            hi = s.get("hi")
+            if int(s["lo"]) <= key and (hi is None or key <= int(hi)):
+                raise UnavailableSpanError(
+                    int(s["lo"]), hi if hi is None else int(hi),
+                    tuple(s.get("tables", ())),
+                )
+
+    def _check_unavailable_scan(self, start: int) -> None:
+        """Scans are refused conservatively: a scan starting at or below
+        a degraded span's upper bound could silently skip its rows."""
+        for s in self._unavailable:
+            hi = s.get("hi")
+            if hi is None or start <= int(hi):
+                raise UnavailableSpanError(
+                    int(s["lo"]), hi if hi is None else int(hi),
+                    tuple(s.get("tables", ())),
+                )
+
     def _get_at(self, view: Snapshot, key: int):
         e = view.overlay.get(int(key))
         if e is not None:
             return None if entry_dead(e, clock.now()) else e.val
         if view.ranges and view.covers(int(key)):
             return None  # hidden by an unflushed range tombstone
+        if self._unavailable:
+            self._check_unavailable_point(int(key))
         parts = view.partitions
         p = parts[route_one(parts, int(key))]
         if self._cold_ok(p):
@@ -1054,6 +1349,9 @@ class RemixDB:
             elif not (view.ranges and view.covers(k)):
                 rest.append(i)
         parts = view.partitions
+        if rest and self._unavailable:
+            for i in rest:
+                self._check_unavailable_point(int(keys[i]))
         if rest:
             rest = np.array(rest)
             pidx = route_host([p.lo for p in parts], keys[rest])
@@ -1083,6 +1381,8 @@ class RemixDB:
 
     def _scan_at(self, view: Snapshot, start_key: int, n: int,
                  interrupt=None):
+        if self._unavailable:
+            self._check_unavailable_scan(int(start_key))
         cur = RemixCursor(view, width=max(8, n + n // 2),
                           interrupt=interrupt)
         cur.seek(int(start_key))
@@ -1136,6 +1436,9 @@ class RemixDB:
         """
         starts = np.asarray(starts, np.uint64)
         q = len(starts)
+        if self._unavailable:
+            for s in starts.tolist():
+                self._check_unavailable_scan(int(s))
         checks = interrupts if interrupts is not None else [None] * q
         if n <= 0:
             empty_v = np.zeros((0, self.cfg.vw), np.uint32)
@@ -1260,6 +1563,7 @@ class RemixDB:
                 in_flight=bool(self._in_flush),
             ),
         )
+        out["health"] = self.health()
         if self._ops_engine is not None:
             out["engine"] = self._ops_engine.stats()
         if self.block_cache is not None:

@@ -41,10 +41,16 @@ import struct
 
 import numpy as np
 
+from repro.io.checksum import crc32c
+from repro.io.faults import NULL_IO, CorruptionError
 from repro.obs import metrics as _metrics
 
 BLOCK = 4096
-HDR = 8  # 1-bit epoch in byte 0 + u16 record count + padding
+# 1-bit epoch in byte 0 + u16 record count + u32 CRC32C of the record
+# payload (bytes HDR..HDR+n*rec_size). A CRC of 0 marks a legacy block
+# written before checksums existed and skips verification.
+HDR = 8
+_HDR_STRUCT = struct.Struct("<BxHI")
 
 FLAG_TOMB = 1  # record is a point tombstone
 FLAG_RANGE = 2  # record is a range tombstone (key=lo, val[0:2]=hi)
@@ -96,6 +102,7 @@ class WAL:
         capacity_blocks: int = 1 << 20,
         sync_policy: str = "block",
         registry: "_metrics.MetricsRegistry | None" = None,
+        ioctx=None,
     ):
         if sync_policy not in self.SYNC_POLICIES:
             raise ValueError(
@@ -104,6 +111,7 @@ class WAL:
             )
         self.path = path
         self.vw = vw
+        self.ioctx = ioctx or NULL_IO
         self.sync_policy = sync_policy
         self.rec_size = _rec_size(vw)
         self.recs_per_block = (BLOCK - HDR) // self.rec_size
@@ -198,11 +206,14 @@ class WAL:
         epoch = self.epoch_bits.get(phys, 0) ^ 1  # flips on every overwrite
         self.epoch_bits[phys] = epoch
         buf = io.BytesIO()
-        buf.write(struct.pack("<BxH4x", epoch, n))
         for k, s, fl, e, v in recs:
             buf.write(struct.pack("<QIII", k, s, fl, e))
             buf.write(np.asarray(v, np.uint32).tobytes())
-        data = buf.getvalue().ljust(BLOCK, b"\0")
+        payload = buf.getvalue()
+        data = (_HDR_STRUCT.pack(epoch, n, crc32c(payload)) + payload).ljust(
+            BLOCK, b"\0"
+        )
+        data = self.ioctx.mutate_write(self.path, data)
         with open(self.path, "r+b") as f:
             f.seek(phys * BLOCK)
             f.write(data)
@@ -218,6 +229,7 @@ class WAL:
         """fsync the log file if blocks were written since the last one."""
         if self._dirty:
             with open(self.path, "rb") as f:
+                self.ioctx.check_fsync(self.path)
                 os.fsync(f.fileno())
             self._dirty = False
             self._c_fsyncs.inc()
@@ -230,11 +242,44 @@ class WAL:
         self._fsync()
 
     # ---------- read / recovery path ----------
-    def _read_block(self, phys: int):
-        with open(self.path, "rb") as f:
-            f.seek(phys * BLOCK)
-            data = f.read(BLOCK)
-        epoch, n = struct.unpack_from("<BxH", data, 0)
+    def _read_block(self, phys: int, strict: bool = True):
+        """Read + verify one physical block (retried on transient faults).
+
+        A failed payload CRC means the block's bytes are not what was
+        durably acknowledged: with ``strict`` that raises a typed
+        :class:`CorruptionError` (the block is part of the committed
+        mapping — its loss must be surfaced, never silently replayed);
+        tail recovery passes ``strict=False`` to treat a torn candidate
+        block as never-written instead (returns ``(None, [])``).
+        """
+        ioctx = self.ioctx
+
+        def attempt() -> bytes:
+            with open(self.path, "rb") as f:
+                ioctx.check_read(self.path)
+                f.seek(phys * BLOCK)
+                return ioctx.mutate_read(
+                    self.path, phys * BLOCK, f.read(BLOCK)
+                )
+
+        data = ioctx.run("wal", attempt)
+        try:
+            epoch, n, crc = _HDR_STRUCT.unpack_from(data, 0)
+        except struct.error:
+            if strict:
+                raise CorruptionError(
+                    self.path, "wal", phys, detail="truncated block"
+                )
+            return None, []
+        bad = (
+            n > self.recs_per_block
+            or len(data) < HDR + n * self.rec_size
+            or (crc != 0 and crc32c(data[HDR:HDR + n * self.rec_size]) != crc)
+        )
+        if bad:
+            if strict:
+                raise CorruptionError(self.path, "wal", phys)
+            return None, []
         recs = []
         off = HDR
         for _ in range(n):
@@ -378,7 +423,7 @@ class WAL:
         for phys in candidates:
             if phys >= n_phys:
                 continue
-            epoch, recs = self._read_block(phys)
+            epoch, recs = self._read_block(phys, strict=False)
             if epoch != self.epoch_bits.get(phys, 0) ^ 1 or not recs:
                 continue
             self.epoch_bits[phys] = epoch

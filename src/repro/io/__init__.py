@@ -20,7 +20,11 @@ Modules:
 - ``io.rebuild``    incremental REMIX rebuild from the old selector
   stream + the tables' CKBs — zero value bytes read.
 - ``io.manifest``   versioned registry with atomic rename commits +
-  orphan GC.
+  orphan GC (orphans are quarantined, then age-purged).
+- ``io.faults``     the typed error taxonomy (``CorruptionError``,
+  ``TransientIOError``, ``UnavailableSpanError``) + the deterministic
+  ``FaultPlan`` injection shim and the ``IOContext`` retry policy
+  threaded under every reader/writer in this package.
 - ``io.checksum``   CRC32C.
 
 The byte-level layout of every file format lives in the versioned spec
@@ -30,6 +34,14 @@ The byte-level layout of every file format lives in the versioned spec
 from repro.io.blockcache import BlockCache  # noqa: F401
 from repro.io.checksum import crc32c  # noqa: F401
 from repro.io.ckb import CKBReader, decode_ckb, encode_ckb  # noqa: F401
+from repro.io.faults import (  # noqa: F401
+    CorruptionError,
+    FaultPlan,
+    IOContext,
+    TransientIOError,
+    UnavailableSpanError,
+    flip_bytes,
+)
 from repro.io.manifest import Manifest, Storage  # noqa: F401
 from repro.io.rebuild import (  # noqa: F401
     decode_selector_order,

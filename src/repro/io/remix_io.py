@@ -16,13 +16,14 @@ import numpy as np
 
 from repro.core.remix import Remix
 from repro.io.checksum import crc32c
+from repro.io.faults import NULL_IO, CorruptionError
 
 MAGIC = b"RMIXIDX1"
 VERSION = 1
 _HEADER = struct.Struct("<8sHHHHIIIQ")  # magic ver kw r d | g n_slots n_entries | payload_len
 
 
-def dump_remix(remix: Remix, path: str) -> int:
+def dump_remix(remix: Remix, path: str, io=None) -> int:
     """Serialize ``remix`` atomically to ``path``; returns bytes written."""
     anchors = np.ascontiguousarray(np.asarray(remix.anchors, np.uint32))
     cursors = np.ascontiguousarray(np.asarray(remix.cursors, np.int32))
@@ -44,31 +45,62 @@ def dump_remix(remix: Remix, path: str) -> int:
         MAGIC, VERSION, kw, r, remix.d, g, selectors.shape[0],
         int(np.asarray(remix.n_entries)), len(payload),
     )
+    io = io or NULL_IO
+    blob = io.mutate_write(
+        path, header + payload + struct.pack("<I", crc32c(payload))
+    )
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(header)
-        f.write(payload)
-        f.write(struct.pack("<I", crc32c(payload)))
+        f.write(blob)
         f.flush()
+        io.check_fsync(path)
         os.fsync(f.fileno())
     os.replace(tmp, path)
     return _HEADER.size + len(payload) + 4
 
 
-def load_remix(path: str) -> Remix:
-    """Load a serialized REMIX back into a (device-resident) Remix."""
+def load_remix(path: str, io=None) -> Remix:
+    """Load a serialized REMIX back into a (device-resident) Remix.
+
+    Transient faults are retried per the :class:`IOContext`; a bad magic,
+    a truncated file or a payload CRC mismatch raises a typed
+    :class:`CorruptionError` with ``section="remix"`` — the scrubber's
+    cue to rebuild the file from the tables' CKBs (§3.4 redundancy).
+    """
     import jax.numpy as jnp
 
-    with open(path, "rb") as f:
-        hdr = _HEADER.unpack(f.read(_HEADER.size))
+    io = io or NULL_IO
+
+    def attempt():
+        with open(path, "rb") as f:
+            io.check_read(path)
+            raw = io.mutate_read(path, 0, f.read())
+        try:
+            hdr = _HEADER.unpack_from(raw, 0)
+        except struct.error:
+            raise CorruptionError(path, "remix", detail="truncated header")
         magic, ver, kw, r, d, g, n_slots, n_entries, plen = hdr
         if magic != MAGIC or ver != VERSION:
-            raise ValueError(f"{path}: not a REMIX index file")
-        payload = f.read(plen)
-        (crc,) = struct.unpack("<I", f.read(4))
+            raise CorruptionError(
+                path, "remix", detail="not a REMIX index file"
+            )
+        payload = raw[_HEADER.size:_HEADER.size + plen]
+        tail = raw[_HEADER.size + plen:_HEADER.size + plen + 4]
+        if len(payload) != plen or len(tail) != 4:
+            raise CorruptionError(path, "remix", detail="truncated payload")
+        (crc,) = struct.unpack("<I", tail)
+        return hdr, payload, crc
+
+    hdr, payload, crc = io.run("remix", attempt)
+    magic, ver, kw, r, d, g, n_slots, n_entries, plen = hdr
     if crc32c(payload) != crc:
-        raise ValueError(f"{path}: REMIX payload checksum mismatch")
+        raise CorruptionError(path, "remix")
     na, nc = g * kw * 4, g * r * 4
+    if plen != na + nc + n_slots:
+        raise CorruptionError(
+            path, "remix",
+            detail=f"payload length {plen} != storage_bytes {na + nc + n_slots}",
+        )
     anchors = np.frombuffer(payload, "<u4", count=g * kw).astype(
         np.uint32
     ).reshape(g, kw)
@@ -85,3 +117,41 @@ def load_remix(path: str) -> Remix:
         n_entries=jnp.asarray(n_entries, jnp.int32),
         d=d,
     )
+
+
+def check_remix(path: str, io=None) -> int:
+    """Integrity-check a REMIX file at rest without touching the device.
+
+    Scrub primitive: verifies magic/version, payload CRC, and the §3.4
+    accounting invariant (payload length == anchors + cursors + selectors
+    == ``storage_bytes()``). Raises :class:`CorruptionError` on any
+    mismatch; returns the number of bytes read.
+    """
+    io = io or NULL_IO
+
+    def attempt() -> bytes:
+        with open(path, "rb") as f:
+            io.check_read(path)
+            return io.mutate_read(path, 0, f.read())
+
+    raw = io.run("remix_scrub", attempt)
+    try:
+        hdr = _HEADER.unpack_from(raw, 0)
+    except struct.error:
+        raise CorruptionError(path, "remix", detail="truncated header")
+    magic, ver, kw, r, d, g, n_slots, n_entries, plen = hdr
+    if magic != MAGIC or ver != VERSION:
+        raise CorruptionError(path, "remix", detail="not a REMIX index file")
+    payload = raw[_HEADER.size:_HEADER.size + plen]
+    tail = raw[_HEADER.size + plen:_HEADER.size + plen + 4]
+    if len(payload) != plen or len(tail) != 4:
+        raise CorruptionError(path, "remix", detail="truncated payload")
+    if crc32c(payload) != struct.unpack("<I", tail)[0]:
+        raise CorruptionError(path, "remix")
+    if plen != g * kw * 4 + g * r * 4 + n_slots:
+        raise CorruptionError(
+            path, "remix",
+            detail=f"payload length {plen} != storage_bytes "
+                   f"{g * kw * 4 + g * r * 4 + n_slots}",
+        )
+    return len(raw)

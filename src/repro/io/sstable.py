@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.io.checksum import crc32c
 from repro.io.ckb import decode_ckb, encode_ckb
+from repro.io.faults import NULL_IO, CorruptionError
 from repro.obs import tracing as _tracing
 
 MAGIC = b"RMIXSST1"
@@ -56,6 +57,7 @@ def write_sstable(
     rtombs=None,
     with_ckb: bool = True,
     block_bytes: int = DEFAULT_BLOCK,
+    io=None,
 ) -> int:
     """Write one table file atomically; returns bytes written.
 
@@ -112,12 +114,13 @@ def write_sstable(
     header = _HEADER.pack(
         MAGIC, VERSION, kw, vw, flags, n, block_bytes, len(rt)
     )
+    io = io or NULL_IO
+    payload = io.mutate_write(path, header + data + footer)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(header)
-        f.write(data)
-        f.write(footer)
+        f.write(payload)
         f.flush()
+        io.check_fsync(path)
         os.fsync(f.fileno())
     os.replace(tmp, path)
     return _HEADER.size + len(data) + len(footer)
@@ -135,12 +138,13 @@ class SSTableReader:
     benchmarks can prove which parts of the file a code path touched.
     """
 
-    def __init__(self, path: str, cache=None, mode: str = "copy"):
+    def __init__(self, path: str, cache=None, mode: str = "copy", io=None):
         if mode not in ("copy", "mmap"):
             raise ValueError(f"mode must be 'copy' or 'mmap', got {mode!r}")
         self.path = path
         self.mode = mode
         self._cache = cache
+        self._io = io or NULL_IO
         self._mm: mmap.mmap | None = None
         self._verified: set[int] | None = set() if mode == "mmap" else None
         self.bytes_read: dict[str, int] = {s: 0 for s in SECTIONS}
@@ -151,34 +155,57 @@ class SSTableReader:
         # mtime captured at open so a reused name can't hit stale blocks
         st = os.stat(path)
         self._cache_key = (path, st.st_ino, st.st_mtime_ns)
-        with open(path, "rb") as f:
-            hdr = f.read(_HEADER.size)
-            (magic, ver, self.kw, self.vw, self.flags, self.n,
-             self.block_bytes, self.n_rtombs) = _HEADER.unpack(hdr)
-            if magic != MAGIC or ver != VERSION:
-                raise ValueError(f"{path}: not an SSTable (v{VERSION}) file")
-            f.seek(-_FOOTER_TAIL.size, os.SEEK_END)
-            end = f.tell()
-            fcrc, flen, fmagic = _FOOTER_TAIL.unpack(f.read(_FOOTER_TAIL.size))
-            if fmagic != FOOTER_MAGIC:
-                raise ValueError(f"{path}: bad footer magic")
-            f.seek(end + _FOOTER_TAIL.size - flen)
-            body = f.read(flen - _FOOTER_TAIL.size)
-            if crc32c(body) != fcrc:
-                raise ValueError(f"{path}: footer checksum mismatch")
-            fixed = _FOOTER_FIXED.unpack_from(body, 0)
-            self._offs = dict(zip(SECTIONS, fixed[:7]))
-            self._ckb_len = fixed[7]
-            n_blocks, bb = fixed[8], fixed[9]
-            self._crcs = np.frombuffer(
-                body, "<u4", count=n_blocks, offset=_FOOTER_FIXED.size
-            )
-            self._data_start = _HEADER.size
-            self._data_end = self._offs["ckb"] + self._ckb_len
-            self.block_bytes = bb
+        self._io.run("open", self._open_meta)
         if mode == "mmap":
             with open(path, "rb") as f:
                 self._mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+
+    def _open_meta(self) -> None:
+        """Read + verify header and footer (retried on transient faults)."""
+        path, io = self.path, self._io
+        with open(path, "rb") as f:
+            io.check_read(path)
+            hdr = io.mutate_read(path, 0, f.read(_HEADER.size))
+            try:
+                (magic, ver, self.kw, self.vw, self.flags, self.n,
+                 self.block_bytes, self.n_rtombs) = _HEADER.unpack(hdr)
+            except struct.error:
+                raise CorruptionError(path, "header", detail="truncated")
+            if magic != MAGIC or ver != VERSION:
+                raise CorruptionError(
+                    path, "header",
+                    detail=f"not an SSTable (v{VERSION}) file",
+                )
+            try:
+                f.seek(-_FOOTER_TAIL.size, os.SEEK_END)
+                end = f.tell()
+                fcrc, flen, fmagic = _FOOTER_TAIL.unpack(
+                    io.mutate_read(path, end, f.read(_FOOTER_TAIL.size))
+                )
+            except (OSError, struct.error):
+                raise CorruptionError(path, "footer", detail="truncated")
+            if fmagic != FOOTER_MAGIC:
+                raise CorruptionError(path, "footer", detail="bad magic")
+            f.seek(end + _FOOTER_TAIL.size - flen)
+            body = io.mutate_read(
+                path, end + _FOOTER_TAIL.size - flen,
+                f.read(flen - _FOOTER_TAIL.size),
+            )
+            if crc32c(body) != fcrc:
+                raise CorruptionError(path, "footer")
+            try:
+                fixed = _FOOTER_FIXED.unpack_from(body, 0)
+                self._offs = dict(zip(SECTIONS, fixed[:7]))
+                self._ckb_len = fixed[7]
+                n_blocks, bb = fixed[8], fixed[9]
+                self._crcs = np.frombuffer(
+                    body, "<u4", count=n_blocks, offset=_FOOTER_FIXED.size
+                )
+            except (struct.error, ValueError):
+                raise CorruptionError(path, "footer", detail="truncated")
+            self._data_start = _HEADER.size
+            self._data_end = self._offs["ckb"] + self._ckb_len
+            self.block_bytes = bb
 
     @property
     def has_ckb(self) -> bool:
@@ -202,6 +229,21 @@ class SSTableReader:
         """Share a :class:`BlockCache`; subsequent block reads go via it."""
         self._cache = cache
 
+    def attach_io(self, io) -> None:
+        """Route reads through an :class:`repro.io.faults.IOContext`
+        (fault injection + bounded transient-error retry)."""
+        self._io = io or NULL_IO
+
+    def block_section(self, idx: int) -> str:
+        """Logical section containing granule ``idx``'s first byte —
+        the ``section`` coordinate of a :class:`CorruptionError`."""
+        off = self._data_start + idx * self.block_bytes
+        best = SECTIONS[0]
+        for name in SECTIONS:
+            if self._offs[name] <= off:
+                best = name
+        return best
+
     def _section_range(self, name: str) -> tuple[int, int]:
         lens = dict(
             keys=self.n * self.kw * 4,
@@ -221,16 +263,28 @@ class SSTableReader:
         return (lo - self._data_start) // self.block_bytes
 
     def _load_block(self, idx: int, f) -> bytes:
-        """Read granule ``idx`` from ``f`` and verify its CRC32C."""
+        """Read granule ``idx`` from ``f`` and verify its CRC32C.
+
+        Transient faults are retried (bounded by the attached
+        :class:`IOContext`); a CRC mismatch raises a typed
+        :class:`CorruptionError` pinned to this file/section/granule —
+        corruption is never retried and never cached.
+        """
         tr = _tracing.current()
         t0 = _tracing.now() if tr is not None else 0.0
         bb = self.block_bytes
         lo = self._data_start + idx * bb
         hi = min(lo + bb, self._data_end)
-        f.seek(lo)
-        chunk = f.read(hi - lo)
+        io = self._io
+
+        def attempt() -> bytes:
+            io.check_read(self.path)
+            f.seek(lo)
+            return io.mutate_read(self.path, lo, f.read(hi - lo))
+
+        chunk = io.run("block", attempt)
         if crc32c(chunk) != int(self._crcs[idx]):
-            raise ValueError(f"{self.path}: block {idx} checksum mismatch")
+            raise CorruptionError(self.path, self.block_section(idx), idx)
         self.disk_bytes_read += hi - lo
         if tr is not None:
             tr.leaf("disk_read", t0, _tracing.now(), bytes=hi - lo, block=idx)
@@ -251,8 +305,16 @@ class SSTableReader:
         if idx not in self._verified:
             tr = _tracing.current()
             t0 = _tracing.now() if tr is not None else 0.0
-            if crc32c(view) != int(self._crcs[idx]):
-                raise ValueError(f"{self.path}: block {idx} checksum mismatch")
+            io = self._io
+            io.run("mmap", lambda: io.check_read(self.path))
+            # verify against the (possibly fault-mutated) bytes: the CRC
+            # pass must see what the injected disk would have served
+            probe = (
+                io.mutate_read(self.path, lo, bytes(view))
+                if io.has_read_mutations(self.path) else view
+            )
+            if crc32c(probe) != int(self._crcs[idx]):
+                raise CorruptionError(self.path, self.block_section(idx), idx)
             self._verified.add(idx)
             self.disk_bytes_read += hi - lo
             if tr is not None:
@@ -515,3 +577,33 @@ class SSTableReader:
         """Validate every block checksum (full-file scrub)."""
         for name in SECTIONS:
             self._read_checked(name)
+
+    def check_blocks(self, on_block=None) -> list[int]:
+        """CRC-verify every checksum granule straight off the disk.
+
+        The scrub primitive: bypasses the block cache entirely (a scrub
+        must re-read the at-rest bytes, and must not evict the serving
+        working set), charges no read counters, and *collects* failures
+        instead of raising — returns the list of granule indices whose
+        CRC did not match. ``on_block(nbytes)`` is invoked after each
+        granule so the caller can rate-limit by byte budget.
+        """
+        bad: list[int] = []
+        io = self._io
+        bb = self.block_bytes
+        with open(self.path, "rb") as f:
+            for idx in range(len(self._crcs)):
+                lo = self._data_start + idx * bb
+                hi = min(lo + bb, self._data_end)
+
+                def attempt() -> bytes:
+                    io.check_read(self.path)
+                    f.seek(lo)
+                    return io.mutate_read(self.path, lo, f.read(hi - lo))
+
+                chunk = io.run("scrub", attempt)
+                if crc32c(chunk) != int(self._crcs[idx]):
+                    bad.append(idx)
+                if on_block is not None:
+                    on_block(hi - lo)
+        return bad

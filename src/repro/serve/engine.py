@@ -322,6 +322,30 @@ class KVServeEngine:
             stores=per,
         )
 
+    def scrub(self, full: bool = True, repair: bool = True) -> list[dict]:
+        """Run an integrity scrub on every shard (see
+        :meth:`repro.db.store.RemixDB.scrub`); one report per shard."""
+        return [db.scrub(full=full, repair=repair) for db in self.shards]
+
+    def health(self) -> dict:
+        """Node-level durability summary: ``degraded`` if *any* shard is,
+        with each shard's own report keyed by its lower key bound."""
+        per = {
+            str(lo): db.health()
+            for lo, db in zip(self.lows, self.shards)
+        }
+        degraded = any(h["status"] != "ok" for h in per.values())
+        return dict(
+            status="degraded" if degraded else "ok",
+            shards=per,
+            corruption_detected=sum(
+                h["corruption_detected"] for h in per.values()
+            ),
+            quarantine_files=sum(
+                h["quarantine_files"] for h in per.values()
+            ),
+        )
+
     def metrics(self) -> dict:
         """One labelled observability snapshot for the whole serving
         node: the serving tier's registry (shared cache + cross-shard

@@ -1,0 +1,596 @@
+"""Storage fault-injection acceptance matrix (tentpole PR drill).
+
+The grid: {bit-flip, torn write, transient EIO} × {sstable, REMIX,
+manifest, WAL}. Contract under test, per ISSUE acceptance criteria:
+
+- every corruption is **detected** — a read either returns correct data
+  or raises a typed :class:`CorruptionError` /
+  :class:`UnavailableSpanError`; a silent wrong read is the only failure;
+- **transient** faults are absorbed by the bounded retry (``io_retries``)
+  — the op succeeds and the ``io_retry`` counter ticks;
+- a corrupted REMIX is **auto-repaired** by the CKB rebuild (§3.4): after
+  ``scrub()`` the store is clean and reads are bit-identical;
+- **containment**: in a mixed batch only the ops touching the corrupt
+  granule fail (``OpStatus.IO_ERROR``), the rest of the batch completes;
+- nothing unverified is ever cached (file and mmap first-touch modes).
+
+``faults`` marker: the seeded bit-rot matrix also runs nightly at a
+wider seed grid (see ci.yml); a deterministic subset runs in tier-1.
+"""
+import glob
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.db.compaction import CompactionConfig
+from repro.db.ops import Batch, Op, OpStatus
+from repro.db.store import RemixDB, RemixDBConfig
+from repro.io.faults import (CorruptionError, FaultPlan, TransientIOError,
+                             UnavailableSpanError, flip_bytes)
+
+pytestmark = pytest.mark.faults
+
+
+def _cfg(plan=None, **kw):
+    return RemixDBConfig(
+        vw=2,
+        memtable_entries=kw.pop("memtable_entries", 64),
+        compaction=CompactionConfig(table_cap=256, t_max=4),
+        hot_threshold=255,
+        fault_plan=plan,
+        **kw,
+    )
+
+
+def _fill(db, lo, hi, tag=1):
+    ks = np.arange(lo, hi, dtype=np.uint64)
+    vs = np.stack(
+        [ks.astype(np.uint32), np.full(len(ks), tag, np.uint32)], 1
+    )
+    db.put_batch(ks, vs)
+    return {int(k): (int(v[0]), int(v[1])) for k, v in zip(ks, vs)}
+
+
+def _seed_store(d, n=500, flush=True):
+    db = RemixDB.open(d, _cfg())
+    model = _fill(db, 0, n)
+    if flush:
+        db.flush()
+    db.close()
+    return model
+
+
+def _files(d, sub, pat):
+    return sorted(glob.glob(os.path.join(d, sub, pat)))
+
+
+def _check_never_wrong(db, model, hi=1 << 20):
+    """The acceptance predicate: every observable outcome is correct
+    data, a typed error, or a typed degraded span — never wrong bytes."""
+    try:
+        kk, vv = db.scan(0, hi)
+    except (CorruptionError, UnavailableSpanError):
+        pass
+    else:
+        got = {int(k): (int(v[0]), int(v[1])) for k, v in zip(kk, vv)}
+        for k, v in got.items():
+            assert model.get(k) == v, f"silent wrong read at {k}"
+    for k in list(model)[:: max(1, len(model) // 16)]:
+        try:
+            v = db.get(k)
+        except (CorruptionError, UnavailableSpanError):
+            continue
+        if v is not None:
+            assert (int(v[0]), int(v[1])) == model[k]
+
+
+# ------------------------------------------------ transient EIO × target
+@pytest.mark.parametrize("target", [".sst", ".rmx", "MANIFEST", "wal.log"])
+def test_transient_read_absorbed_by_retry(tmp_path, target):
+    """One injected EIO per matching file: the bounded retry absorbs it,
+    every read succeeds, and the retry counter ticks."""
+    d = str(tmp_path / "db")
+    model = _seed_store(d)
+    plan = FaultPlan(seed=7).transient_read(target, count=1)
+    db = RemixDB.open(d, _cfg(plan=plan, io_retries=2))
+    try:
+        kk, vv = db.scan(0, 1 << 20)
+        got = {int(k): (int(v[0]), int(v[1])) for k, v in zip(kk, vv)}
+        assert got == model
+        assert plan.stats()["transient_read"] >= 1
+        assert db.registry.counter("io_retry").value >= 1
+        assert db.registry.counter("io_giveup").value == 0
+        assert db.health()["io"]["retries"] >= 1
+    finally:
+        db.close()
+
+
+def test_transient_read_giveup_is_typed(tmp_path):
+    """More consecutive EIOs than the retry budget: the op fails with the
+    typed TransientIOError (an OSError/EIO) and io_giveup ticks — never a
+    silent empty result."""
+    d = str(tmp_path / "db")
+    _seed_store(d)
+    plan = FaultPlan(seed=7).transient_read(".sst", count=50)
+    db = RemixDB.open(d, _cfg(plan=plan, io_retries=2))
+    try:
+        with pytest.raises(TransientIOError):
+            db.scan(0, 1 << 20)
+        assert db.registry.counter("io_giveup").value >= 1
+    finally:
+        db.close()
+
+
+# --------------------------------------------------- bit-flip × target
+def test_bitflip_sstable_detected_and_quarantined(tmp_path):
+    """At-rest bit rot in a value granule: reads raise typed errors (no
+    wrong bytes), scrub quarantines the table, the degraded span is
+    typed, keys outside it keep serving, and the state survives reopen."""
+    d = str(tmp_path / "db")
+    model = _seed_store(d)
+    sst = _files(d, "tables", "*.sst")
+    assert len(sst) >= 2
+    db = RemixDB.open(d, _cfg())
+    try:
+        # flip inside the *vals* section so the key span of the
+        # quarantined table is still extractable from the (intact) CKB
+        rd = db.partitions[0].tables[0]._rd()
+        lo, _hi = rd._section_range("vals")
+        db.close()
+        flip_bytes(sst[0], lo + 8, 4)
+
+        db = RemixDB.open(d, _cfg())
+        _check_never_wrong(db, model)
+        rep = db.scrub(full=True)
+        assert not rep["clean"]
+        assert [f["kind"] for f in rep["findings"]] == ["table"]
+        # the finding pins the checksum granule (the section label is the
+        # granule's first byte — granules span section boundaries)
+        assert rep["findings"][0]["blocks"]
+        assert rep["quarantined"] == [os.path.basename(sst[0])]
+        h = db.health()
+        assert h["status"] == "degraded"
+        span = h["unavailable"][0]
+        assert span["tables"] == [os.path.basename(sst[0])]
+        # inside the span: typed refusal; outside: correct data
+        with pytest.raises(UnavailableSpanError):
+            db.get(int(span["lo"]))
+        if span["hi"] is not None and span["hi"] + 1 in model:
+            ok = db.get(span["hi"] + 1)
+            assert (int(ok[0]), int(ok[1])) == model[span["hi"] + 1]
+        with pytest.raises(UnavailableSpanError):
+            db.scan(0, 10)
+        _check_never_wrong(db, model)
+        db.close()
+
+        # degradation is manifest state: it survives a clean reopen
+        db = RemixDB.open(d, _cfg())
+        assert db.health()["status"] == "degraded"
+        with pytest.raises(UnavailableSpanError):
+            db.get(int(span["lo"]))
+        _check_never_wrong(db, model)
+    finally:
+        db.close()
+
+
+def test_bitflip_remix_auto_repaired(tmp_path):
+    """At-rest bit rot in the REMIX: open degrades (never crashes),
+    scrub rebuilds the index from the CKBs and commits it, and reads are
+    bit-identical to the pre-corruption store."""
+    d = str(tmp_path / "db")
+    db = RemixDB.open(d, _cfg())
+    _fill(db, 0, 500)
+    db.flush()
+    kk0, vv0 = db.scan(0, 1 << 20)
+    db.close()
+    rx = _files(d, "remix", "*.rmx")
+    assert rx
+    flip_bytes(rx[0], 100, 4)
+
+    db = RemixDB.open(d, _cfg())
+    try:
+        rep = db.scrub(full=True)
+        assert not rep["clean"]
+        assert [f["kind"] for f in rep["findings"]] == ["remix"]
+        assert len(rep["repaired"]) == 1
+        assert db.registry.counter("repair_remix_rebuilt").value == 1
+        assert db.scrub(full=True)["clean"]
+        kk, vv = db.scan(0, 1 << 20)
+        assert np.array_equal(kk, kk0) and np.array_equal(vv, vv0)
+        assert db.health()["status"] == "ok"
+    finally:
+        db.close()
+    # the repaired index is the committed one after reopen too
+    db = RemixDB.open(d, _cfg())
+    try:
+        assert db.scrub(full=True)["clean"]
+        kk, vv = db.scan(0, 1 << 20)
+        assert np.array_equal(kk, kk0) and np.array_equal(vv, vv0)
+    finally:
+        db.close()
+
+
+def test_bitflip_manifest_detected(tmp_path):
+    """Bit rot in the manifest body: reopen raises the typed
+    CorruptionError (the manifest is the root of trust — nothing to
+    rebuild it from), and a live store's scrub pins the finding."""
+    d = str(tmp_path / "db")
+    _seed_store(d)
+    mf = _files(d, ".", "MANIFEST-*")
+    flip_bytes(mf[0], 10, 4)
+    with pytest.raises(CorruptionError) as ei:
+        RemixDB.open(d, _cfg())
+    assert ei.value.section == "manifest"
+
+
+def test_bitflip_current_mismatch_scrubbed(tmp_path):
+    """CURRENT / manifest-body version disagreement surfaces as a
+    manifest finding (detection only, no repair invented)."""
+    d = str(tmp_path / "db")
+    _seed_store(d)
+    db = RemixDB.open(d, _cfg())
+    try:
+        state = db.storage.manifest.load()
+        ver = state["version"]
+        # forge a stale CURRENT pointing at a renamed copy of the body
+        body = os.path.join(d, f"MANIFEST-{ver:06d}")
+        forged = os.path.join(d, f"MANIFEST-{ver + 7:06d}")
+        shutil.copy(body, forged)
+        with open(os.path.join(d, "CURRENT"), "w") as f:
+            f.write(os.path.basename(forged) + "\n")
+        rep = db.scrub(full=True, repair=False)
+        assert [f["kind"] for f in rep["findings"]] == ["manifest"]
+    finally:
+        # restore so close() can commit
+        with open(os.path.join(d, "CURRENT"), "w") as f:
+            f.write(os.path.basename(body) + "\n")
+        os.remove(forged)
+        db.close()
+
+
+def test_bitflip_wal_detected(tmp_path):
+    """Bit rot inside a committed WAL block: replay is strict — reopen
+    raises the typed CorruptionError instead of resurrecting a partial
+    or wrong MemTable."""
+    d = str(tmp_path / "db")
+    db = RemixDB.open(d, _cfg(memtable_entries=1 << 30))
+    _fill(db, 0, 300)  # stays in the WAL: no flush
+    db.close()  # commits a manifest whose state references the WAL blocks
+    flip_bytes(os.path.join(d, "wal.log"), 100, 4)
+    with pytest.raises(CorruptionError) as ei:
+        RemixDB.open(d, _cfg(memtable_entries=1 << 30))
+    assert ei.value.section == "wal"
+
+
+# --------------------------------------------------- torn write × target
+def test_torn_write_sstable_detected(tmp_path):
+    """A torn table write (flush survives in memory, bytes truncated on
+    disk): reopen detects it — typed, never a partial table served."""
+    d = str(tmp_path / "db")
+    plan = FaultPlan(seed=3).torn_write(".sst", keep=0.5, count=1)
+    db = RemixDB.open(d, _cfg(plan=plan))
+    model = _fill(db, 0, 500)
+    db.flush()
+    # in-process reads still come from the resident tables: correct
+    kk, vv = db.scan(0, 1 << 20)
+    assert len(kk) == len(model)
+    db.close()
+    assert plan.stats()["torn_write"] == 1
+    try:
+        db2 = RemixDB.open(d, _cfg())
+    except CorruptionError:
+        return  # detected at open: typed, acceptable
+    try:
+        # reads over the truncated granules are typed, never wrong
+        _check_never_wrong(db2, model)
+        rep = db2.scrub(full=True, repair=False)
+        assert not rep["clean"]
+        assert any(f["kind"] == "table" for f in rep["findings"])
+    finally:
+        db2.close()
+
+
+def test_torn_write_manifest_detected(tmp_path):
+    """A torn manifest body: reopen raises typed CorruptionError
+    (undecodable JSON) — the commit never silently half-applies."""
+    d = str(tmp_path / "db")
+    plan = FaultPlan(seed=3).torn_write("MANIFEST", keep=0.4, count=1)
+    # no flush: the only manifest commit is close()'s — the torn one
+    db = RemixDB.open(d, _cfg(plan=plan, memtable_entries=1 << 30))
+    _fill(db, 0, 500)
+    db.close()
+    assert plan.stats()["torn_write"] == 1
+    with pytest.raises(CorruptionError) as ei:
+        RemixDB.open(d, _cfg())
+    assert ei.value.section == "manifest"
+
+
+def test_torn_write_wal_never_wrong(tmp_path):
+    """A torn WAL block write: recovery may lose the torn tail (the disk
+    lied about durability) but never serves wrong bytes — every
+    recovered key has its exact pre-crash value."""
+    d = str(tmp_path / "db")
+    plan = FaultPlan(seed=3).torn_write("wal.log", keep=0.5, count=1)
+    db = RemixDB.open(d, _cfg(plan=plan, memtable_entries=1 << 30))
+    model = _fill(db, 0, 200)
+    db.close()
+    assert plan.stats()["torn_write"] >= 1
+    try:
+        db2 = RemixDB.open(d, _cfg(memtable_entries=1 << 30))
+    except CorruptionError:
+        return  # strict replay refused the torn block: detected, typed
+    try:
+        kk, vv = db2.scan(0, 1 << 20)
+        for k, v in zip(kk, vv):
+            assert model[int(k)] == (int(v[0]), int(v[1]))
+    finally:
+        db2.close()
+
+
+def test_failed_fsync_surfaces(tmp_path):
+    """A dying disk failing fsync: the write path raises (acknowledge
+    nothing), it is not swallowed."""
+    d = str(tmp_path / "db")
+    plan = FaultPlan(seed=3).fail_fsync(".sst", count=1)
+    db = RemixDB.open(d, _cfg(plan=plan, memtable_entries=1 << 30))
+    _fill(db, 0, 500)
+    with pytest.raises(OSError):
+        db.flush()
+
+
+# ------------------------------------------------------- containment
+def test_containment_mixed_batch(tmp_path):
+    """A mixed batch over a store whose one granule is corrupt: only the
+    ops touching it get IO_ERROR; the rest of the batch completes. The
+    whole batch never dies and nothing wrong is returned."""
+    d = str(tmp_path / "db")
+    model = _seed_store(d)
+    sst = _files(d, "tables", "*.sst")
+    db = RemixDB.open(d, _cfg())
+    try:
+        rd = db.partitions[0].tables[0]._rd()
+        lo, _ = rd._section_range("vals")
+        db.close()
+        flip_bytes(sst[0], lo + 8, 4)
+
+        db = RemixDB.open(d, _cfg())
+        rep = db.scrub(full=True)  # quarantine + degrade the span
+        assert rep["quarantined"]
+        span = db.health()["unavailable"][0]
+        bad_key = int(span["lo"])
+        good_key = (
+            span["hi"] + 1 if span["hi"] is not None else None
+        )
+        ops = [Op.get(bad_key), Op.put(10**9, np.array([7, 7], np.uint32)),
+               Op.get(10**9)]
+        if good_key is not None and good_key in model:
+            ops.append(Op.get(good_key))
+            ops.append(Op.multiget([good_key, bad_key]))
+        res = db.submit(Batch(ops), sync=True).result()
+        sts = [r.status for r in res.results]
+        assert sts[0] == OpStatus.IO_ERROR  # the touching op, and only it
+        assert sts[1] == OpStatus.OK and sts[2] == OpStatus.OK
+        if good_key is not None and good_key in model:
+            assert sts[3] == OpStatus.OK
+            v = res.results[3].value
+            assert (int(v[0]), int(v[1])) == model[good_key]
+            # multiget touching the span degrades as one op — typed
+            assert sts[4] == OpStatus.IO_ERROR
+        with pytest.raises(UnavailableSpanError):
+            res.results[0].raise_if_error()
+        assert res.stats["io_errors"] >= 1
+        assert db.engine().stats()["io_errors"] >= 1
+    finally:
+        db.close()
+
+
+def test_containment_transient_multiget_isolated(tmp_path):
+    """An unhealing transient fault on one table: the multiget's
+    isolation fallback re-executes per key, so only the keys routed to
+    the faulty granule fail; the batch itself still completes."""
+    d = str(tmp_path / "db")
+    model = _seed_store(d)
+    sst = _files(d, "tables", "*.sst")
+    # fault only the *first* table file, forever (beyond the budget)
+    plan = FaultPlan(seed=5).transient_read(
+        os.path.basename(sst[0]), count=-1
+    )
+    db = RemixDB.open(d, _cfg(plan=plan, io_retries=1))
+    try:
+        keys = sorted(model)
+        res = db.submit(
+            Batch([Op.multiget(keys[:4]), Op.multiget(keys[-4:])]),
+            sync=True,
+        ).result()
+        sts = [r.status for r in res.results]
+        # at least one side fails typed; any OK side returned exact data
+        assert OpStatus.IO_ERROR in sts
+        for r, ks in zip(res.results, (keys[:4], keys[-4:])):
+            if r.status == OpStatus.OK:
+                for j, k in enumerate(ks):
+                    assert (int(r.vals[j][0]), int(r.vals[j][1])) \
+                        == model[k]
+    finally:
+        db.close()
+
+
+# --------------------------------------- cache hygiene (never unverified)
+@pytest.mark.parametrize("mode", ["copy", "mmap"])
+def test_unverified_bytes_never_cached(tmp_path, mode):
+    """Corrupt granule read through either cache mode: the typed error
+    fires on every access (first touch and after), and once the bytes are
+    restored the same reader serves correct data — proving the poisoned
+    bytes were never admitted to the cache."""
+    d = str(tmp_path / "db")
+    model = _seed_store(d)
+    sst = _files(d, "tables", "*.sst")
+    db = RemixDB.open(d, _cfg(cache_mode=mode))
+    try:
+        rd = db.partitions[0].tables[0]._rd()
+        lo, _ = rd._section_range("vals")
+        db.close()
+        flip_bytes(sst[0], lo + 8, 4)
+        db = RemixDB.open(d, _cfg(cache_mode=mode))
+        with pytest.raises(CorruptionError):
+            db.scan(0, 1 << 20)
+        with pytest.raises(CorruptionError):  # and again: not cached
+            db.scan(0, 1 << 20)
+        db.close()
+        flip_bytes(sst[0], lo + 8, 4)  # heal the bytes (XOR is invertible)
+        db = RemixDB.open(d, _cfg(cache_mode=mode))
+        kk, vv = db.scan(0, 1 << 20)
+        got = {int(k): (int(v[0]), int(v[1])) for k, v in zip(kk, vv)}
+        assert got == model
+    finally:
+        db.close()
+
+
+# ------------------------------------------------------ quarantine purge
+def test_quarantine_age_purge(tmp_path):
+    """Quarantined files are kept for forensics, then age-purged: an old
+    file goes, a fresh one stays, and the counter ticks."""
+    d = str(tmp_path / "db")
+    _seed_store(d)
+    db = RemixDB.open(
+        d, _cfg(quarantine_purge_age_s=3600.0)
+    )
+    try:
+        qdir = db.storage.quarantine_dir
+        os.makedirs(qdir, exist_ok=True)
+        old = os.path.join(qdir, "t-old.sst")
+        fresh = os.path.join(qdir, "t-fresh.sst")
+        for p in (old, fresh):
+            with open(p, "wb") as f:
+                f.write(b"x" * 64)
+        past = os.path.getmtime(old) - 7200
+        os.utime(old, (past, past))
+        rep = db.scrub(full=True)
+        assert rep["clean"]
+        assert not os.path.exists(old)
+        assert os.path.exists(fresh)
+        assert db.registry.counter("quarantine_purged").value == 1
+        assert db.health()["repair"]["quarantine_purged"] == 1
+        kinds = [e.kind for e in db.events.list()]
+        assert "quarantine_purge" in kinds
+    finally:
+        db.close()
+
+
+# ------------------------------------- seeded bit-rot property (satellite)
+def _bitrot_roundtrip(tmp_path, seed):
+    """Flip one seeded random byte anywhere under the store, reopen, and
+    drive scans + probes + scrub: every outcome must be correct data, a
+    typed error, or a quarantined span — never silently wrong."""
+    import random
+
+    rng = random.Random(seed)
+    d = str(tmp_path / f"db{seed}")
+    model = _seed_store(d, n=400)
+    files = []
+    for root, _, fs in os.walk(d):
+        files.extend(os.path.join(root, f) for f in fs)
+    victim = rng.choice(sorted(files))
+    off = rng.randrange(max(1, os.path.getsize(victim)))
+    flip_bytes(victim, off, 1)
+
+    try:
+        db = RemixDB.open(d, _cfg())
+    except CorruptionError:
+        return  # detected at open: typed, acceptable
+    try:
+        _check_never_wrong(db, model)
+        try:
+            db.scrub(full=True)
+        except (CorruptionError, TransientIOError):
+            pass  # a scrub read hitting the rot is itself typed
+        _check_never_wrong(db, model)
+    finally:
+        db.close()
+    # and again after any repair committed
+    try:
+        db = RemixDB.open(d, _cfg())
+    except CorruptionError:
+        return
+    try:
+        _check_never_wrong(db, model)
+    finally:
+        db.close()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_bitrot_property_deterministic(tmp_path, seed):
+    """Tier-1 subset of the seeded bit-rot property."""
+    _bitrot_roundtrip(tmp_path, seed)
+
+
+@pytest.mark.nightly
+@pytest.mark.parametrize("seed", range(4, 36))
+def test_bitrot_property_matrix(tmp_path, seed):
+    """Nightly: the wide seed grid of the same property."""
+    _bitrot_roundtrip(tmp_path, seed)
+
+
+# -------------------------------------- background scrubber + serve tier
+def test_background_scrub_thread(tmp_path):
+    """The interval-driven scrubber runs, records passes, and is joined
+    cleanly at close."""
+    import time
+
+    d = str(tmp_path / "db")
+    _seed_store(d)
+    db = RemixDB.open(d, _cfg(scrub_interval_s=0.05))
+    try:
+        deadline = time.monotonic() + 10.0
+        while (time.monotonic() < deadline
+               and db.registry.counter("scrub_passes").value == 0):
+            time.sleep(0.02)
+        assert db.registry.counter("scrub_passes").value >= 1
+        assert db.health()["scrub"]["last"] is not None
+        assert db.health()["scrub"]["last"]["clean"]
+    finally:
+        db.close()
+    assert db._scrub_thread is None  # joined, not leaked
+
+
+def test_serve_engine_health_and_scrub(tmp_path):
+    """KVServeEngine aggregates shard healths and fans scrub() out: a
+    corruption on one shard degrades the node view but not the other
+    shard's span."""
+    from repro.serve.engine import KVServeEngine
+
+    d0, d1 = str(tmp_path / "s0"), str(tmp_path / "s1")
+    _seed_store(d0, n=200)
+    # second shard over a disjoint key range
+    db = RemixDB.open(d1, _cfg())
+    _fill(db, 1000, 1200)
+    db.flush()
+    db.close()
+
+    eng = KVServeEngine([(0, d0), (1000, d1)], config=_cfg())
+    try:
+        assert eng.health()["status"] == "ok"
+        reports = eng.scrub(full=True)
+        assert len(reports) == 2 and all(r["clean"] for r in reports)
+    finally:
+        eng.close()
+
+    sst = _files(d0, "tables", "*.sst")
+    flip_bytes(sst[0], os.path.getsize(sst[0]) // 2, 4)
+    eng = KVServeEngine([(0, d0), (1000, d1)], config=_cfg())
+    try:
+        reports = eng.scrub(full=True)
+        assert not reports[0]["clean"] and reports[1]["clean"]
+        h = eng.health()
+        assert h["status"] == "degraded"
+        assert h["shards"]["0"]["status"] == "degraded"
+        assert h["shards"]["1000"]["status"] == "ok"
+        assert h["corruption_detected"] >= 1
+        # the healthy shard keeps serving
+        v = eng.get(1005)
+        assert v is not None and int(v[0]) == 1005
+        with pytest.raises(UnavailableSpanError):
+            eng.get(0)
+    finally:
+        eng.close()

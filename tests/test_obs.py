@@ -208,8 +208,14 @@ def test_store_stats_keys_unchanged(tmp_path):
     assert set(s) == {
         "partitions", "tables", "entries", "resident_tables", "memtable",
         "wa", "wal_blocks", "disk_bytes_read", "cold", "versions",
-        "compaction", "engine", "cache",
+        "compaction", "health", "engine", "cache",
     }
+    assert set(s["health"]) == {
+        "status", "unavailable", "quarantine_files", "partitions", "io",
+        "corruption_detected", "scrub", "repair",
+    }
+    assert s["health"]["status"] == "ok"
+    assert s["health"]["partitions"][0]["degraded"] is False
     assert set(s["compaction"]) == {
         "rounds", "bytes_written", "kinds", "log_rounds", "in_flight"
     }
@@ -230,9 +236,10 @@ def test_store_stats_keys_unchanged(tmp_path):
     eng = s["engine"]
     assert set(eng) == {
         "batches", "completed", "cancelled_batches", "ops",
-        "deadline_exceeded", "cancelled_ops", "errors", "queue_depth",
-        "workers", "admission", "shards",
+        "deadline_exceeded", "cancelled_ops", "errors", "io_errors",
+        "queue_depth", "workers", "admission", "shards",
     }
+    assert eng["io_errors"] == 0
     assert eng["ops"] == {
         "get": 1, "multiget": 0, "scan": 0, "put": 1, "delete": 0,
         "delete_range": 0, "cas": 0,
@@ -501,3 +508,52 @@ def test_write_surface_counters_and_drop_event(tmp_path):
     finally:
         clock.reset()
         db.close()
+
+
+# ------------------------------------------ durability counters & events
+def test_scrub_counters_and_events(tmp_path):
+    """The scrub/repair lifecycle lands in the registry and event log:
+    a clean pass ticks scrub_passes/scrub_bytes_read only; an injected
+    REMIX corruption adds corruption_detected + repair_remix_rebuilt and
+    emits corruption -> repair -> scrub events in causal order."""
+    import glob as _glob
+
+    from repro.db.store import RemixDB, RemixDBConfig
+    from repro.io.faults import flip_bytes
+
+    db = RemixDB.open(
+        str(tmp_path / "db"), RemixDBConfig(memtable_entries=1 << 30)
+    )
+    _fill(db)
+    db.flush()
+    rep = db.scrub(full=True)
+    assert rep["clean"] and rep["bytes_read"] > 0
+    c = lambda n: db.registry.counter(n).value
+    assert c("scrub_passes") == 1
+    assert c("scrub_bytes_read") == rep["bytes_read"]
+    assert c("corruption_detected") == 0
+    db.close()
+
+    rx = sorted(_glob.glob(str(tmp_path / "db" / "remix" / "*.rmx")))
+    flip_bytes(rx[0], 64, 4)
+    db2 = RemixDB.open(
+        str(tmp_path / "db"), RemixDBConfig(memtable_entries=1 << 30)
+    )
+    rep = db2.scrub(full=True)
+    assert not rep["clean"] and rep["repaired"]
+    c = lambda n: db2.registry.counter(n).value
+    assert c("corruption_detected") >= 1
+    assert c("repair_remix_rebuilt") == 1
+    assert c("repair_table_quarantined") == 0
+    kinds = [e.kind for e in db2.events.list()]
+    assert kinds.index("corruption") < kinds.index("repair") \
+        < kinds.index("scrub")
+    ev = db2.events.list(kind="corruption")[-1]
+    assert ev.fields["target"] == "remix"
+    # the new names surface through metrics() for Prometheus rendering
+    names = {s["name"] for s in db2.metrics()["metrics"]}
+    assert {"scrub_passes", "scrub_bytes_read", "corruption_detected",
+            "repair_remix_rebuilt", "repair_table_quarantined",
+            "quarantine_purged", "io_retry", "io_giveup"} <= names
+    assert db2.scrub(full=True)["clean"]
+    db2.close()

@@ -21,6 +21,8 @@ from repro.db.compaction import CompactionConfig
 from repro.db.store import RemixDB, RemixDBConfig
 from repro.io import manifest as manifest_mod
 
+pytestmark = pytest.mark.faults  # nightly fault-matrix profile (ci.yml)
+
 
 def _cfg(**kw):
     return RemixDBConfig(
@@ -125,10 +127,10 @@ def _commit_bomb(monkeypatch, fail_on):
     path containing ``fail_on`` (CURRENT flip or MANIFEST body)."""
     real = manifest_mod._atomic_write
 
-    def bomb(path, data):
+    def bomb(path, data, io=None):
         if fail_on in os.path.basename(path):
             raise OSError(f"injected crash writing {os.path.basename(path)}")
-        return real(path, data)
+        return real(path, data, io=io)
 
     monkeypatch.setattr(manifest_mod, "_atomic_write", bomb)
     return lambda: monkeypatch.setattr(

@@ -4,11 +4,17 @@
 
     obstool.py show snap.json [--prom] [--filter SUBSTR]
     obstool.py diff before.json after.json [--filter SUBSTR]
+    obstool.py health DATA_DIR [--scrub] [--json]
 
 ``show`` pretty-prints every sample (or the Prometheus text exposition
 with ``--prom``); ``diff`` prints per-sample deltas — counter increases,
 histogram count/sum growth with current p50/p99, gauge before→after.
 ``--filter`` keeps samples whose metric name contains the substring.
+``health`` opens a store read-only-style, prints its durability summary
+(``RemixDB.health()``), optionally running a full synchronous scrub
+first (``--scrub`` — detection *and* self-repair, see
+docs/ARCHITECTURE.md "Durability, scrubbing & repair"); exits non-zero
+when the store is degraded.
 """
 from __future__ import annotations
 
@@ -84,6 +90,55 @@ def _diff(args) -> int:
     return 0
 
 
+def _health(args) -> int:
+    import json
+
+    from repro.db.store import RemixDB
+
+    db = RemixDB.open(args.data_dir)
+    try:
+        scrub_report = db.scrub(full=True) if args.scrub else None
+        h = db.health()
+    finally:
+        db.close()
+    if args.json:
+        out = dict(health=h)
+        if scrub_report is not None:
+            out["scrub"] = scrub_report
+        print(json.dumps(out, indent=2, sort_keys=True))
+    else:
+        print(f"status: {h['status']}")
+        if scrub_report is not None:
+            print(
+                f"scrub: clean={scrub_report['clean']} "
+                f"files={scrub_report['files_checked']} "
+                f"bytes={scrub_report['bytes_read']} "
+                f"repaired={len(scrub_report['repaired'])} "
+                f"quarantined={len(scrub_report['quarantined'])}"
+            )
+        print(
+            f"corruption_detected: {h['corruption_detected']}  "
+            f"io_retries: {h['io']['retries']}  "
+            f"io_giveups: {h['io']['giveups']}"
+        )
+        print(
+            f"repair: remix_rebuilt={h['repair']['remix_rebuilt']} "
+            f"tables_quarantined={h['repair']['tables_quarantined']} "
+            f"quarantine_purged={h['repair']['quarantine_purged']}"
+        )
+        print(f"quarantine_files: {h['quarantine_files']}")
+        for p in h["partitions"]:
+            flag = "DEGRADED" if p["degraded"] else "ok"
+            print(f"  partition lo={p['lo']} tables={p['tables']} [{flag}]")
+        for s in h["unavailable"]:
+            hi = "inf" if s["hi"] is None else s["hi"]
+            print(
+                f"  unavailable span [{s['lo']}, {hi}] "
+                f"(quarantined: {', '.join(s['tables'])})"
+            )
+    return 0 if h["status"] == "ok" else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="obstool", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -99,6 +154,16 @@ def main(argv=None) -> int:
     pd.add_argument("after")
     pd.add_argument("--filter", default=None)
     pd.set_defaults(fn=_diff)
+    ph = sub.add_parser(
+        "health", help="durability summary (optionally scrub first)"
+    )
+    ph.add_argument("data_dir")
+    ph.add_argument("--scrub", action="store_true",
+                    help="run a full synchronous scrub (detect + repair) "
+                         "before reporting")
+    ph.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ph.set_defaults(fn=_health)
     args = ap.parse_args(argv)
     return args.fn(args)
 
