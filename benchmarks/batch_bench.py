@@ -221,6 +221,45 @@ def bench_query_matrix(root: str, domain: np.ndarray) -> list[dict]:
     return rows
 
 
+def bench_device_vs_host(root: str, domain: np.ndarray, csv: CSV) -> dict:
+    """Promoted-path comparison: the persistent device view
+    (``device_path="on"`` — interpret mode on CPU) vs the legacy host
+    vectorized path, batch-256 gets and 64x16 scans, parity asserted.
+    ``benchmarks/kernels_bench.py`` owns the sync-count and real-device
+    speedup bars; this row tracks the same pipeline on the query store."""
+    rng = np.random.default_rng(23)
+    keys = _probe(domain, rng, 256)
+    starts = np.sort(rng.choice(domain[:-200], 64, replace=False))
+    out = {}
+    for mode in ("off", "on"):
+        db = RemixDB.open(root, RemixDBConfig(cold_reads=False,
+                                              device_path=mode))
+        f, v = db.get_batch(keys)  # warm: upload / jit / cache
+        db.scan_batch(starts, 16)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            db.get_batch(keys)
+        tg = (time.perf_counter() - t0) / 3
+        t0 = time.perf_counter()
+        for _ in range(3):
+            db.scan_batch(starts, 16)
+        ts = (time.perf_counter() - t0) / 3
+        out[mode] = (f, v, tg, ts)
+        db.close()
+    (fh, vh, hg, hs), (fd, vd, dg, ds) = out["off"], out["on"]
+    assert np.array_equal(fh, fd) and np.array_equal(vh[fh], vd[fd])
+    csv.emit("batch_device_get256", dg / 256 * 1e6,
+             f"host={hg / 256 * 1e6:.2f}us")
+    csv.emit("batch_device_scan64x16", ds / 64 * 1e6,
+             f"host={hs / 64 * 1e6:.2f}us")
+    return dict(
+        get_us_device=round(dg / 256 * 1e6, 3),
+        get_us_host=round(hg / 256 * 1e6, 3),
+        scan_us_device=round(ds / 64 * 1e6, 2),
+        scan_us_host=round(hs / 64 * 1e6, 2),
+    )
+
+
 def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
     r_tables, n_per_table = SIZES["tiny" if tiny else "full"]
     with tempfile.TemporaryDirectory(prefix="batch-bench-") as tmp:
@@ -233,6 +272,7 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
         bench_prefetch_scan(root, domain, csv)
         savings = bench_ckb_decoder(root, domain, csv, strict=not tiny)
         matrix = bench_query_matrix(root, domain)
+        device = bench_device_vs_host(root, domain, csv)
     csv.emit(
         "batch_summary", 0.0,
         f"r_tables={r_tables};n_per_table={n_per_table};"
@@ -252,6 +292,7 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
                 multiget_speedup_at_256=round(speedup, 2),
                 ckb_decode_savings=round(savings, 3),
                 queries=matrix,
+                device_vs_host=device,
             ),
             f,
             indent=2,

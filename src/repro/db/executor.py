@@ -203,8 +203,9 @@ class _ReadGroup:
         self.gets: list[int] = []  # op indices
         # (op_idx, positions into op.keys routed to this shard)
         self.mgets: list[tuple[int, np.ndarray]] = []
-        # (n, with_vals) -> op indices starting in this shard
-        self.scans: dict[tuple[int, bool], list[int]] = {}
+        # with_vals -> op indices starting in this shard; scans of
+        # different n share one heterogeneous group (merged row windows)
+        self.scans: dict[bool, list[int]] = {}
         self.priority = 0
 
 
@@ -472,7 +473,7 @@ class Executor:
                     g.priority = max(g.priority, op.priority)
             else:  # SCAN: starts in its owning shard, may drain onward
                 g = self._group(st, self._route_one(op.start))
-                g.scans.setdefault((op.n, op.with_vals), []).append(i)
+                g.scans.setdefault(op.with_vals, []).append(i)
                 g.priority = max(g.priority, op.priority)
         return stages
 
@@ -767,19 +768,20 @@ class Executor:
             mg[i][1][pos] = v
 
     def _exec_scans(self, fut, batch, deadlines, results, g, view):
-        for (n, with_vals), idxs in g.scans.items():
+        for with_vals, idxs in g.scans.items():
             live = self._precheck(fut, deadlines, results, idxs)
             if not live:
                 continue
             starts = np.array(
                 [batch.ops[i].start for i in live], np.uint64
             )
+            ns = np.array([batch.ops[i].n for i in live], np.int64)
             checks = [
                 self._interrupt_for(fut, deadlines[i]) for i in live
             ]
             try:
                 rows = self.stores[g.shard]._scan_group_at(
-                    view(g.shard), starts, n,
+                    view(g.shard), starts, ns,
                     with_vals=with_vals, interrupts=checks,
                 )
             except _IO_ERRORS:
@@ -790,8 +792,8 @@ class Executor:
                 for i, chk in zip(live, checks):
                     try:
                         kk, vv = self.stores[g.shard]._scan_at(
-                            view(g.shard), batch.ops[i].start, n,
-                            interrupt=chk,
+                            view(g.shard), batch.ops[i].start,
+                            batch.ops[i].n, interrupt=chk,
                         )
                         rows.append((kk, vv if with_vals else None))
                     except OpInterrupted as e2:
@@ -814,8 +816,8 @@ class Executor:
                 kk, vv = row
                 try:
                     kk, vv = self._drain_scan(
-                        fut, deadlines[i], g.shard, kk, vv, n, with_vals,
-                        view,
+                        fut, deadlines[i], g.shard, kk, vv,
+                        batch.ops[i].n, with_vals, view,
                     )
                 except OpInterrupted as e:
                     results[i] = OpResult(status=e.status)

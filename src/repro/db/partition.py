@@ -240,8 +240,18 @@ class Table:
 
     def prefetch_rows(self, section: str, lo: int, hi: int) -> None:
         """Issue cache loads for the granules covering rows [lo, hi)."""
+        self.prefetch_blocks(self.row_block_ids(section, lo, hi))
+
+    def row_block_ids(self, section: str, lo: int, hi: int):
+        """Granule ids covering rows [lo, hi) of one section (no I/O).
+        Ids are file-absolute, so adjacent sections sharing a boundary
+        granule report the same id — callers dedupe across sections."""
+        return self._rd().section_row_blocks(section, lo, hi)
+
+    def prefetch_blocks(self, ids) -> None:
+        """Issue cache loads for an explicit granule id set."""
         rd = self._rd()
-        for bi in rd.section_row_blocks(section, lo, hi):
+        for bi in ids:
             rd.prefetch_block(bi)
 
     def seek_rows_batch(self, qs: np.ndarray, los, his,
@@ -1005,13 +1015,25 @@ class Partition:
             chunk_ranges.append(rng)
         ks_out: list[np.ndarray] = []
         vs_out: list[np.ndarray] = []
+        issued: set[tuple[int, int]] = set()  # (run, granule) already sent
         for ci, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
             for cj in range(ci + 1, min(ci + 1 + depth, len(chunk_ranges))):
                 for r in range(nrun):
                     lo2, hi2 = chunk_ranges[cj][r]
-                    if hi2 > lo2:
-                        self.tables[r].prefetch_rows("vals", lo2, hi2)
-                        self.tables[r].prefetch_rows("tomb", lo2, hi2)
+                    if hi2 <= lo2:
+                        continue
+                    # one deduped issue set per (chunk, run): the vals
+                    # and tomb sections share boundary granules, and
+                    # successive lookahead windows revisit chunks — each
+                    # granule is issued to the cache at most once per
+                    # window emission
+                    t = self.tables[r]
+                    ids = set(t.row_block_ids("vals", lo2, hi2))
+                    ids.update(t.row_block_ids("tomb", lo2, hi2))
+                    fresh = [bi for bi in sorted(ids)
+                             if (r, bi) not in issued]
+                    issued.update((r, bi) for bi in fresh)
+                    t.prefetch_blocks(fresh)
             inb = (slots >= a) & (slots < b) & newest
             if not inb.any():
                 continue
@@ -1160,13 +1182,15 @@ class Partition:
 
         return fetch
 
-    def cold_scan_batch(self, starts, width: int) -> list[tuple]:
+    def cold_scan_batch(self, starts, width) -> list[tuple]:
         """Batched :meth:`cold_scan`: one vectorized anchors search and
         one grouped per-run seek for the whole batch, then per-query
         selector walks whose touched row spans are **coalesced per run**
         (``merge_ranges``) before fetching — interleaved scan windows
         share granules, and each touched (file, block) granule is read
-        at most once for the batch. Returns a list of per-query
+        at most once for the batch. ``width`` may be a scalar or a (Q,)
+        array — heterogeneous scan groups merge their row windows into
+        the same coalesced fetch set. Returns a list of per-query
         ``(keys, vals, more)`` triples, bit-identical to cold_scan.
 
         (No prefetch pipeline here: the batch path already fetches every
@@ -1174,6 +1198,7 @@ class Partition:
         dominates group-ahead prefetching.)"""
         starts = np.asarray(starts, np.uint64)
         q = len(starts)
+        widths = np.zeros(q, np.int64) + np.asarray(width, np.int64)
         vw = self.tables[0].vw if self.tables else 2
         empty = (np.zeros(0, np.uint64), np.zeros((0, vw), np.uint32), False)
         if q == 0 or not self.tables:
@@ -1190,7 +1215,7 @@ class Partition:
         ranges_by_run: list[list[tuple[int, int]]] = [[] for _ in range(nrun)]
         for i in range(q):
             pos, stop, valid, win, rows_abs, newest = self._walk_window(
-                hx, int(g[i]), cur[i], nextrow[i], width
+                hx, int(g[i]), cur[i], nextrow[i], int(widths[i])
             )
             er = (win & 0x7F)[newest]
             erow = rows_abs[newest]
@@ -1276,13 +1301,94 @@ class Partition:
         Exact for point/scan results: a covered or expired newest version
         decodes as a tombstone slot, and any newer uncovered version
         lives in a later-born table the span doesn't cover."""
-        dead = t.dead(now)
+        return t.dead(now) | self._span_cover(t)
+
+    def _span_cover(self, t: Table) -> np.ndarray:
+        """(N,) bool: rows of ``t`` hidden by an excised span covering it
+        — structural deadness (a covered row can never revive), safe to
+        bake into any uploaded view regardless of the query clock."""
+        dead = np.zeros(t.n, bool)
         for sp in self.excised:
             if sp.covers_table(t):
                 m = (t.keys >= np.uint64(sp.lo)) & (t.keys < np.uint64(sp.hi))
                 if m.any():
                     dead = dead | m
         return dead
+
+    # ---------------- device-resident view (kernels/device_view.py) ----
+    def device_view_bytes(self, with_vals: bool = True) -> int:
+        """Estimated padded device-buffer bytes of :meth:`device_index`
+        (header-cheap: no section loads) — the upload/tier decision input
+        of the :class:`~repro.kernels.device_view.DeviceViewManager`."""
+        tabs = self.tables
+        r2 = _pow2(max(1, len(tabs)), 1)
+        n2 = _pow2(max((t.n for t in tabs), default=1), 64)
+        d = max(self.d, len(tabs))
+        kw = 2
+        vw = (tabs[0].vw if tabs else 2) if with_vals else 1
+        g2 = _pow2(max(1, -(-self.n_entries // d)), 4)
+        per_row = 4 * kw + 4 * vw + 4 + 1 + 4  # keys+vals+seq+tomb+exp
+        return int(g2 * (4 * kw + 4 * r2 + d) + r2 * n2 * per_row + r2 * 4)
+
+    def device_index(self, with_vals: bool = True):
+        """Padded ``(remix, runset, exp)`` for the device-resident view.
+
+        Unlike :meth:`index`, liveness is *not* baked at build time: the
+        runset tombstones carry only real tombstones plus excised-span
+        coverage (structural), and the per-row TTL expiry words ride
+        along as a padded (R, Nmax) uint32 array so the device evaluates
+        ``tomb | (exp != 0 & exp <= now)`` at query time — bit-for-bit
+        the :meth:`_build_dead` set at the same instant, and a persistent
+        view never goes stale when the clock passes an expiry.
+
+        With ``with_vals=False`` (the index-only residency tier) the
+        value sections stay host-side: the runset carries 1-word dummy
+        values and callers gather real value granules through the
+        BlockCache from the returned (run, row) coordinates.
+
+        Shares the REMIX structure cache (``_built_remix`` /
+        incremental rebuilds) with :meth:`index` — the structure is
+        liveness-independent, so the two paths reuse each other's build.
+        """
+        tabs = self.tables or [
+            Table(
+                keys=np.zeros(0, np.uint64),
+                vals=np.zeros((0, 2), np.uint32),
+                seq=np.zeros(0, np.uint32),
+                tomb=np.zeros(0, bool),
+            )
+        ]
+        d = max(self.d, len(tabs))  # paper requires D >= R
+        runs, exps = [], []
+        for t in tabs:
+            dead = np.asarray(t.tomb, bool) | self._span_cover(t)
+            vals = t.vals if with_vals else np.zeros((t.n, 1), np.uint32)
+            runs.append(
+                make_run(t.keys, vals, seq=t.seq, tomb=dead, sort=False)
+            )
+            exps.append(
+                np.asarray(t.exp, np.uint32)
+                if t.ttl_present()
+                else np.zeros(t.n, np.uint32)
+            )
+        remix = self._try_incremental(tabs, d)
+        if remix is not None:
+            from repro.core.runs import stack_runs
+
+            runset = stack_runs(runs)
+        else:
+            remix, runset = build_remix(runs, d=d)
+            self.last_build_kind = "scratch"
+        self._built_remix = remix
+        self._built_tables = list(tabs) if self.tables else []
+        self.remix_bytes = int(remix.storage_bytes())
+        remix_p, runset_p = _pad_index(remix, runset, d)
+        exp_p = np.zeros((runset_p.r, runset_p.nmax), np.uint32)
+        for i, e in enumerate(exps):
+            exp_p[i, : len(e)] = e
+        import jax.numpy as jnp
+
+        return remix_p, runset_p, jnp.asarray(exp_p)
 
     def _try_incremental(self, tabs: list[Table], d: int) -> Remix | None:
         """Reuse/extend the last built REMIX when this rebuild only appended

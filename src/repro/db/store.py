@@ -102,6 +102,22 @@ class RemixDBConfig:
     # hits included) — reaches this fraction of its data region; the
     # decision inputs are exposed in stats()["cache"]["promotion"]
     promote_fraction: float = 0.5
+    # ---- device-resident query execution (docs/ARCHITECTURE.md) ----
+    # promoted-partition read routing: "auto" answers promoted reads
+    # from persistent device views when a real accelerator backend is
+    # attached; "on" forces the device path everywhere (on CPU the
+    # kernels run in Pallas interpret mode — the CI parity
+    # configuration); "off" keeps the legacy jitted host-array path
+    device_path: str = "auto"
+    # HBM byte budget for resident device views (LRU-evicted under
+    # upload pressure; views whose partition left every live Version
+    # are dropped at release). A partition that fits neither residency
+    # tier falls back to the legacy path (device_fallback_total)
+    device_budget_bytes: int = 256 << 20
+    # batch-slice width of the host/device overlapped value pipeline
+    # (index-only tier: the device resolves row windows for slice i+1
+    # while the host gathers value granules for slice i)
+    device_slice: int = 64
     # cold-scan pipelining (paper Fig 10): while one selector group's
     # rows are emitted, issue the next `prefetch_depth` groups'
     # value/tomb blocks into the cache; 0 = eager (fetch on demand).
@@ -198,6 +214,13 @@ class RemixDB:
             )
         if self.cfg.prefetch_depth < 0:
             raise ValueError("prefetch_depth must be >= 0")
+        if self.cfg.device_path not in ("auto", "on", "off"):
+            raise ValueError(
+                f"device_path must be 'auto', 'on' or 'off', "
+                f"got {self.cfg.device_path!r}"
+            )
+        if self.cfg.device_slice < 1:
+            raise ValueError("device_slice must be >= 1")
         # observability: one registry + one lifecycle event log shared by
         # every layer this store owns (cache, WAL, versions, executor);
         # metrics=False hands out no-op instruments and a null event log
@@ -212,6 +235,23 @@ class RemixDB:
             if self.cfg.metrics
             else NULL_EVENTS
         )
+        # device-resident query views for promoted partitions: persistent
+        # HBM buffers + the fused batched execution driver. "auto" only
+        # engages on a real accelerator backend; "on" forces the path
+        # (Pallas interpret mode on CPU — how CI parity-tests it)
+        self.device_views = None
+        if self.cfg.device_path == "on" or (
+            self.cfg.device_path == "auto"
+            and jax.default_backend() not in ("cpu",)
+        ):
+            from repro.kernels.device_view import DeviceViewManager
+
+            self.device_views = DeviceViewManager(
+                self.cfg.device_budget_bytes,
+                slice_width=self.cfg.device_slice,
+                registry=self.registry,
+                events=self.events,
+            )
         self.mem = MemTable(vw=self.cfg.vw)
         # durability plumbing: one IOContext (fault plan + bounded retry)
         # threaded under every file this store reads or writes
@@ -596,6 +636,12 @@ class RemixDB:
         )
         if retired:  # hooks run on whichever thread unpins
             self._c_retired_bytes.inc(retired)
+        if self.device_views is not None:
+            # device-side leg of the pin lifecycle: views whose partition
+            # is in no live Version release their HBM with the Version
+            self.device_views.retain(
+                {id(p) for v in remaining for p in v.partitions}
+            )
         if self.storage is not None:
             self._gc_files()
 
@@ -1259,6 +1305,14 @@ class RemixDB:
             return {}
         return dict(ingroup=self._ingroup)
 
+    def _device_view(self, p: Partition):
+        """Resident device view for a promoted partition (uploaded on
+        first use), or None — disabled, over budget, or ineligible —
+        in which case callers answer from the legacy jitted path."""
+        if self.device_views is None:
+            return None
+        return self.device_views.view_for(p)
+
     def _cold_ok(self, p: Partition) -> bool:
         """Serve this partition via block-granular cold reads?
 
@@ -1325,6 +1379,12 @@ class RemixDB:
         if self._cold_ok(p):
             found, val = p.cold_get(int(key))
             return val if found else None
+        dv = self._device_view(p)
+        if dv is not None:
+            f, v = self.device_views.get_batch(
+                dv, np.array([key], np.uint64), clock.now()
+            )
+            return v[0] if bool(f[0]) else None
         remix, runset = p.index()
         qk = jnp.asarray(CK.pack_u64(np.array([key], np.uint64)))
         found, val = self._query_mod().get(remix, runset, qk, **self._qkw())
@@ -1362,6 +1422,12 @@ class RemixDB:
                     f, v = p.cold_get_batch(keys[sel])
                     found[sel] = f
                     vals[sel[f]] = v[f]
+                    continue
+                dv = self._device_view(p)
+                if dv is not None:
+                    f, v = self.device_views.get_batch(dv, keys[sel], now)
+                    found[sel] = f
+                    vals[sel] = v
                     continue
                 remix, runset = p.index()
                 kq = keys[sel]
@@ -1413,11 +1479,14 @@ class RemixDB:
             out_m[i, : len(kk)] = True
         return out_k, out_m
 
-    def _scan_group_at(self, view: Snapshot, starts, n: int,
+    def _scan_group_at(self, view: Snapshot, starts, n,
                        with_vals: bool = True, interrupts=None) -> list:
         """Vectorized group of range scans over one pinned view: the
         physical primitive behind Scan ops, ``scan_batch`` and the serve
-        engine's batched scans.
+        engine's batched scans. ``n`` may be a scalar or a (Q,) array —
+        heterogeneous scan groups merge their row windows so overlapping
+        scans of different lengths share granule fetches (cold path) and
+        one jitted window call (promoted path).
 
         One jitted (or cold batched) window call per touched partition;
         per query the window is clipped to the partition span, and any
@@ -1440,16 +1509,20 @@ class RemixDB:
             for s in starts.tolist():
                 self._check_unavailable_scan(int(s))
         checks = interrupts if interrupts is not None else [None] * q
-        if n <= 0:
-            empty_v = np.zeros((0, self.cfg.vw), np.uint32)
-            return [
-                (np.zeros(0, np.uint64), empty_v if with_vals else None)
-            ] * q
+        ns = np.zeros(q, np.int64) + np.asarray(n, np.int64)
+        empty_v = np.zeros((0, self.cfg.vw), np.uint32)
+        empty_row = (np.zeros(0, np.uint64), empty_v if with_vals else None)
+        out: list = [None] * q
+        act = ns > 0
+        for qi in np.flatnonzero(~act):
+            out[qi] = empty_row
+        if not act.any():
+            return out
 
         def row_fallback(qi):
             try:
                 kk, vv = self._scan_at(
-                    view, int(starts[qi]), n, interrupt=checks[qi]
+                    view, int(starts[qi]), int(ns[qi]), interrupt=checks[qi]
                 )
             except OpInterrupted as e:
                 return e
@@ -1462,28 +1535,48 @@ class RemixDB:
         # non-empty overlay (entries or unflushed range tombstones)
         # merge per query through the cursor too.
         if q == 1 or view.overlay or view.ranges:
-            return [row_fallback(qi) for qi in range(q)]
-        out: list = [None] * q
+            return [
+                out[qi] if out[qi] is not None else row_fallback(qi)
+                for qi in range(q)
+            ]
         parts = view.partitions
         spans = partition_spans([p.lo for p in parts])
         pidx = route_host([p.lo for p in parts], starts)
-        width = n + max(8, n // 2)
-        for pi in np.unique(pidx):
-            sel = np.flatnonzero(pidx == pi)
+        widths = ns + np.maximum(8, ns // 2)
+        for pi in np.unique(pidx[act]):
+            sel = np.flatnonzero((pidx == pi) & act)
             p = parts[pi]
             hi = spans[pi][1]
 
             def emit_row(qi, kk, vv):
+                nn = int(ns[qi])
                 m = kk < hi  # clip to the partition's key span
-                kk = kk[m][:n]
-                if len(kk) < n:
+                kk = kk[m][:nn]
+                if len(kk) < nn:
                     out[qi] = row_fallback(qi)
                     return
-                out[qi] = (kk, vv[m][:n] if with_vals else None)
+                out[qi] = (kk, vv[m][:nn] if with_vals else None)
 
             if self._cold_ok(p):
+                # per-query widths: the coalesced fetch set merges row
+                # windows across different n values (shared granules)
                 for qi, (kk, vv, _) in zip(
-                    sel, p.cold_scan_batch(starts[sel], width)
+                    sel, p.cold_scan_batch(starts[sel], widths[sel])
+                ):
+                    emit_row(qi, kk, vv)
+                continue
+            # promoted: one fixed-width window call per partition (jit
+            # shape-stability); max width over the group, per-query n
+            # clipping keeps results bit-identical to per-n groups
+            width = int(widths[sel].max())
+            dv = self._device_view(p)
+            if dv is not None:
+                for qi, (kk, vv) in zip(
+                    sel,
+                    self.device_views.scan_windows(
+                        dv, starts[sel], width, clock.now(),
+                        with_vals=with_vals,
+                    ),
                 ):
                     emit_row(qi, kk, vv)
                 continue

@@ -3,7 +3,9 @@
   - selector_decode: in-group occurrence decode (paper §3.2 SIMD counting)
   - anchor_search:   batched compare-and-count anchor index search
   - ops:             jit'd wrappers composing kernels into seek/get/scan
+  - device_view:     HBM residency manager + fused device-batch driver
 """
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.anchor_search import anchor_le_count, anchor_search  # noqa: F401
+from repro.kernels.device_view import DeviceView, DeviceViewManager  # noqa: F401
 from repro.kernels.selector_decode import selector_decode  # noqa: F401

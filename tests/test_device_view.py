@@ -1,0 +1,242 @@
+"""Device-resident query execution tests: differential parity between
+the fused device path (interpret mode on CPU), the host promoted path
+and the cold path — including tombstones, TTL expiry evaluated at query
+time, and range-tombstone excised spans — plus residency-manager
+behavior (budget tiers, LRU + version-release eviction, counters and
+events) and the index-tier host/device gather pipeline."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.kernels.device_view as device_view
+from repro.db import clock
+from repro.db.compaction import CompactionConfig
+from repro.db.store import RemixDB, RemixDBConfig
+
+T0 = 1_000_000.0
+TTL = 50.0
+
+SEEDS = [0, 1, 2, 3]
+NIGHTLY_SEEDS = list(range(4, 20))
+
+
+def _cfg(**kw):
+    kw.setdefault("hot_threshold", 255)
+    kw.setdefault("memtable_entries", 128)
+    kw.setdefault("compaction", CompactionConfig(table_cap=128, t_max=3))
+    return RemixDBConfig(vw=2, **kw)
+
+
+def _metric(db, name):
+    vals = [s["value"] for s in db.registry.snapshot()["metrics"]
+            if s["name"] == name]
+    assert vals, f"metric {name} not registered"
+    return sum(vals)
+
+
+def _populate(root, seed, n=500):
+    """Mixed workload: puts, overwrites, deletes, TTL'd puts and one
+    range delete — flushed to disk. Returns the touched key domain."""
+    clock.set_source(lambda: T0)
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(1 << 20, size=n, replace=False).astype(np.uint64)
+    db = RemixDB.open(root, _cfg(device_path="off"))
+    try:
+        for i, k in enumerate(keys.tolist()):
+            db.put(k, [i & 0xFFFF, i ^ 7])
+        for k in keys[: n // 10].tolist():
+            db.delete(k)
+        for k in keys[n // 10: n // 5].tolist():
+            db.put(k, [9, 9], ttl=TTL)  # expires at T0 + TTL
+        lo = int(keys[n // 4])
+        db.delete_range(lo, lo + 4096)
+        db.flush()
+    finally:
+        db.close()
+    return np.sort(keys)
+
+
+def _probe_set(domain, rng):
+    """Hits, deleted keys, TTL keys, excised keys and misses."""
+    probe = np.concatenate(
+        [domain, rng.choice(domain, 64, replace=False) + 1, [0, (1 << 21)]]
+    ).astype(np.uint64)
+    rng.shuffle(probe)
+    return probe
+
+
+def _row_eq(a, b):
+    ka, va = a
+    kb, vb = b
+    np.testing.assert_array_equal(ka, kb)
+    if va is None or vb is None:
+        assert va is None and vb is None
+    else:
+        np.testing.assert_array_equal(va, vb)
+
+
+def _assert_stores_agree(dev, host, domain, rng):
+    probe = _probe_set(domain, rng)
+    f_h, v_h = host.get_batch(probe)
+    f_d, v_d = dev.get_batch(probe)
+    np.testing.assert_array_equal(f_h, f_d)
+    np.testing.assert_array_equal(v_h[f_h], v_d[f_d])
+    starts = np.sort(rng.choice(domain, 24, replace=False))
+    for n in (1, 7, 33):
+        rows_h = [host.scan(int(s), n) for s in starts]
+        rows_d = [dev.scan(int(s), n) for s in starts]
+        for a, b in zip(rows_h, rows_d):
+            _row_eq(a, b)
+        k_h, m_h = host.scan_batch(starts, n)
+        k_d, m_d = dev.scan_batch(starts, n)
+        np.testing.assert_array_equal(m_h, m_d)
+        np.testing.assert_array_equal(k_h[m_h], k_d[m_d])
+    for k in probe[:48].tolist():
+        a, b = host.get(k), dev.get(k)
+        if a is None or b is None:
+            assert a is None and b is None
+        else:
+            np.testing.assert_array_equal(a, b)
+    return int(f_h.sum())
+
+
+def _parity_one_seed(tmp_path, seed):
+    root = str(tmp_path / "db")
+    domain = _populate(root, seed)
+    rng = np.random.default_rng(seed + 100)
+    dev = RemixDB.open(root, _cfg(device_path="on", cold_reads=False))
+    host = RemixDB.open(root, _cfg(device_path="off", cold_reads=False))
+    cold = RemixDB.open(root, _cfg(device_path="off",
+                                   promote_fraction=1e9))
+    try:
+        found_now = _assert_stores_agree(dev, host, domain, rng)
+        _assert_stores_agree(dev, cold, domain, rng)
+        assert dev.device_views is not None and len(dev.device_views) > 0
+        # advance past every TTL: the device view is NOT re-uploaded —
+        # expiry words are compared against the query clock on device
+        clock.set_source(lambda: T0 + TTL + 10.0)
+        found_later = _assert_stores_agree(dev, host, domain, rng)
+        assert found_later < found_now  # the TTL'd rows really expired
+    finally:
+        clock.reset()
+        dev.close(), host.close(), cold.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_device_parity_differential(tmp_path, seed):
+    _parity_one_seed(tmp_path, seed)
+
+
+@pytest.mark.nightly
+@pytest.mark.parametrize("seed", NIGHTLY_SEEDS)
+def test_device_parity_differential_nightly(tmp_path, seed):
+    _parity_one_seed(tmp_path, seed)
+
+
+def test_index_tier_pipeline_parity(tmp_path):
+    """Budget admits the index tier but not the value sections: the
+    device resolves (run, row) windows, the host gathers value granules
+    through the BlockCache in the double-buffered slice pipeline."""
+    root = str(tmp_path / "db")
+    domain = _populate(root, seed=7)
+    host = RemixDB.open(root, _cfg(device_path="off", cold_reads=False))
+    probe_cfg = RemixDB.open(root, _cfg(device_path="off"))
+    full = min(p.device_view_bytes(True) for p in probe_cfg.partitions)
+    idx = max(p.device_view_bytes(False) for p in probe_cfg.partitions)
+    probe_cfg.close()
+    assert idx < full  # the budget window below admits only the index tier
+    dev = RemixDB.open(root, _cfg(device_path="on", cold_reads=False,
+                                  device_budget_bytes=full - 1,
+                                  device_slice=4))
+    try:
+        rng = np.random.default_rng(8)
+        _assert_stores_agree(dev, host, domain, rng)
+        tiers = {v.tier for v in dev.device_views._views.values()}
+        assert tiers == {"index"}
+        # a 24-query scan at slice width 4 crosses multiple slices: the
+        # pipeline pays one sync per slice, never one per query
+        starts = np.sort(rng.choice(domain, 24, replace=False))
+        s0 = device_view.SYNCS
+        dev.scan_batch(starts, 9)
+        assert device_view.SYNCS - s0 < len(starts)
+    finally:
+        clock.reset()
+        dev.close(), host.close()
+
+
+def test_budget_fallback_and_counters(tmp_path):
+    """A budget no tier fits falls back to the legacy promoted path
+    (counted), with identical results."""
+    root = str(tmp_path / "db")
+    domain = _populate(root, seed=11)
+    host = RemixDB.open(root, _cfg(device_path="off", cold_reads=False))
+    dev = RemixDB.open(root, _cfg(device_path="on", cold_reads=False,
+                                  device_budget_bytes=16))
+    try:
+        rng = np.random.default_rng(12)
+        _assert_stores_agree(dev, host, domain, rng)
+        assert len(dev.device_views) == 0
+        assert _metric(dev, "device_fallback_total") > 0
+        assert _metric(dev, "device_batches") == 0
+        assert _metric(dev, "hbm_resident_bytes") == 0
+    finally:
+        clock.reset()
+        dev.close(), host.close()
+
+
+def test_upload_metrics_and_events(tmp_path):
+    root = str(tmp_path / "db")
+    domain = _populate(root, seed=13)
+    dev = RemixDB.open(root, _cfg(device_path="on", cold_reads=False))
+    try:
+        rng = np.random.default_rng(14)
+        dev.get_batch(rng.choice(domain, 64, replace=False))
+        assert _metric(dev, "device_batches") > 0
+        assert _metric(dev, "device_rows_gathered") > 0
+        resident = _metric(dev, "hbm_resident_bytes")
+        assert resident == dev.device_views.resident_bytes > 0
+        ups = dev.events.list("device_upload")
+        assert ups and all(e.fields["bytes"] > 0 for e in ups)
+        # rewrite every partition: the version release drops stale views
+        clock.set_source(lambda: T0 + 1.0)
+        for k in domain[::3].tolist():
+            dev.put(k, [1, 2])
+        dev.flush()
+        evs = dev.events.list("device_evict")
+        assert evs and any(
+            e.fields["reason"] == "version_release" for e in evs
+        )
+    finally:
+        clock.reset()
+        dev.close()
+
+
+def test_lru_eviction_under_budget_pressure(tmp_path):
+    """A budget that fits one full view but not all partitions keeps the
+    resident set within budget via LRU, with correct results throughout."""
+    root = str(tmp_path / "db")
+    domain = _populate(root, seed=17, n=800)
+    probe_cfg = RemixDB.open(root, _cfg(device_path="off"))
+    per = [p.device_view_bytes(True) for p in probe_cfg.partitions]
+    probe_cfg.close()
+    if len(per) < 2:
+        pytest.skip("workload compacted into a single partition")
+    budget = max(per)  # one view at a time
+    host = RemixDB.open(root, _cfg(device_path="off", cold_reads=False))
+    dev = RemixDB.open(root, _cfg(device_path="on", cold_reads=False,
+                                  device_budget_bytes=budget))
+    try:
+        rng = np.random.default_rng(18)
+        _assert_stores_agree(dev, host, domain, rng)
+        assert dev.device_views.resident_bytes <= budget
+    finally:
+        clock.reset()
+        dev.close(), host.close()
+
+
+def test_store_rejects_bad_device_knobs(tmp_path):
+    with pytest.raises(ValueError):
+        RemixDB.open(str(tmp_path / "a"), _cfg(device_path="maybe"))
+    with pytest.raises(ValueError):
+        RemixDB.open(str(tmp_path / "b"), _cfg(device_slice=0))
