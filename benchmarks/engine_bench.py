@@ -45,6 +45,7 @@ from repro.serve.engine import KVServeEngine
 MIN_MIXED_SPEEDUP = 5.0  # acceptance bar at batch 256
 MIN_PURE_RATIO = 0.5  # submit() vs direct batched call, safety net
 MIN_METRICS_RATIO = 0.95  # metrics-on vs metrics-off throughput floor
+MAX_SNAPSHOT_RATIO = 10.0  # full-memtable snapshot pin vs empty (O(1) bar)
 SCAN_N = 20
 SPLIT = 1 << 40  # shard boundary
 
@@ -287,6 +288,52 @@ def bench_metrics_overhead(roots, domains, csv: CSV, q: int = 256,
     return ratio
 
 
+def bench_snapshot_o1(csv: CSV, tiny: bool = False) -> float:
+    """``RemixDB.snapshot()`` must be O(1) in resident MemTable entries:
+    the layered MemTable freezes its mutable layer instead of copying the
+    overlay dict, so pinning a view of a full memtable costs the same as
+    an empty one. This is what makes the cluster tier's per-batch
+    snapshot pinning and replication captures free."""
+    from repro.db.store import RemixDB
+
+    n = (1 << 12) if tiny else (1 << 15)
+    reps = 300
+
+    def pin_cost(db) -> float:
+        t_best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                db.snapshot().close()
+            t_best = min(t_best, (time.perf_counter() - t0) / reps)
+        return t_best
+
+    with tempfile.TemporaryDirectory(prefix="snap-bench-") as tmp:
+        cfg = RemixDBConfig(memtable_entries=4 * n)
+        db = RemixDB.open(os.path.join(tmp, "db"), cfg)
+        try:
+            empty_s = pin_cost(db)
+            ks = np.arange(n, dtype=np.uint64)
+            db.put_batch(
+                ks, np.stack([ks.astype(np.uint32),
+                              np.ones(n, np.uint32)], 1))
+            assert len(db.mem.data) >= n  # resident, not flushed
+            full_s = pin_cost(db)
+        finally:
+            db.close()
+    ratio = full_s / max(empty_s, 1e-9)
+    csv.emit("engine_snapshot_pin", 1e6 * full_s,
+             f"entries={n};empty_us={1e6 * empty_s:.2f};"
+             f"ratio={ratio:.2f}")
+    if ratio > MAX_SNAPSHOT_RATIO:
+        raise AssertionError(
+            f"snapshot() on a {n}-entry memtable costs {ratio:.1f}x the "
+            f"empty-memtable pin (bar: <= {MAX_SNAPSHOT_RATIO}x — it "
+            f"must not scale with resident entries)"
+        )
+    return ratio
+
+
 def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
     r_tables, n_per_table = SIZES["tiny" if tiny else "full"]
     with tempfile.TemporaryDirectory(prefix="engine-bench-") as tmp:
@@ -315,6 +362,7 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
         estats = eng.stats()["engine"]
         eng.close()
         metrics_ratio = bench_metrics_overhead(roots, domains, csv)
+    snapshot_ratio = bench_snapshot_o1(csv, tiny=tiny)
     csv.emit(
         "engine_summary", 0.0,
         f"r_tables={r_tables};n_per_table={n_per_table};"
@@ -355,6 +403,7 @@ def run(csv: CSV, tiny: bool = False, json_path: str | None = None) -> None:
                 pure_scan_ratio=round(scan_ratio, 3),
                 async_ops_per_s=round(async_tput, 1),
                 metrics_overhead_ratio=round(metrics_ratio, 3),
+                snapshot_pin_ratio_full_vs_empty=round(snapshot_ratio, 3),
                 executor=dict(
                     batches=sum(
                         s["value"]

@@ -21,6 +21,7 @@ def main() -> None:
     from benchmarks import (
         batch_bench,
         cache_bench,
+        cluster_bench,
         cursor_bench,
         engine_bench,
         fig11_queries,
@@ -51,6 +52,8 @@ def main() -> None:
         "cursor": cursor_bench.run,
         # typed op batches through submit() (results/BENCH_engine.json)
         "engine": engine_bench.run,
+        # live shard split + replica catch-up (results/BENCH_cluster.json)
+        "cluster": cluster_bench.run,
     }
     if args.only:
         names = args.only.split(",")

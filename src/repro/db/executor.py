@@ -118,6 +118,8 @@ class BatchFuture(concurrent.futures.Future):
     def __init__(self):
         super().__init__()
         self.interrupted = threading.Event()
+        self._tickets = None  # sequencer tickets (shard -> turn number)
+        self._order_waited = False
 
     def cancel(self) -> bool:
         if super().cancel():
@@ -193,6 +195,70 @@ class AdmissionController:
             )
 
 
+class ShardSequencer:
+    """Per-shard FIFO turn tickets: cross-batch write ordering.
+
+    Async ``submit()`` alone promises nothing about the order two racing
+    batches reach a shard's WAL. The sequencer hands each admitted batch
+    one ticket per shard it will write (atomically, in submission
+    order); a batch waits at its first write stage until every earlier
+    ticket holder for those shards has *finished*, so per-shard write
+    effects always land in submission order. Read-only batches take no
+    tickets and are never delayed.
+
+    Deadlock-free by construction: tickets are issued atomically with
+    enqueue, so a batch only ever waits on strictly earlier batches, and
+    the FIFO worker pool starts jobs in ticket order — a running batch's
+    predecessors are always already running (or finished), never stuck
+    behind it in the queue.
+    """
+
+    def __init__(self, n_shards: int):
+        self._cv = threading.Condition()
+        self._next = [0] * n_shards  # next ticket to issue, per shard
+        self._done = [0] * n_shards  # all tickets < done have finished
+        self._released: list[set] = [set() for _ in range(n_shards)]
+
+    def register(self, shards) -> dict | None:
+        """Issue one ticket per shard in ``shards``; None when empty."""
+        if not shards:
+            return None
+        with self._cv:
+            out = {}
+            for s in shards:
+                out[s] = self._next[s]
+                self._next[s] += 1
+            return out
+
+    def await_turn(self, tickets: dict, interrupted=None) -> bool:
+        """Block until every ticket is first in line (all earlier write
+        batches for those shards finished). Returns False when
+        ``interrupted`` was set while waiting — the caller's ops are
+        about to be CANCELLED, so order no longer matters."""
+        for s in sorted(tickets):
+            t = tickets[s]
+            with self._cv:
+                while self._done[s] < t:
+                    if interrupted is not None and interrupted.is_set():
+                        return False
+                    self._cv.wait(0.05 if interrupted is not None else None)
+        return True
+
+    def release(self, tickets: dict | None) -> None:
+        """Mark a batch finished; out-of-order finishes (a cancelled
+        batch ahead of the line) are parked until the line reaches
+        them."""
+        if not tickets:
+            return
+        with self._cv:
+            for s, t in tickets.items():
+                self._released[s].add(t)
+                while self._done[s] in self._released[s]:
+                    self._released[s].discard(self._done[s])
+                    self._done[s] += 1
+            self._cv.notify_all()
+
+
 class _ReadGroup:
     """Per-(stage, shard) bundle of read work, vectorized at execution."""
 
@@ -241,6 +307,11 @@ class Executor:
         shards = sorted(shards, key=lambda s: int(s[0]))
         self.lows = [int(lo) for lo, _ in shards]
         self.stores = [db for _, db in shards]
+        # [lo, hi) key span each shard owns; scans are clipped to it so a
+        # store holding out-of-span rows (e.g. the source of a live shard
+        # split, which keeps the moved range's files) never leaks them
+        self._spans = partition_spans(self.lows)
+        self.sequencer = ShardSequencer(len(self.stores))
         self.vw = int(self.stores[0].cfg.vw)
         reg = registry if registry is not None else _metrics.MetricsRegistry()
         self.registry = reg
@@ -268,6 +339,7 @@ class Executor:
         self._h_wait = reg.histogram("engine_admission_wait_seconds")
         reg.gauge("engine_queue_depth", fn=lambda: len(self._queue))
         reg.gauge("engine_workers", fn=lambda: len(self._threads))
+        self._c_ordered = reg.counter("engine_ordered_batches")
         self._sampler = _tracing.Sampler(trace_sample_rate)
         self._c_traced = reg.counter("engine_batches_traced")
         self.last_trace: "_tracing.Trace | None" = None
@@ -316,15 +388,57 @@ class Executor:
                          trace=trace, t_sub=t_sub)
             return fut
         if sync:
+            self._register_order(fut, batch)
             self._run(fut, batch, deadlines, results, cost, wait_s,
                       trace=trace, t_sub=t_sub)
             return fut
         with self._qcv:
             self._ensure_workers()
+            # ticket issue and enqueue are atomic (same lock), so queue
+            # order == ticket order and a worker never starts a batch
+            # whose predecessor is still stuck behind it in the queue
+            self._register_order(fut, batch)
             self._queue.append((fut, batch, deadlines, results, cost, wait_s,
                                 trace, _tracing.now(), t_sub))
             self._qcv.notify()
         return fut
+
+    def _register_order(self, fut, batch) -> None:
+        """Issue per-shard write tickets (post-admission, so a batch
+        waiting on its turn always holds budget and its predecessors do
+        too — no admission/ordering deadlock)."""
+        shards = self._write_shards(batch)
+        fut._tickets = self.sequencer.register(shards)
+        if fut._tickets:
+            self._c_ordered.inc()
+
+    def _write_shards(self, batch) -> list[int]:
+        """Shards the batch will write, for sequencer tickets."""
+        if len(self.lows) == 1:
+            if any(op.kind in WRITE_KINDS for op in batch.ops):
+                return [0]
+            return []
+        out: set[int] = set()
+        for op in batch.ops:
+            if op.kind not in WRITE_KINDS:
+                continue
+            if op.kind is OpKind.DELETE_RANGE:
+                for si, (lo, hi) in enumerate(self._spans):
+                    if max(op.start, lo) < min(op.end, hi):
+                        out.add(si)
+            elif op.keys is not None:
+                sids = route_host(
+                    self.lows, np.asarray(op.keys, np.uint64)
+                )
+                out.update(int(s) for s in np.unique(sids))
+            else:
+                out.add(self._route_one(op.key))
+        return sorted(out)
+
+    def _release_order(self, fut) -> None:
+        tickets = getattr(fut, "_tickets", None)
+        fut._tickets = None
+        self.sequencer.release(tickets)
 
     def execute(self, batch: Batch | list) -> BatchResult:
         """Synchronous convenience: ``submit(batch, sync=True).result()``."""
@@ -372,6 +486,7 @@ class Executor:
             if not fut.set_running_or_notify_cancel():
                 # cancelled while queued: give the bytes back, count ops
                 self.admission.release(cost)
+                self._release_order(fut)
                 self._c_cancelled_batches.inc()
                 continue
             self._run(fut, batch, deadlines, results, cost, wait_s,
@@ -381,6 +496,7 @@ class Executor:
              trace=None, t_sub=None, mark_running=True) -> None:
         if mark_running and not fut.set_running_or_notify_cancel():
             self.admission.release(cost)
+            self._release_order(fut)
             self._c_cancelled_batches.inc()
             return
         try:
@@ -404,6 +520,7 @@ class Executor:
     def _finish(self, fut, batch, results, cost, wait_s, started,
                 trace=None, t_sub=None) -> None:
         self.admission.release(cost)
+        self._release_order(fut)
         stats = self._batch_stats(batch, results, wait_s, started)
         self._c_completed.inc()
         self._c_deadline.inc(stats["deadline_exceeded"])
@@ -496,6 +613,14 @@ class Executor:
             with _span(trace, f"stage{idx}:{stage.kind}",
                        ops=len(stage.ops)):
                 if stage.kind == "write":
+                    if fut._tickets and not fut._order_waited:
+                        # first write of the batch: wait for every
+                        # earlier write batch touching these shards
+                        fut._order_waited = True
+                        with _span(trace, "sequence"):
+                            self.sequencer.await_turn(
+                                fut._tickets, fut.interrupted
+                            )
                     self._exec_write_stage(
                         fut, batch, deadlines, results, stage, trace
                     )
@@ -814,6 +939,7 @@ class Executor:
                     results[i] = OpResult(status=row.status)
                     continue
                 kk, vv = row
+                kk, vv = self._clip_to_span(g.shard, kk, vv)
                 try:
                     kk, vv = self._drain_scan(
                         fut, deadlines[i], g.shard, kk, vv,
@@ -828,6 +954,16 @@ class Executor:
                     continue
                 results[i] = OpResult(status=OpStatus.OK, keys=kk, vals=vv)
 
+    def _clip_to_span(self, shard: int, kk, vv):
+        """Drop scan rows past the shard's owned [lo, hi) span. Rows are
+        ascending, so a tail mask suffices; the last shard (hi = 2^64)
+        never clips."""
+        hi = self._spans[shard][1]
+        if hi >= (1 << 64) or len(kk) == 0 or int(kk[-1]) < hi:
+            return kk, vv
+        keep = int(np.searchsorted(kk, np.uint64(hi), side="left"))
+        return kk[:keep], None if vv is None else vv[:keep]
+
     def _drain_scan(self, fut, deadline_at, shard, kk, vv, n, with_vals,
                     view):
         """Cross-shard fan-out of one scan: drain follow-on shards in key
@@ -839,6 +975,7 @@ class Executor:
             k2, v2 = self.stores[si]._scan_at(
                 view(si), self.lows[si], n - len(kk), interrupt=check
             )
+            k2, v2 = self._clip_to_span(si, k2, v2)
             kk = np.concatenate([kk, k2])
             if with_vals:
                 vv = np.concatenate([vv, v2])

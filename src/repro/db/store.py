@@ -194,6 +194,46 @@ def _pow2pad(n: int) -> int:
     return b
 
 
+def partition_entry(p: Partition, rename=None) -> dict:
+    """The manifest entry for one partition (table/REMIX file basenames
+    + excised spans). ``rename`` maps basenames when the files were
+    shipped under fresh names (shard merge into a dir with collisions).
+    """
+    nm = (lambda n: n) if rename is None else (lambda n: rename.get(n, n))
+    return dict(
+        lo=p.lo,
+        tables=[nm(os.path.basename(t.path)) for t in p.tables],
+        remix=None if p.remix_name is None else nm(p.remix_name),
+        excised=[
+            dict(
+                lo=s.lo, hi=s.hi, seq=s.seq,
+                tables=[
+                    nm(os.path.basename(t.path))
+                    for t in s.tables
+                    if t.path is not None
+                ],
+            )
+            for s in p.excised
+        ],
+    )
+
+
+def partition_entry_renamed(pe: dict, rename=None) -> dict:
+    """A manifest partition entry with file basenames mapped through
+    ``rename`` (no-op when None/empty)."""
+    if not rename:
+        return pe
+    out = dict(pe)
+    out["tables"] = [rename.get(n, n) for n in pe["tables"]]
+    if pe.get("remix"):
+        out["remix"] = rename.get(pe["remix"], pe["remix"])
+    out["excised"] = [
+        {**se, "tables": [rename.get(n, n) for n in se.get("tables", [])]}
+        for se in pe.get("excised", [])
+    ]
+    return out
+
+
 class RemixDB:
     def __init__(self, config: RemixDBConfig | None = None):
         self.cfg = config or RemixDBConfig()
@@ -478,7 +518,6 @@ class RemixDB:
     def _recover(self, state: dict) -> None:
         """Rebuild partitions/WAL/MemTable from a committed manifest."""
         from repro.io.manifest import live_files
-        from repro.io.remix_io import load_remix
 
         if int(state.get("vw", self.cfg.vw)) != self.cfg.vw:
             raise ValueError(
@@ -495,47 +534,9 @@ class RemixDB:
         d_disk = int(state.get("d", self.cfg.d))
         if d_disk != self.cfg.d:
             self.cfg = dataclasses.replace(self.cfg, d=d_disk)
-        parts: list[Partition] = []
-        for pe in state["partitions"]:
-            tables = []
-            for nm in pe["tables"]:
-                t = Table.from_file(
-                    self.storage.table_path(nm),
-                    cache_mode=self.cfg.cache_mode,
-                    ckb_decode=self.cfg.ckb_decode,
-                )
-                t.attach_cache(self.block_cache)
-                t.attach_io(self.io)
-                tables.append(t)
-            p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
-            by_name = dict(zip(pe["tables"], tables))
-            for se in pe.get("excised", []):
-                span_tabs = tuple(
-                    by_name[nm] for nm in se["tables"] if nm in by_name
-                )
-                if span_tabs:
-                    p.excised.append(ExcisedSpan(
-                        int(se["lo"]), int(se["hi"]), int(se["seq"]),
-                        span_tabs,
-                    ))
-            if pe.get("remix"):
-                p.remix_name = pe["remix"]
-                try:
-                    p.preload_index(
-                        load_remix(self.storage.remix_path(pe["remix"]),
-                                   io=self.io)
-                    )
-                except CorruptionError as e:
-                    # a corrupt REMIX never blocks open: queries rebuild
-                    # the index from the (verified) tables, and the next
-                    # scrub() re-persists it from the CKBs
-                    self._c_corruption.inc()
-                    self.events.emit(
-                        "corruption", target="remix",
-                        file=os.path.basename(e.file),
-                        section=e.section, blocks=[], detail=e.detail,
-                    )
-            parts.append(p)
+        parts: list[Partition] = [
+            self._build_partition(pe) for pe in state["partitions"]
+        ]
         # degraded spans (quarantined tables) survive restarts
         self._unavailable = [dict(s) for s in state.get("unavailable", [])]
         if not parts:
@@ -552,6 +553,52 @@ class RemixDB:
         self.events.emit("recover", partitions=len(parts),
                          memtable=len(self.mem))
 
+    def _build_partition(self, pe: dict) -> Partition:
+        """One Partition (table handles + excised spans + preloaded
+        REMIX) from its manifest entry — shared by recovery, replica
+        catch-up adoption, and shard absorption."""
+        from repro.io.remix_io import load_remix
+
+        tables = []
+        for nm in pe["tables"]:
+            t = Table.from_file(
+                self.storage.table_path(nm),
+                cache_mode=self.cfg.cache_mode,
+                ckb_decode=self.cfg.ckb_decode,
+            )
+            t.attach_cache(self.block_cache)
+            t.attach_io(self.io)
+            tables.append(t)
+        p = Partition(lo=int(pe["lo"]), tables=tables, d=self.cfg.d)
+        by_name = dict(zip(pe["tables"], tables))
+        for se in pe.get("excised", []):
+            span_tabs = tuple(
+                by_name[nm] for nm in se["tables"] if nm in by_name
+            )
+            if span_tabs:
+                p.excised.append(ExcisedSpan(
+                    int(se["lo"]), int(se["hi"]), int(se["seq"]),
+                    span_tabs,
+                ))
+        if pe.get("remix"):
+            p.remix_name = pe["remix"]
+            try:
+                p.preload_index(
+                    load_remix(self.storage.remix_path(pe["remix"]),
+                               io=self.io)
+                )
+            except CorruptionError as e:
+                # a corrupt REMIX never blocks open: queries rebuild
+                # the index from the (verified) tables, and the next
+                # scrub() re-persists it from the CKBs
+                self._c_corruption.inc()
+                self.events.emit(
+                    "corruption", target="remix",
+                    file=os.path.basename(e.file),
+                    section=e.section, blocks=[], detail=e.detail,
+                )
+        return p
+
     def _replay_wal(self) -> None:
         """Rebuild the MemTable from the WAL's live log; advance seq past
         every replayed record and the WAL's durable sequence horizon."""
@@ -567,25 +614,7 @@ class RemixDB:
             seq=int(self.seq),
             vw=self.cfg.vw,
             d=self.cfg.d,
-            partitions=[
-                dict(
-                    lo=p.lo,
-                    tables=[os.path.basename(t.path) for t in p.tables],
-                    remix=p.remix_name,
-                    excised=[
-                        dict(
-                            lo=s.lo, hi=s.hi, seq=s.seq,
-                            tables=[
-                                os.path.basename(t.path)
-                                for t in s.tables
-                                if t.path is not None
-                            ],
-                        )
-                        for s in p.excised
-                    ],
-                )
-                for p in parts
-            ],
+            partitions=[partition_entry(p) for p in parts],
             wal=self.wal.save_state(),
             unavailable=[dict(s) for s in self._unavailable],
         )
@@ -1230,21 +1259,191 @@ class RemixDB:
                          duration_s=round(dt, 6))
         return stats
 
+    # ---------------- replication / cluster ----------------
+    def replication_snapshot(self, from_seq: int = 0,
+                             version: int | None = None):
+        """Atomically capture what a follower needs to catch up:
+        ``(manifest state, live WAL records after from_seq, committed
+        manifest version)``.
+
+        When ``version`` matches the committed manifest version the
+        state is returned as ``None`` and the records are the WAL tail
+        past ``from_seq`` (the cheap steady-state path); otherwise the
+        full committed state plus *all* live records are returned so the
+        follower can adopt the new file set and rebuild its overlay.
+        The write lock serializes against concurrent appends, WAL GC,
+        and flush commits, so state and records are always consistent
+        with each other.
+        """
+        if self.storage is None:
+            raise RuntimeError("replication needs a persistent store "
+                               "(data_dir)")
+        with self._write_lock:
+            cur = self.storage.manifest.current_version()
+            if version is not None and int(version) == cur:
+                return None, list(self.wal.read_from(from_seq)), cur
+            return self.storage.load_state(), \
+                list(self.wal.read_from(0)), cur
+
+    def apply_replication(self, records, advance_to: int | None = None
+                          ) -> int:
+        """Apply WAL-shaped records ``(key, seq, flags, exp, val)`` from
+        a primary into the MemTable, oldest first — no local WAL append
+        (the primary's log is the durability root; a follower restart
+        re-ships or re-catches-up). Records at or below the local seq
+        horizon are skipped. ``advance_to`` bumps the horizon past
+        records a span-restricted follower clipped away, so the next
+        tail read does not re-fetch them. Returns the number applied."""
+        n = 0
+        with self._write_lock, self._state_lock:
+            for k, s, fl, e, v in sorted(records, key=lambda r: int(r[1])):
+                s = int(s)
+                if s < self.seq:
+                    continue
+                if fl & FLAG_RANGE:
+                    self.mem.delete_range(int(k), unpack_range_hi(v), s)
+                else:
+                    self.mem.put(int(k), v, s,
+                                 tomb=bool(fl & FLAG_TOMB), exp=int(e))
+                self.seq = s + 1
+                n += 1
+            if advance_to is not None:
+                self.seq = max(self.seq, int(advance_to))
+        return n
+
+    def adopt_version(self, state: dict, records,
+                      advance_to: int | None = None) -> None:
+        """Replica catch-up across a primary flush: adopt a newer
+        committed manifest ``state`` (files already fetched into this
+        store's directory) and rebuild the overlay from the primary's
+        live WAL ``records`` — together they are exactly the state the
+        primary itself would recover to. Readers swap atomically from
+        the old Version + overlay to the new pair; pinned snapshots keep
+        the old one until they unpin."""
+        if int(state.get("vw", self.cfg.vw)) != self.cfg.vw:
+            raise ValueError("adopt_version: vw mismatch")
+        parts = [self._build_partition(pe) for pe in state["partitions"]]
+        if not parts:
+            parts = [Partition(lo=0, d=self.cfg.d)]
+        mem = MemTable(vw=self.cfg.vw)
+        seq = int(state.get("seq", 1))
+        for k, s, fl, e, v in sorted(records, key=lambda r: int(r[1])):
+            if fl & FLAG_RANGE:
+                mem.delete_range(int(k), unpack_range_hi(v), int(s))
+            else:
+                mem.put(int(k), v, int(s),
+                        tomb=bool(fl & FLAG_TOMB), exp=int(e))
+            seq = max(seq, int(s) + 1)
+        if advance_to is not None:
+            seq = max(seq, int(advance_to))
+        with self._state_lock:
+            self.seq = max(self.seq, seq)
+            self.mem = mem
+            self._unavailable = [
+                dict(s) for s in state.get("unavailable", [])
+            ]
+            self.versions.publish(
+                sorted(parts, key=lambda p: p.lo), seq_horizon=self.seq
+            )
+
+    def absorb_shard(self, lo: int, hi: int, state: dict, records,
+                     rename=None) -> dict:
+        """Merge a retired right-neighbor shard's key span [lo, hi) into
+        this store (the live half of a shard merge; the neighbor's files
+        were already copied into this directory, under ``rename`` when
+        basenames collided).
+
+        Under the flush + write locks: purge this store's stale entries
+        in the span (leftovers from a past split — the absorbed shard
+        owns the authoritative copy), GC the WAL down to the surviving
+        overlay, append the neighbor's live records (their original
+        seqs; ranges are disjoint so cross-store seq collisions never
+        compare on the same key), adopt its partitions, and commit one
+        manifest covering the union.
+        """
+        if self.storage is None:
+            raise RuntimeError("absorb_shard needs a persistent store")
+        with self._flush_lock:
+            with self._write_lock:
+                recs = sorted(records, key=lambda r: int(r[1]))
+                with self._state_lock:
+                    self.mem.purge_range(lo, hi)
+                    live_keys = set(self.mem.data.keys())
+                    live_range_seqs = {s for _, _, s in self.mem.ranges}
+                # stale WAL records in the span must not resurface on
+                # recovery: rebuild the virtual log around the purge
+                self.wal.gc(live_keys, defer_free=True,
+                            live_range_seqs=live_range_seqs)
+                for k, s, fl, e, v in recs:
+                    self.wal.append(int(k), int(s), False, v, exp=int(e),
+                                    flags=int(fl))
+                self.wal.sync()
+                # adopt the neighbor's partitions, clamping lows into the
+                # span: a store opened fresh labels its first partition
+                # lo=0 even when serving [lo, hi) — its rows are still in
+                # span (cluster routing), only the label moves. Partitions
+                # at/above ``hi`` are stale leftovers of a split the
+                # neighbor itself underwent: skipped, their data lives in
+                # the shard beyond ``hi``.
+                new_parts = []
+                for pe in state["partitions"]:
+                    if int(pe["lo"]) >= hi:
+                        continue
+                    pe2 = dict(partition_entry_renamed(pe, rename))
+                    pe2["lo"] = max(int(pe2["lo"]), lo)
+                    new_parts.append(self._build_partition(pe2))
+                with self._state_lock:
+                    cur = self.versions.current.partitions
+                    parts = sorted(
+                        [p for p in cur if not (lo <= p.lo < hi)]
+                        + new_parts,
+                        key=lambda p: p.lo,
+                    )
+                    for k, s, fl, e, v in recs:
+                        if fl & FLAG_RANGE:
+                            self.mem.delete_range(
+                                int(k), unpack_range_hi(v), int(s)
+                            )
+                        else:
+                            self.mem.put(int(k), v, int(s),
+                                         tomb=bool(fl & FLAG_TOMB),
+                                         exp=int(e))
+                        self.seq = max(self.seq, int(s) + 1)
+                    self.seq = max(self.seq, int(state.get("seq", 1)))
+                    for s in state.get("unavailable", []):
+                        se = dict(s)
+                        l2, h2 = max(int(se["lo"]), lo), min(int(se["hi"]), hi)
+                        if l2 < h2:
+                            se["lo"], se["hi"] = l2, h2
+                            self._unavailable.append(se)
+                self._commit(parts)
+            self.wal.release_quarantine()
+            with self._state_lock:
+                self.versions.publish(parts, seq_horizon=self.seq)
+        self._gc_files()
+        self.events.emit("shard_absorb", lo=lo, hi=min(hi, 2**64 - 1),
+                         partitions=len(new_parts), records=len(recs))
+        return dict(partitions=len(new_parts), records=len(recs))
+
     # ---------------- snapshots / cursors ----------------
     def snapshot(self) -> Snapshot:
         """A pinned, point-in-time view of the whole store: the current
         Version plus a frozen MemTable overlay. Reads through it are
         immune to concurrent flushes; close it (or use ``with``) to let
         retired versions free their tables/files. The public MVCC
-        handle (§4.2's "old version remains servable")."""
+        handle (§4.2's "old version remains servable").
+
+        O(1): the overlay is a frozen layered view
+        (``MemTable.snapshot_view``), not a dict copy — snapshotting a
+        full MemTable costs the same as an empty one."""
         with self._state_lock:
             v = self.versions.pin_current()
-            src = (
+            overlay = (
                 self._flush_overlay
                 if self._flush_overlay is not None
-                else self.mem.data
+                else self.mem.snapshot_view()
             )
-            return Snapshot(self, v, dict(src), seq=self.seq, pinned=True,
+            return Snapshot(self, v, overlay, seq=self.seq, pinned=True,
                             ranges=self._live_ranges())
 
     @contextlib.contextmanager

@@ -82,6 +82,10 @@ class BlockMap:
     epoch: int  # expected 1-bit value (paper: inverted for unwritten blocks)
     written: bool  # False => 'unwritten' placeholder slot
     bitmap: int  # validity bitmap over records (bit i = record i live)
+    # highest live seq in the block, None when unknown (e.g. restored
+    # from an old checkpoint) — lets read_from() skip whole blocks at or
+    # below a replication checkpoint without reading them
+    max_seq: int | None = None
 
 
 class VirtualLog:
@@ -222,7 +226,8 @@ class WAL:
         self._c_blocks_flushed.inc()
         self.vlog.blocks.append(
             BlockMap(phys=phys, epoch=epoch, written=True,
-                     bitmap=(1 << n) - 1)
+                     bitmap=(1 << n) - 1,
+                     max_seq=max(int(s) for _, s, _, _, _ in recs))
         )
 
     def _fsync(self):
@@ -305,6 +310,40 @@ class WAL:
                 if bm.bitmap >> i & 1:
                     yield rec
 
+    def read_from(self, seq: int):
+        """Tail-follow: yield live records with sequence > ``seq``.
+
+        The replication catch-up primitive — a follower that has applied
+        everything up to a checkpoint ``seq`` replays only what came
+        after. Blocks whose tracked ``max_seq`` is at or below the floor
+        are skipped without touching disk (no full-epoch rescan); blocks
+        restored from an old checkpoint have an unknown ``max_seq`` and
+        are read once, after which the bound is cached on the mapping
+        entry. Callers must serialize against gc() (the store's write
+        lock does this — see ``RemixDB.replication_snapshot``).
+        """
+        self.sync()
+        floor = int(seq)
+        for bm in self.vlog.blocks:
+            if not bm.written:
+                continue
+            if bm.max_seq is not None and bm.max_seq <= floor:
+                continue
+            epoch, recs = self._read_block(bm.phys)
+            if epoch != bm.epoch:
+                continue
+            if bm.max_seq is None:
+                live_seqs = [
+                    int(s) for i, (_, s, _, _, _) in enumerate(recs)
+                    if bm.bitmap >> i & 1
+                ]
+                bm.max_seq = max(live_seqs, default=0)
+                if bm.max_seq <= floor:
+                    continue
+            for i, rec in enumerate(recs):
+                if bm.bitmap >> i & 1 and int(rec[1]) > floor:
+                    yield rec
+
     # ---------- garbage collection ----------
     def gc(self, live_keys: set[int], defer_free: bool = False,
            live_range_seqs: set[int] | None = None):
@@ -350,7 +389,8 @@ class WAL:
                     bitmap |= 1 << i
                 new.blocks.append(
                     BlockMap(phys=bm.phys, epoch=bm.epoch, written=True,
-                             bitmap=bitmap)
+                             bitmap=bitmap,
+                             max_seq=max(int(recs[i][1]) for i in live))
                 )
             else:
                 for i in live:
@@ -391,7 +431,8 @@ class WAL:
             free=sorted(self.free + self.quarantine),
             epoch=[[k, v] for k, v in sorted(self.epoch_bits.items())],
             blocks=[
-                [b.phys, b.epoch, int(b.written), b.bitmap]
+                [b.phys, b.epoch, int(b.written), b.bitmap,
+                 -1 if b.max_seq is None else b.max_seq]
                 for b in self.vlog.blocks
             ],
         )
@@ -400,8 +441,11 @@ class WAL:
         """Adopt a checkpointed mapping table (inverse of save_state)."""
         self.vlog = VirtualLog(timestamp=int(state["timestamp"]))
         self.vlog.blocks = [
-            BlockMap(phys=p, epoch=e, written=bool(w), bitmap=bm)
-            for p, e, w, bm in state["blocks"]
+            BlockMap(phys=b[0], epoch=b[1], written=bool(b[2]), bitmap=b[3],
+                     # 5th element (max seq, -1 = unknown) is absent in
+                     # checkpoints written before tail-follow existed
+                     max_seq=(None if len(b) < 5 or b[4] < 0 else int(b[4])))
+            for b in state["blocks"]
         ]
         self.next_phys = int(state["next_phys"])
         self.max_seq = int(state.get("max_seq", 0))
@@ -435,7 +479,8 @@ class WAL:
             self.next_phys = max(self.next_phys, phys + 1)
             self.vlog.blocks.append(
                 BlockMap(phys=phys, epoch=epoch, written=True,
-                         bitmap=(1 << len(recs)) - 1)
+                         bitmap=(1 << len(recs)) - 1,
+                         max_seq=max(int(s) for _, s, _, _, _ in recs))
             )
             adopted += 1
         return adopted

@@ -156,20 +156,32 @@ class KVServeEngine:
         self.registry = MetricsRegistry(enabled=metrics)
         self.events = EventLog() if metrics else NULL_EVENTS
         self.cache = BlockCache(cache_bytes, registry=self.registry)
-        self.lows: list[int] = []
-        self.shards: list[RemixDB] = []
+        self._config = config
+        self._metrics_on = metrics
+        self._max_inflight_bytes = max_inflight_bytes
+        self._submit_workers = submit_workers
+        self._trace_sample_rate = trace_sample_rate
+        self.lows, self.shards = self._prepare_shards(shards)
+        self.engine = self._build_engine()
+
+    def _prepare_shards(self, shards):
+        """Open/adopt ``(lo, dir-or-store)`` pairs onto the shared cache."""
+        from repro.db.store import RemixDB, RemixDBConfig
+
+        lows: list[int] = []
+        out: list[RemixDB] = []
         for lo, db in sorted(shards, key=lambda s: s[0]):
             if not isinstance(db, RemixDB):
-                cfg0 = config or RemixDBConfig()
+                cfg0 = self._config or RemixDBConfig()
                 cfg = dataclasses.replace(
                     cfg0,
                     data_dir=str(db),
                     block_cache=self.cache,
-                    metrics=cfg0.metrics and metrics,
-                    trace_sample_rate=trace_sample_rate,
+                    metrics=cfg0.metrics and self._metrics_on,
+                    trace_sample_rate=self._trace_sample_rate,
                 )
                 db = RemixDB(cfg)
-            elif db.storage is not None:
+            elif db.storage is not None and db.block_cache is not self.cache:
                 # adopt a pre-opened store into the shared pool: swap its
                 # private cache out of every table handle (already-cached
                 # blocks stay in the old pool and simply age out)
@@ -177,16 +189,39 @@ class KVServeEngine:
                 for p in db.partitions:
                     for t in p.tables:
                         t.attach_cache(self.cache)
-            self.lows.append(int(lo))
-            self.shards.append(db)
-        self.engine = Executor(
+            lows.append(int(lo))
+            out.append(db)
+        return lows, out
+
+    def _build_engine(self):
+        from repro.db.executor import Executor
+
+        return Executor(
             list(zip(self.lows, self.shards)),
-            max_inflight_bytes=max_inflight_bytes,
-            workers=submit_workers,
+            max_inflight_bytes=self._max_inflight_bytes,
+            workers=self._submit_workers,
             registry=self.registry,
             events=self.events,
-            trace_sample_rate=trace_sample_rate,
+            trace_sample_rate=self._trace_sample_rate,
         )
+
+    def swap_shards(self, shards) -> None:
+        """Atomically install a new shard routing table — the cutover
+        step of a live shard split/merge. Builds a fresh Executor over
+        the new ``(lo, store-or-dir)`` list (same shared cache/registry;
+        the counters keep accumulating), swaps it in, then drains and
+        closes the old executor. Callers must quiesce submissions around
+        the swap (``cluster.Cluster`` gates them); in-flight batches on
+        the old executor finish normally — their stores stay open — so
+        no op ever fails from a swap."""
+        lows, stores = self._prepare_shards(shards)
+        old = self.engine
+        self.shards = stores
+        self.lows = lows
+        self.engine = self._build_engine()
+        old.close(wait=True)
+        self.events.emit("route_swap", shards=len(lows),
+                         lows=[str(lo) for lo in lows])
 
     def _route(self, key: int) -> "object":
         return self.shards[max(0, bisect.bisect_right(self.lows, key) - 1)]

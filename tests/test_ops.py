@@ -541,3 +541,67 @@ def test_delete_range_and_cas_op_kinds():
     assert not r.found and list(r.value.reshape(-1)) == [6, 6]
     with pytest.raises(ValueError):
         Op.delete_range(60, 10)
+
+
+# ------------------------------------------------------- write ordering
+def test_shard_sequencer_out_of_order_release():
+    """The ordering primitive itself: tickets advance strictly FIFO per
+    shard, and releases arriving out of order are parked until every
+    predecessor has finished."""
+    from repro.db.executor import ShardSequencer
+
+    sq = ShardSequencer(2)
+    t1 = sq.register([0])
+    t2 = sq.register([0, 1])
+    t3 = sq.register([0])
+    assert sq.register([]) is None  # read-only batches take no tickets
+
+    assert sq.await_turn(t1)
+    sq.release(t3)  # parked: t1/t2 still pending on shard 0
+    sq.release(t2)  # parked on shard 0, advances shard 1
+    unblocked = threading.Event()
+
+    def waiter():
+        assert sq.await_turn(sq.register([0, 1]))
+        unblocked.set()
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    assert not unblocked.wait(0.1)  # t1 still holds shard 0
+    sq.release(t1)  # drains the parked releases too
+    assert unblocked.wait(2.0)
+    th.join()
+
+
+def test_async_write_batches_apply_in_submission_order(tmp_path):
+    """Two+ racing async batches: per-shard write effects must land in
+    submission order, so the last-submitted put wins every key — even
+    with multiple submit workers draining the queue concurrently."""
+    from repro.serve.engine import KVServeEngine
+
+    eng = KVServeEngine(
+        [(0, str(tmp_path / "a")), (1 << 32, str(tmp_path / "b"))],
+        submit_workers=4,
+    )
+    try:
+        ka, kb = 5, (1 << 32) + 5
+        futs = []
+        rounds = 60
+        for i in range(rounds):
+            ks = np.array([ka, kb], np.uint64)
+            vs = np.full((2, 2), i, np.uint32)
+            futs.append(eng.submit(Batch([Op.put(ks, vs)])))
+            # interleave read-only batches: they take no tickets and
+            # must not perturb (or be blocked by) the write order
+            if i % 7 == 0:
+                futs.append(eng.submit(Batch([Op.multiget(ks)])))
+        for f in futs:
+            assert f.result(timeout=30).ok
+        for key in (ka, kb):
+            _, vals = eng.get_batch(np.array([key], np.uint64))
+            assert int(vals[0][0]) == rounds - 1, key
+        assert eng.registry.counter("engine_ordered_batches").value >= rounds
+    finally:
+        eng.close()
+        for db in eng.shards:
+            db.close()
